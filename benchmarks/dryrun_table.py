@@ -1,0 +1,38 @@
+"""Render the §Dry-run table (markdown) from dryrun.json.
+
+PYTHONPATH=src python -m benchmarks.dryrun_table [--mesh 16x16]
+"""
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--mesh", default=None, help="filter (default: both)")
+    args = ap.parse_args()
+    recs = json.load(open(args.dryrun))
+    recs = [r for r in recs if args.mesh is None or r["mesh"] == args.mesh]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | ok | GFLOPs/dev | peak GiB | "
+          "collectives (GB/dev) |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("ok"):
+            coll = r.get("rolled_collectives", {})
+            cstr = " ".join(f"{k.replace('all-', 'a').replace('collective-', 'c')}"
+                            f"={v / 1e9:.1f}" for k, v in sorted(coll.items())
+                            if v > 1e7) or "-"
+            peak = (r.get("memory") or {}).get("peak_bytes", 0) / 2 ** 30
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ✓ | "
+                  f"{r.get('rolled_flops', 0) / 1e9:.0f} | {peak:.1f} | "
+                  f"{cstr} |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ✗ "
+                  f"{r.get('error', '')[:40]} | | | |")
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    print(f"\n{n_ok}/{len(recs)} OK")
+
+
+if __name__ == "__main__":
+    main()

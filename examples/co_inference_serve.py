@@ -1,0 +1,54 @@
+"""End-to-end driver (deliverable b): serve a small model with batched
+requests through the J-DOB co-inference stack — scheduling + REAL model
+execution + verification, across several request waves with GPU-occupancy
+(t_free) chaining.
+
+PYTHONPATH=src python examples/co_inference_serve.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import (local_computing, make_edge_profile, make_fleet,
+                        profile_from_arch)
+from repro.models import init_params
+from repro.serving import BlockwiseExecutor, CoInferenceServer, Request
+
+ARCH = "qwen2-moe-a2.7b"          # MoE: the interesting batching case
+M, SEQ = 6, 32
+
+cfg = ARCHS[ARCH].reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+profile = profile_from_arch(cfg, seq=SEQ)
+edge = make_edge_profile(profile)
+fleet = make_fleet(M, profile, edge, beta=(2.0, 8.0), seed=0)
+server = CoInferenceServer(cfg, params, profile, fleet, edge)
+executor = BlockwiseExecutor(cfg, params)
+
+rng = np.random.default_rng(0)
+total, total_lc = 0.0, 0.0
+t_free = 0.0
+for wave in range(3):
+    reqs = [Request(user=m,
+                    tokens=rng.integers(0, cfg.vocab_size, SEQ,
+                                        dtype=np.int32),
+                    deadline=float(fleet.deadline[m]) + t_free)
+            for m in range(M)]
+    report = server.serve(reqs, t_free=t_free)
+    want = np.asarray(executor.full_forward(
+        jnp.asarray(np.stack([r.tokens for r in reqs]))))
+    err = float(np.abs(report.logits - want).max())
+    lc = local_computing(profile, fleet, edge).energy
+    total += report.energy
+    total_lc += lc
+    t_free = report.t_free_end
+    print(f"wave {wave}: groups={[list(g) for g in report.groups]} "
+          f"partitions={report.partitions} batches={report.batch_sizes} "
+          f"energy={report.energy:.4f} J (LC {lc:.4f}) "
+          f"gpu_busy_until={t_free * 1e3:.1f} ms  |Δlogit|={err:.1e}")
+    assert err < 1e-3
+
+print(f"\n3 waves served: {total:.4f} J vs {total_lc:.4f} J local "
+      f"({100 * (1 - total / total_lc):.1f}% energy saved), "
+      f"outputs verified exact")

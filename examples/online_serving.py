@@ -1,0 +1,32 @@
+"""Online co-inference (the paper's §V future work): requests arrive as a
+Poisson stream with NO arrival predictions; the slack-adaptive policy
+batches exactly as much as deadlines allow.
+
+PYTHONPATH=src python examples/online_serving.py
+"""
+from repro.core import (all_local_energy, make_edge_profile, make_fleet,
+                        mobilenet_v2_profile, oracle_bound, poisson_arrivals,
+                        simulate_online)
+
+profile = mobilenet_v2_profile()
+edge = make_edge_profile(profile)
+M = 12
+fleet = make_fleet(M, profile, edge, beta=20.0, seed=0)
+
+print(f"{'rate':>8s} {'LC':>8s} {'oracle':>8s} {'online(slack)':>13s} "
+      f"{'gap':>6s} {'max batch':>9s} {'flushes':>7s}")
+for rate in (10.0, 100.0, 1000.0):
+    arr = poisson_arrivals(M, rate, fleet, seed=1)
+    lc = all_local_energy(arr, profile, fleet, edge)
+    orc = oracle_bound(arr, profile, fleet, edge)
+    r = simulate_online(arr, profile, fleet, edge, policy="slack")
+    assert r.violations == 0
+    print(f"{rate:6.0f}/s {lc:8.4f} {orc:8.4f} {r.energy:13.4f} "
+          f"{100 * (r.energy / orc - 1):5.1f}% {max(r.batch_sizes):9d} "
+          f"{r.n_flushes:7d}")
+
+print("\nThe slack policy flushes a batch when waiting longer would erode "
+      "any queued request's remaining deadline budget below 70% — batching "
+      "emerges at high arrival rates, solo-offloading at low rates, "
+      "deadline violations are impossible by construction, and energy "
+      "stays within a few % of the clairvoyant oracle.")

@@ -1,0 +1,12 @@
+"""Train a small LM end to end on the synthetic pipeline (CPU-feasible
+scale; the same driver shards onto the production mesh on TPU).
+
+PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    out = main(["--arch", "glm4-9b", "--reduced", "--steps", "60",
+                "--seq", "128", "--batch", "8", "--d-model", "128",
+                "--lr", "5e-3"])
+    assert out["last_loss"] < out["first_loss"], "loss must decrease"

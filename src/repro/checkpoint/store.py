@@ -1,0 +1,59 @@
+"""Pytree <-> flat .npz checkpoint store.
+
+Keys encode the tree path (``seg0/elem1/wq``); restore validates structure
+against a template pytree so silent shape drift fails loudly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(e.key) if isinstance(e, jax.tree_util.DictKey)
+            else str(e.idx) for e in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, template: Any) -> Any:
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for tree_path, leaf in leaves:
+        key = "/".join(
+            str(e.key) if isinstance(e, jax.tree_util.DictKey)
+            else str(e.idx) for e in tree_path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def save_train_state(directory: str, step: int, params, opt_state) -> str:
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    save_pytree(path, dict(params=params, opt=opt_state))
+    return path
+
+
+def restore_train_state(path: str, params_template, opt_template):
+    tree = load_pytree(path, dict(params=params_template, opt=opt_template))
+    return tree["params"], tree["opt"]

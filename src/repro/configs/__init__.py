@@ -1,0 +1,24 @@
+"""Config registry: ``get_config(arch_id)`` / ``ARCHS`` / input shapes."""
+from .base import ArchConfig, LayerSpec
+from .shapes import SHAPES, InputShape, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K
+
+from . import (deepseek_67b, glm4_9b, internlm2_20b, llama32_vision_11b,
+               minitron_4b, musicgen_medium, phi35_moe_42b, qwen2_moe_a27b,
+               xlstm_13b, zamba2_7b)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (zamba2_7b, glm4_9b, deepseek_67b, minitron_4b,
+              llama32_vision_11b, phi35_moe_42b, musicgen_medium,
+              qwen2_moe_a27b, xlstm_13b, internlm2_20b)
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "LayerSpec", "ARCHS", "get_config", "SHAPES",
+           "InputShape", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K"]

@@ -1,0 +1,25 @@
+"""llama-3.2-vision-11b — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+Backbone only (spec carve-out): the ViT encoder + projector are stubbed;
+``input_specs()`` supplies precomputed patch embeddings for the cross-attn KV.
+"""
+from .base import ArchConfig, LayerSpec
+
+_S = LayerSpec("attn", "dense")
+_X = LayerSpec("cross", "dense")
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    # 8 cross-attention layers interleaved every 5th (matches the model card)
+    plan=(((_S, _S, _S, _S, _X), 8),),
+    num_vision_tokens=1024,
+)

@@ -1,0 +1,15 @@
+"""minitron-4b — pruned nemotron, GQA kv=8 [arXiv:2407.14679]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minitron-4b",
+    family="dense",
+    source="arXiv:2407.14679",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=9216,
+    vocab_size=256000,
+    gated_mlp=False,      # nemotron uses squared-relu MLP (2-matrix)
+)

@@ -1,0 +1,20 @@
+"""musicgen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+Backbone only (spec carve-out): the EnCodec conv codec is the modality
+frontend; the decoder consumes its token streams (vocab 2048) directly.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    source="arXiv:2306.05284",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    gated_mlp=False,       # musicgen uses GeLU MLP
+    rope_theta=1e4,
+)

@@ -1,0 +1,19 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+from .base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    plan=(((LayerSpec("attn", "moe"),), 24),),
+    moe_experts=60,
+    moe_top_k=4,
+    moe_shared_experts=4,
+    moe_d_ff=1408,
+)

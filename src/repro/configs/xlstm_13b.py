@@ -1,0 +1,22 @@
+"""xlstm-1.3b — sLSTM + mLSTM blocks [arXiv:2405.04517]."""
+from .base import ArchConfig, LayerSpec
+
+_M = LayerSpec("mlstm", "none")
+_S = LayerSpec("slstm", "none")
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    source="arXiv:2405.04517",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,                 # xLSTM blocks carry their own up/down projections
+    vocab_size=50304,
+    # the paper's 7:1 mLSTM:sLSTM ratio
+    plan=(((_M, _M, _M, _M, _M, _M, _M, _S), 6),),
+    ssm_state=64,           # per-head qk dim proxy for the matrix memory
+    ssm_expand=2,
+    ssm_head_dim=512,       # d_inner / num_heads = 4096/4... set via expand
+)

@@ -1,0 +1,127 @@
+"""Benchmark strategies from the paper's §IV.
+
+* LC — local computing with per-device optimal DVFS.
+* IP-SSA — Independent Partitioning + Same Sub-task Aggregating, the
+  heuristic of [10] (Shi et al., TWC'22).  Faithful to its two stated
+  assumptions: size-independent batch processing time and a common
+  deadline.  Each user independently picks the partition point that
+  minimizes its own energy under its own latency constraint (edge pinned at
+  f_e,max); the edge then aggregates identical sub-tasks into batches.
+* J-DOB w/o edge DVFS and J-DOB binary — restrictions of J-DOB, built by
+  calling :func:`jdob_schedule` with a pinned sweep / partition set.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .cost_models import DeviceFleet, EdgeProfile
+from .jdob import Schedule, jdob_schedule
+from .task_model import TaskProfile
+
+
+def local_computing(profile: TaskProfile, fleet: DeviceFleet,
+                    edge: EdgeProfile, t_free: float = 0.0,
+                    rho: float = 0.03e9) -> Schedule:
+    vN, uN = profile.v()[-1], profile.u()[-1]
+    f = np.clip(fleet.zeta * vN / fleet.deadline, fleet.f_min, fleet.f_max)
+    eu = fleet.kappa * uN * f ** 2
+    return Schedule(True, float(eu.sum()), profile.N, float(edge.f_max),
+                    np.zeros(fleet.M, bool), f, t_free,
+                    dict(device=float(eu.sum()), uplink=0.0, edge=0.0), eu)
+
+
+def jdob_no_edge_dvfs(profile, fleet, edge, t_free=0.0, rho=0.03e9):
+    return jdob_schedule(profile, fleet, edge, t_free, rho, edge_dvfs=False)
+
+
+def jdob_binary(profile, fleet, edge, t_free=0.0, rho=0.03e9):
+    return jdob_schedule(profile, fleet, edge, t_free, rho,
+                         partitions=[0, profile.N])
+
+
+def jdob_plus(profile, fleet, edge, t_free=0.0, rho=0.03e9):
+    """Beyond-paper portfolio: J-DOB under three user orderings — the
+    paper's γ (latency cost), budget T_m − γ_m (heterogeneous deadlines),
+    and local-energy (κ/ζ-heterogeneous fleets, where the paper's ordering
+    is energy-blind).  Same asymptotic cost (3 sweeps), never worse than
+    faithful J-DOB."""
+    best = None
+    for key in ("gamma", "budget", "energy"):
+        s = jdob_schedule(profile, fleet, edge, t_free, rho, sort_key=key)
+        if best is None or s.energy < best.energy:
+            best = s
+    return best
+
+
+def ip_ssa(profile: TaskProfile, fleet: DeviceFleet, edge: EdgeProfile,
+           t_free: float = 0.0, rho: float = 0.03e9) -> Schedule:
+    """IP-SSA of [10] adapted to our cost model (see module docstring).
+
+    Size-independent batch time assumption: the edge time for block n is
+    taken at the worst case b = M (so feasibility never breaks when batches
+    aggregate).  Edge frequency fixed at f_e,max; device DVFS optimal given
+    the resulting slack.
+    """
+    M, N = fleet.M, profile.N
+    v, u, O = profile.v(), profile.u(), profile.O
+    f_em = edge.f_max
+    phi_b, phi_s = edge.phi_coeffs(profile)
+    psi_b, psi_s = edge.psi_coeffs(profile)
+    suffix_time_M = (phi_b + phi_s * M) / f_em      # (N+1,) size-indep bound
+
+    f_dev = np.zeros(M)
+    e_user = np.zeros(M)
+    nt_m = np.full(M, N, dtype=int)
+    for m in range(M):
+        best_e, best = np.inf, None
+        for nt in range(N + 1):
+            up_t = O[nt] / fleet.rate[m] if nt < N else 0.0
+            edge_t = suffix_time_M[nt] if nt < N else 0.0
+            slack = fleet.deadline[m] - up_t - edge_t - t_free * (nt < N)
+            if slack <= 0:
+                continue
+            gam = fleet.zeta[m] * v[nt] / slack if v[nt] > 0 else fleet.f_min[m]
+            if gam > fleet.f_max[m] * (1 + 1e-9):
+                continue
+            f = np.clip(gam, fleet.f_min[m], fleet.f_max[m])
+            e = fleet.kappa[m] * u[nt] * f ** 2
+            if nt < N:
+                e += up_t * fleet.p_up[m]
+            if e < best_e:
+                best_e, best = e, (nt, f)
+        assert best is not None, "local computing must be feasible"
+        nt_m[m] = best[0]
+        f_dev[m] = best[1]
+        e_user[m] = best_e
+
+    # Same sub-task aggregating: block n runs once with batch of everyone
+    # whose partition point precedes it.
+    batch_n = np.array([(nt_m < n).sum() for n in range(N + 1)])
+    edge_e = float(sum((edge.eps0[n] + edge.eps1[n] * batch_n[n])
+                       * profile.A[n] * f_em ** 2
+                       for n in range(1, N + 1) if batch_n[n] > 0))
+    off = nt_m < N
+    t_end = t_free
+    if off.any():
+        up_done = np.where(off, fleet.zeta * v[nt_m] / f_dev
+                           + O[nt_m] / fleet.rate, -np.inf)
+        edge_time = float(sum((edge.delta0[n] + edge.delta1[n] * batch_n[n])
+                              * profile.A[n] / f_em
+                              for n in range(1, N + 1) if batch_n[n] > 0))
+        t_end = max(t_free, up_done.max()) + edge_time
+    total = float(e_user.sum() + edge_e)
+    up = float(sum(O[nt_m[m]] / fleet.rate[m] * fleet.p_up[m]
+                   for m in range(M) if off[m]))
+    return Schedule(True, total, int(np.min(nt_m)), f_em, off, f_dev,
+                    t_end, dict(device=total - up - edge_e, uplink=up,
+                                edge=edge_e), e_user)
+
+
+STRATEGIES = {
+    "LC": local_computing,
+    "IP-SSA": ip_ssa,
+    "J-DOB": jdob_schedule,
+    "J-DOB-noEdgeDVFS": jdob_no_edge_dvfs,
+    "J-DOB-binary": jdob_binary,
+    "J-DOB+": jdob_plus,
+}

@@ -1,0 +1,81 @@
+"""Exact solver for (P1) by exhaustive enumeration — small M only.
+
+Enumerates every offloading set M'_o (2^M) × partition point ñ × a fine
+edge-frequency grid; device frequencies come from the closed form (Eq. 20).
+Used by the tests to measure J-DOB's optimality gap (the paper claims
+near-optimality of the identical-offloading + greedy-batching restriction).
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from .cost_models import DeviceFleet, EdgeProfile
+from .jdob import Schedule, make_f_sweep
+from .task_model import TaskProfile
+
+
+def brute_force(profile: TaskProfile, fleet: DeviceFleet, edge: EdgeProfile,
+                t_free: float = 0.0, n_freq: int = 2048) -> Schedule:
+    M, N = fleet.M, profile.N
+    assert M <= 12, "exponential solver"
+    v, u, O = profile.v(), profile.u(), profile.O
+    phi_b, phi_s = edge.phi_coeffs(profile)
+    psi_b, psi_s = edge.psi_coeffs(profile)
+    # union of a fine grid and J-DOB's exact ρ-sweep grid, so the exhaustive
+    # optimum is a true lower bound for J-DOB (same frequency quantization)
+    f_grid = np.union1d(np.linspace(edge.f_max, edge.f_min, n_freq),
+                        make_f_sweep(edge))[::-1]
+
+    f_loc = np.clip(fleet.zeta * v[-1] / fleet.deadline,
+                    fleet.f_min, fleet.f_max)
+    e_loc = fleet.kappa * u[-1] * f_loc ** 2
+
+    best = dict(E=e_loc.sum(), nt=N, fe=edge.f_max,
+                off=np.zeros(M, bool), fdev=f_loc.copy(), tend=t_free,
+                eu=e_loc.copy())
+
+    for nt in range(N):
+        for r in range(1, M + 1):
+            for combo in itertools.combinations(range(M), r):
+                idx = np.array(combo)
+                B = len(idx)
+                l_o = fleet.deadline[idx].min()
+                phi = phi_b[nt] + phi_s[nt] * B
+                psi = psi_b[nt] + psi_s[nt] * B
+                if l_o <= t_free:
+                    continue
+                fe_lo = phi / (l_o - t_free)
+                for f_e in f_grid:
+                    if f_e < fe_lo:
+                        break
+                    slack = l_o - O[nt] / fleet.rate[idx] - phi / f_e
+                    if np.any(slack <= 0):
+                        continue
+                    gam = fleet.zeta[idx] * v[nt] / slack
+                    if np.any(gam > fleet.f_max[idx] * (1 + 1e-9)):
+                        continue
+                    fdev = f_loc.copy()
+                    fdev[idx] = np.clip(gam, fleet.f_min[idx],
+                                        fleet.f_max[idx])
+                    eu = e_loc.copy()
+                    eu[idx] = (fleet.kappa[idx] * u[nt] * fdev[idx] ** 2
+                               + O[nt] / fleet.rate[idx] * fleet.p_up[idx])
+                    E = eu.sum() + psi * f_e ** 2
+                    if E < best["E"]:
+                        off = np.zeros(M, bool)
+                        off[idx] = True
+                        t_up = (fleet.zeta[idx] * v[nt] / fdev[idx]
+                                + O[nt] / fleet.rate[idx]).max()
+                        best = dict(E=E, nt=nt, fe=f_e, off=off, fdev=fdev,
+                                    tend=max(t_free, t_up) + phi / f_e, eu=eu)
+
+    off = best["off"]
+    up = float((O[best["nt"]] / fleet.rate * fleet.p_up)[off].sum())
+    edge_e = float((psi_b[best["nt"]] + psi_s[best["nt"]] * off.sum())
+                   * best["fe"] ** 2) if off.any() else 0.0
+    return Schedule(True, float(best["E"]), int(best["nt"]),
+                    float(best["fe"]), off, best["fdev"], float(best["tend"]),
+                    dict(device=float(best["E"]) - up - edge_e, uplink=up,
+                         edge=edge_e), best["eu"])

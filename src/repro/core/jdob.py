@@ -1,0 +1,239 @@
+"""J-DOB: Joint DVFS, Offloading and Batching (paper Alg. 1 + Alg. 2).
+
+Two implementations:
+
+* :func:`jdob_schedule` — the production path: fully vectorized JAX. The
+  paper's outer loop over partition points ñ (Alg. 1 line 3) is a ``vmap``;
+  the edge-frequency sweep (Alg. 2 lines 6-24) is a dense (ñ × k × M)
+  tensor evaluation.  The paper's monotone-pointer update of the greedy
+  batching set (Alg. 2 lines 7-12) becomes a ``searchsorted``-style
+  first-true-index over the non-increasing threshold sequence — same
+  semantics, O(1) depth.
+* :mod:`repro.core.reference` holds ``jdob_reference`` — a line-by-line
+  loop transcription of the pseudocode used as the test oracle.
+
+Internally everything is scaled to (GHz, seconds, J) so the math is well
+conditioned in float32; public inputs/outputs stay SI (Hz).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cost_models import DeviceFleet, EdgeProfile
+from .task_model import TaskProfile
+
+_GHZ = 1e9
+_INF = jnp.inf
+
+
+@dataclasses.dataclass
+class Schedule:
+    """One group's co-inference strategy 𝒳 = (M'_o, ñ, {f_m}, f_e)."""
+
+    feasible: bool
+    energy: float                 # total J (device + uplink + edge)
+    partition: int                # ñ: offload after block ñ (ñ=N ⇒ all local)
+    f_edge: float                 # Hz
+    offload: np.ndarray           # (M,) bool
+    f_device: np.ndarray          # (M,) Hz
+    t_free_end: float             # Eq. 22: when the GPU frees up
+    terms: dict                   # energy breakdown
+    per_user_energy: np.ndarray   # (M,)
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.offload.sum())
+
+
+def _prep(profile: TaskProfile, fleet: DeviceFleet, edge: EdgeProfile):
+    """Pre-scale all constants to (GHz, s, J) jnp arrays."""
+    v = profile.v() / _GHZ          # Gcycles/ζ  (multiply by ζ later)
+    u = profile.u()
+    phi_b, phi_s = edge.phi_coeffs(profile)
+    psi_b, psi_s = edge.psi_coeffs(profile)
+    return dict(
+        v=jnp.asarray(v), u=jnp.asarray(u),
+        o_up=jnp.asarray(profile.O),                       # bytes
+        phi_b=jnp.asarray(phi_b / _GHZ), phi_s=jnp.asarray(phi_s / _GHZ),
+        psi_b=jnp.asarray(psi_b * _GHZ ** 2), psi_s=jnp.asarray(psi_s * _GHZ ** 2),
+        zeta=jnp.asarray(fleet.zeta),
+        ku=jnp.asarray(fleet.kappa * _GHZ ** 2),           # J/(cycle·GHz²)·…
+        fm_min=jnp.asarray(fleet.f_min / _GHZ),
+        fm_max=jnp.asarray(fleet.f_max / _GHZ),
+        rate=jnp.asarray(fleet.rate), p_up=jnp.asarray(fleet.p_up),
+        T=jnp.asarray(fleet.deadline),
+    )
+
+
+def _local_opt(c):
+    """Per-user optimal all-local DVFS (Eq. 20 local branch): f, energy."""
+    gamma_loc = c["zeta"] * c["v"][-1] / c["T"]
+    f_loc = jnp.clip(gamma_loc, c["fm_min"], c["fm_max"])
+    e_loc = c["ku"] * c["u"][-1] * f_loc ** 2
+    return f_loc, e_loc
+
+
+@functools.partial(jax.jit, static_argnames=("n_partitions", "sort_key"))
+def _jdob_grid(c, f_sweep, t_free, n_partitions: int, sort_key: str = "gamma"):
+    """Dense evaluation of Alg. 1+2 over (ñ, f_e).  Returns the full grid of
+    energies (ñ, k) plus everything needed to reconstruct the argmin
+    strategy.  ñ = n_partitions-1 (== N) rows are masked: that is the
+    all-local strategy, handled in closed form by the caller."""
+    M = c["T"].shape[0]
+    f_loc, e_loc = _local_opt(c)
+    idx_n = jnp.arange(n_partitions)
+    # NOTE: membership under non-γ orderings is re-validated per candidate
+    # (dev_ok / gpu_ok below), so non-monotone threshold sequences remain
+    # safe — infeasible (ñ, f_e) cells are masked to +inf, never selected.
+
+    def per_partition(nt):
+        # Alg.1 line 4: minimum latency cost γ_m^(ñ)  (Eq. 17)
+        gamma = c["o_up"][nt] / c["rate"] + c["zeta"] * c["v"][nt] / c["fm_max"]
+        # Alg.1 line 5: sort descending by γ (paper), or one of the
+        # beyond-paper orderings (see EXPERIMENTS.md §Beyond-paper):
+        #   budget — ascending T_m − γ_m: exact when deadlines differ
+        #   energy — ascending local-opt energy: keeps the *costliest*
+        #            (most offload-worthy) users in the greedy set longest;
+        #            matters for κ/ζ-heterogeneous fleets where the paper's
+        #            latency-only ordering is energy-blind
+        if sort_key == "gamma":
+            order = jnp.argsort(-gamma)
+        elif sort_key == "budget":
+            order = jnp.argsort(c["T"] - gamma)
+        else:                                   # "energy"
+            order = jnp.argsort(e_loc)
+        g_s = gamma[order]
+        T_s = c["T"][order]
+        # suffix-min of deadlines: l_o for the set list[i:]
+        suffT = jax.lax.associative_scan(jnp.minimum, T_s, reverse=True)
+        # Alg.1 line 6 / Eq. 18: thresholds (non-increasing; +inf where the
+        # user cannot make its deadline at any edge frequency)
+        b_if_in = M - jnp.arange(M)                # batch size if list[i:] offload
+        phi_i = c["phi_b"][nt] + c["phi_s"][nt] * b_if_in
+        denom = suffT - g_s
+        th = jnp.where(denom > 0, phi_i / jnp.maximum(denom, 1e-30), _INF)
+
+        def per_freq(f_e):
+            # greedy batching set under f_e: first index with th[i] <= f_e
+            ok = th <= f_e
+            j = jnp.where(jnp.any(ok), jnp.argmax(ok), M)
+            B_o = M - j
+            has = B_o > 0
+            jc = jnp.minimum(j, M - 1)
+            l_o = suffT[jc]                         # Eq. 10
+            phi = c["phi_b"][nt] + c["phi_s"][nt] * B_o
+            psi = c["psi_b"][nt] + c["psi_s"][nt] * B_o
+            # Eq. 6 / Alg.2 line 13: GPU availability
+            gpu_ok = f_e * (l_o - t_free) >= phi
+            # membership of each (unsorted) user
+            rank = jnp.empty(M, jnp.int32).at[order].set(jnp.arange(M, dtype=jnp.int32))
+            off = rank >= j
+            # Eq. 19/20: optimal device DVFS
+            slack = l_o - c["o_up"][nt] / c["rate"] - phi / f_e
+            gamma_off = c["zeta"] * c["v"][nt] / jnp.maximum(slack, 1e-30)
+            gamma_off = jnp.where(slack > 0, gamma_off, _INF)
+            f_dev = jnp.where(off,
+                              jnp.clip(gamma_off, c["fm_min"], c["fm_max"]),
+                              f_loc)
+            dev_ok = jnp.where(off, gamma_off <= c["fm_max"] * (1 + 1e-9), True)
+            # Eq. 21: total energy
+            e_up = c["o_up"][nt] / c["rate"] * c["p_up"]
+            e_user = jnp.where(off, c["ku"] * c["u"][nt] * f_dev ** 2 + e_up,
+                               e_loc)
+            energy = e_user.sum() + jnp.where(has, psi * f_e ** 2, 0.0)
+            feas = has & gpu_ok & jnp.all(dev_ok)
+            # Eq. 22: end of GPU occupation
+            t_up = jnp.where(off, c["zeta"] * c["v"][nt] / f_dev
+                             + c["o_up"][nt] / c["rate"], -_INF)
+            t_end = jnp.maximum(t_free, jnp.max(t_up)) + phi / f_e
+            return jnp.where(feas, energy, _INF), off, f_dev, t_end, e_user
+
+        return jax.vmap(per_freq)(f_sweep)
+
+    E, off, f_dev, t_end, e_user = jax.vmap(per_partition)(idx_n)
+    # mask ñ = N: "offloading after the last block" is local computing
+    E = E.at[n_partitions - 1].set(_INF)
+    return E, off, f_dev, t_end, e_user
+
+
+def make_f_sweep(edge: EdgeProfile, rho: float = 0.03e9) -> np.ndarray:
+    """Alg. 2's frequency sweep grid (descending, includes f_max & f_min)."""
+    k = int(np.floor((edge.f_max - edge.f_min) / rho + 1e-9)) + 1
+    f = edge.f_max - rho * np.arange(k)
+    if f[-1] > edge.f_min + 1e-6:
+        f = np.concatenate([f, [edge.f_min]])
+    return f
+
+
+def jdob_schedule(profile: TaskProfile,
+                  fleet: DeviceFleet,
+                  edge: EdgeProfile,
+                  t_free: float = 0.0,
+                  rho: float = 0.03e9,
+                  partitions: Sequence[int] | None = None,
+                  edge_dvfs: bool = True,
+                  sort_key: str = "gamma") -> Schedule:
+    """Run J-DOB for one group.  ``partitions`` restricts ñ candidates
+    (``[0, N]`` gives the J-DOB-binary baseline); ``edge_dvfs=False`` pins
+    f_e = f_e,max (the J-DOB-w/o-edge-DVFS baseline); ``sort_key="budget"``
+    selects the beyond-paper J-DOB+ user ordering."""
+    c = _prep(profile, fleet, edge)
+    N = profile.N
+    if edge_dvfs:
+        f_sweep = jnp.asarray(make_f_sweep(edge, rho) / _GHZ)
+    else:
+        f_sweep = jnp.asarray([edge.f_max / _GHZ])
+
+    E, off, f_dev, t_end, e_user = _jdob_grid(c, f_sweep, t_free / 1.0,
+                                              n_partitions=N + 1,
+                                              sort_key=sort_key)
+    E = np.array(E)
+    if partitions is not None:
+        keep = np.zeros(N + 1, bool)
+        keep[list(partitions)] = True
+        E[~keep, :] = np.inf
+
+    # all-local fallback (ñ = N branch of Alg. 1; always feasible by the
+    # standing assumption f_max can meet every deadline locally) — float64
+    # so the fallback agrees bit-for-bit with the LC baseline
+    f_loc64 = np.clip(fleet.zeta * profile.v()[-1] / fleet.deadline,
+                      fleet.f_min, fleet.f_max)
+    e_loc64 = fleet.kappa * profile.u()[-1] * f_loc64 ** 2
+    e_all_local = float(e_loc64.sum())
+
+    best = np.unravel_index(np.argmin(E), E.shape)
+    if not np.isfinite(E[best]) or e_all_local <= E[best]:
+        return Schedule(True, e_all_local, N, float(edge.f_max),
+                        np.zeros(fleet.M, bool), f_loc64, t_free,
+                        dict(device=e_all_local, uplink=0.0, edge=0.0),
+                        e_loc64)
+
+    nt, fi = int(best[0]), int(best[1])
+    off_b = np.asarray(off[nt, fi])
+    f_dev_b = np.asarray(f_dev[nt, fi]) * _GHZ
+    f_e = float(np.asarray(f_sweep)[fi]) * _GHZ
+    eu = np.asarray(e_user[nt, fi])
+    # breakdown
+    up = float((profile.O[nt] / fleet.rate * fleet.p_up)[off_b].sum())
+    psi_b_, psi_s_ = edge.psi_coeffs(profile)
+    edge_e = float((psi_b_[nt] + psi_s_[nt] * off_b.sum()) * f_e ** 2)
+    dev = float(E[best]) - up - edge_e
+    return Schedule(True, float(E[best]), nt, f_e, off_b, f_dev_b,
+                    float(np.asarray(t_end[nt, fi])),
+                    dict(device=dev, uplink=up, edge=edge_e), eu)
+
+
+def jdob_energy_grid(profile: TaskProfile, fleet: DeviceFleet,
+                     edge: EdgeProfile, t_free: float = 0.0,
+                     rho: float = 0.03e9) -> np.ndarray:
+    """(N+1, k) energy grid — diagnostics + the Pallas kernel's oracle."""
+    c = _prep(profile, fleet, edge)
+    f_sweep = jnp.asarray(make_f_sweep(edge, rho) / _GHZ)
+    E, *_ = _jdob_grid(c, f_sweep, t_free, n_partitions=profile.N + 1)
+    return np.asarray(E)

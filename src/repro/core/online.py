@@ -1,0 +1,144 @@
+"""Online co-inference scheduling (the paper's stated future work, §V).
+
+Requests arrive over time (no arrival predictions).  Each request m has an
+absolute deadline ``a_m + T_m``.  A queued request can still be served
+*locally* as long as its device starts by ``d_m − l_min(m)`` (minimum local
+latency at f_max) — that instant is its **point of no return** τ_m.  The
+scheduler accumulates a queue and flushes it through the offline J-DOB
+inner module (with the GPU-occupancy time threaded) at a policy-chosen
+moment:
+
+* ``immediate`` — flush on every arrival (no batching across arrivals).
+* ``window``    — flush when the oldest queued request has waited Δ.
+* ``slack``     — adaptive: flush when waiting longer would erode some
+  queued request's remaining deadline budget below ``keep_frac`` of its
+  original T_m.  Batches grow exactly when arrivals are dense relative to
+  deadlines, and every request keeps most of its DVFS slack.
+* ``lastcall``  — flush at the point of no return τ_m (maximum batching).
+  Kept as a cautionary baseline: it never violates deadlines but destroys
+  the latency budget J-DOB turns into energy savings — measured WORSE
+  than local computing (EXPERIMENTS.md §Online).
+
+The offline **oracle bound** runs OG+J-DOB over all requests with arrival
+times ignored (clairvoyant, free to batch anything) — a lower bound no
+online policy can beat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .baselines import jdob_plus, local_computing
+from .cost_models import DeviceFleet, EdgeProfile
+from .grouping import optimal_grouping
+from .jdob import Schedule
+from .task_model import TaskProfile
+
+
+@dataclasses.dataclass
+class OnlineArrival:
+    user: int
+    arrival: float            # seconds
+    rel_deadline: float       # T_m^(d), relative to arrival
+
+    @property
+    def abs_deadline(self) -> float:
+        return self.arrival + self.rel_deadline
+
+
+@dataclasses.dataclass
+class OnlineResult:
+    energy: float
+    n_flushes: int
+    batch_sizes: list[int]
+    violations: int
+    per_user_energy: np.ndarray
+    flush_times: list[float]
+
+
+def simulate_online(arrivals: list[OnlineArrival],
+                    profile: TaskProfile, fleet: DeviceFleet,
+                    edge: EdgeProfile, *, policy: str = "slack",
+                    window: float = 0.0, keep_frac: float = 0.7,
+                    rho: float = 0.03e9,
+                    inner: Callable = jdob_plus) -> OnlineResult:
+    arrivals = sorted(arrivals, key=lambda a: a.arrival)
+    M = fleet.M
+    l_min = fleet.zeta * profile.v()[-1] / fleet.f_max     # (M,)
+    per_user = np.zeros(M)
+    gpu_free = 0.0
+    queue: list[OnlineArrival] = []
+    batches: list[int] = []
+    flush_times: list[float] = []
+    violations = 0
+    i = 0
+
+    def flush(now: float):
+        nonlocal gpu_free, violations
+        idx = np.array([a.user for a in queue])
+        rel = np.array([a.abs_deadline - now for a in queue])
+        violations += int(np.sum(rel < l_min[idx] - 1e-12))
+        sub = dataclasses.replace(fleet.subset(idx), deadline=rel)
+        s: Schedule = inner(profile, sub, edge,
+                            t_free=max(gpu_free - now, 0.0), rho=rho)
+        per_user[idx] += s.per_user_energy
+        if s.offload.any():
+            # edge energy attributed evenly across the batch
+            per_user[idx[s.offload]] += s.terms["edge"] / s.offload.sum()
+            gpu_free = now + s.t_free_end
+        batches.append(int(s.offload.sum()))
+        flush_times.append(now)
+        queue.clear()
+
+    while i < len(arrivals) or queue:
+        if not queue:
+            queue.append(arrivals[i])
+            i += 1
+            continue
+        next_arrival = arrivals[i].arrival if i < len(arrivals) else np.inf
+        if policy == "immediate":
+            t_flush = queue[-1].arrival
+        elif policy == "window":
+            t_flush = queue[0].arrival + window
+        elif policy == "slack":                 # keep ≥ keep_frac budget
+            t_flush = min(a.arrival + (1.0 - keep_frac) * a.rel_deadline
+                          for a in queue)
+        else:                                   # lastcall (point of no return)
+            t_flush = min(a.abs_deadline - float(l_min[a.user])
+                          for a in queue) - 1e-6
+        if next_arrival <= t_flush:
+            queue.append(arrivals[i])
+            i += 1
+        else:
+            flush(max(t_flush, queue[-1].arrival))
+
+    return OnlineResult(float(per_user.sum()), len(batches), batches,
+                        violations, per_user, flush_times)
+
+
+def oracle_bound(arrivals: list[OnlineArrival], profile: TaskProfile,
+                 fleet: DeviceFleet, edge: EdgeProfile,
+                 rho: float = 0.03e9) -> float:
+    """Clairvoyant lower bound: OG + J-DOB over the relative deadlines,
+    arrival times ignored."""
+    rel = np.array([a.rel_deadline for a in
+                    sorted(arrivals, key=lambda x: x.user)])
+    sub = dataclasses.replace(fleet, deadline=rel)
+    return optimal_grouping(profile, sub, edge, rho=rho).energy
+
+
+def all_local_energy(arrivals, profile, fleet, edge) -> float:
+    rel = np.array([a.rel_deadline for a in
+                    sorted(arrivals, key=lambda x: x.user)])
+    sub = dataclasses.replace(fleet, deadline=rel)
+    return local_computing(profile, sub, edge).energy
+
+
+def poisson_arrivals(M: int, rate_hz: float, fleet: DeviceFleet,
+                     seed: int = 0) -> list[OnlineArrival]:
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / rate_hz, size=M))
+    return [OnlineArrival(m, float(times[m]), float(fleet.deadline[m]))
+            for m in range(M)]

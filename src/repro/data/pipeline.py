@@ -1,0 +1,57 @@
+"""Deterministic synthetic LM data pipeline.
+
+Generates structured (learnable) token streams — a noisy k-th-order Markov
+chain — so training loss demonstrably decreases, sharded over the data mesh
+axes.  ``labels`` are pre-shifted next-token targets; ``mask`` marks valid
+positions."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1
+    num_vision_tokens: int = 0
+    d_model: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # deterministic successor table: vocab -> vocab
+        self._succ = rng.permutation(self.vocab_size).astype(np.int32)
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        b, s = self.global_batch, self.seq_len
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab_size, b)
+        noise_mask = rng.random((b, s)) < self.noise
+        noise_tok = rng.integers(0, self.vocab_size, (b, s))
+        for t in range(s):
+            nxt = self._succ[toks[:, t]]
+            toks[:, t + 1] = np.where(noise_mask[:, t], noise_tok[:, t], nxt)
+        out = dict(tokens=jnp.asarray(toks[:, :-1]),
+                   labels=jnp.asarray(toks[:, 1:]),
+                   mask=jnp.ones((b, s), jnp.float32))
+        if self.num_vision_tokens:
+            v = rng.standard_normal(
+                (b, self.num_vision_tokens, self.d_model)).astype(np.float32)
+            out["vision"] = jnp.asarray(v)
+        return out
+
+
+def make_batch_specs(data_axes, with_vision: bool = False) -> dict:
+    specs = dict(tokens=P(data_axes, None), labels=P(data_axes, None),
+                 mask=P(data_axes, None))
+    if with_vision:
+        specs["vision"] = P(data_axes, None, None)
+    return specs

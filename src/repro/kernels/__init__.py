@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the serving hot spots + the paper's sweep.
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), a jit'd wrapper in
+``ops.py`` and a pure-jnp oracle in ``ref.py``; validated on CPU with
+interpret=True across shape/dtype sweeps (tests/kernels/)."""
+from .ops import (decode_attention_op, default_interpret, flash_attention_op,
+                  gla_scan_op, jdob_sweep_op)
+
+__all__ = ["flash_attention_op", "decode_attention_op", "gla_scan_op",
+           "jdob_sweep_op", "default_interpret"]

@@ -1,0 +1,80 @@
+"""The paper's Alg. 2 inner sweep as a Pallas kernel.
+
+Computes the (partition ñ × edge-frequency) energy grid of J-DOB on-device:
+one grid row per partition point; the (K × M) membership/DVFS/energy
+evaluation is a dense VMEM-resident block (the greedy batching set update is
+the ``th <= f`` comparison — valid because the threshold sequence is
+non-increasing, the paper's key structural result).  The host-side sort
+(Alg. 1 line 5) happens in the ops wrapper; the kernel consumes per-ñ
+sorted arrays.  Mirrors :func:`repro.core.jdob._jdob_grid` (same GHz/s/J
+scaled units); oracle = that function itself via :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INF = jnp.inf
+
+
+def _kernel(th_ref, sufft_ref, our_ref, eup_ref, eloc_ref, zeta_ref, ku_ref,
+            fmin_ref, fmax_ref, scal_ref, f_ref, o_ref):
+    th = th_ref[0]                                   # (M,)
+    sufft = sufft_ref[0]
+    our = our_ref[0]                                 # O_ñ / R_m  (s)
+    eup = eup_ref[0]                                 # uplink energy (J)
+    eloc = eloc_ref[0]                               # local-opt energy (J)
+    zeta = zeta_ref[0]
+    ku = ku_ref[0]
+    fmin = fmin_ref[0]
+    fmax = fmax_ref[0]
+    s = scal_ref[0]                                  # (8,)
+    phi_b, phi_s, psi_b, psi_s, v_nt, u_nt, t_free = (
+        s[0], s[1], s[2], s[3], s[4], s[5], s[6])
+    f = f_ref[0]                                     # (K,)
+
+    # greedy batching membership per sweep frequency (paper Alg.2 l.7-12)
+    memb = th[None, :] <= f[:, None]                 # (K, M)
+    B_o = jnp.sum(memb.astype(jnp.float32), axis=1)
+    has = B_o > 0
+    l_o = jnp.min(jnp.where(memb, sufft[None, :], _INF), axis=1)
+    phi = phi_b + phi_s * B_o
+    psi = psi_b + psi_s * B_o
+    gpu_ok = f * (l_o - t_free) >= phi               # Eq. 6
+    slack = l_o[:, None] - our[None, :] - (phi / f)[:, None]
+    gamma_off = jnp.where(slack > 0,
+                          zeta[None, :] * v_nt / jnp.maximum(slack, 1e-30),
+                          _INF)                      # Eq. 19
+    fdev = jnp.clip(gamma_off, fmin[None, :], fmax[None, :])   # Eq. 20
+    dev_ok = jnp.where(memb, gamma_off <= fmax[None, :] * (1 + 1e-9), True)
+    e_user = jnp.where(memb, ku[None, :] * u_nt * fdev ** 2 + eup[None, :],
+                       eloc[None, :])                # Eq. 21
+    energy = e_user.sum(axis=1) + jnp.where(has, psi * f ** 2, 0.0)
+    feas = has & gpu_ok & jnp.all(dev_ok, axis=1)
+    o_ref[0] = jnp.where(feas, energy, _INF)
+
+
+def jdob_sweep_kernel(th, sufft, our, eup, eloc, zeta, ku, fmin, fmax,
+                      scal, f_sweep, *, interpret: bool = False):
+    """All (NP, M) inputs sorted per-ñ by the paper's γ ordering;
+    scal: (NP, 8); f_sweep: (NP, K).  Returns the (NP, K) energy grid
+    (+inf = infeasible)."""
+    NP, M = th.shape
+    K = f_sweep.shape[1]
+    row = lambda n: (n, 0)
+    mspec = pl.BlockSpec((1, M), row)
+    return pl.pallas_call(
+        _kernel,
+        grid=(NP,),
+        in_specs=[mspec] * 9 + [pl.BlockSpec((1, 8), row),
+                                pl.BlockSpec((1, K), row)],
+        out_specs=pl.BlockSpec((1, K), row),
+        out_shape=jax.ShapeDtypeStruct((NP, K), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(th, sufft, our, eup, eloc, zeta, ku, fmin, fmax, scal, f_sweep)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are *independent* naive implementations (full score matrices, explicit
+step recurrences) — deliberately not the blockwise model-code paths, so a
+kernel bug cannot hide behind a shared formulation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """(B, Sq, H, hd) × (B, Sk, KV, hd) -> (B, Sq, H, hd); full softmax."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    iq = jnp.arange(sq)[:, None]
+    ik = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= iq >= ik
+    if window is not None:
+        mask &= iq - ik < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, ring=False):
+    """(B,1,H,hd) × (B,L,KV,hd) -> (B,1,H,hd)."""
+    b, _, h, hd = q.shape
+    L, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k_cache, rep, axis=2)
+    v = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    slot = jnp.arange(L)
+    valid = slot < jnp.minimum(pos + 1, L) if ring else slot <= pos
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def gla_scan_ref(q, k, v, log_decay):
+    """Step recurrence S_t = a_t S_{t-1} + k_t v_tᵀ; y_t = q_t S_t.
+    q,k: (B,L,H,Dk); v: (B,L,H,Dv); log_decay: (B,L,H)."""
+    B, L, H, Dk = q.shape
+    Dv = v.shape[-1]
+    S0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    def step(S, t):
+        a = jnp.exp(log_decay[:, t].astype(jnp.float32))[..., None, None]
+        S = S * a + jnp.einsum("bhd,bhe->bhde", k[:, t].astype(jnp.float32),
+                               v[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhd,bhde->bhe", q[:, t].astype(jnp.float32), S)
+        return S, y
+
+    S, ys = jax.lax.scan(step, S0, jnp.arange(L))
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype), S
+
+
+def jdob_sweep_ref(profile, fleet, edge, t_free=0.0, rho=0.03e9):
+    """Oracle = the production vectorized grid."""
+    from repro.core.jdob import jdob_energy_grid
+    return jdob_energy_grid(profile, fleet, edge, t_free=t_free, rho=rho)

@@ -1,0 +1,307 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 95 layers contributes a single body execution, so FLOPs,
+bytes and collective traffic are undercounted by the trip count.  This
+module parses the SPMD-partitioned optimized HLO, builds the computation
+call graph (fusions, while loops, conditionals), extracts while trip counts
+from the canonical induction-variable pattern, and rolls costs up from
+ENTRY:
+
+  flops        — 2·M·N·K per dot (batch dims included), per conv likewise
+  bytes        — operands + results of materialized ops (ops inside fusion
+                 computations are not materialized; the fusion call site is)
+  collectives  — per-opcode result bytes of all-gather / all-reduce /
+                 reduce-scatter / all-to-all / collective-permute
+
+All totals are per device (the SPMD module is a per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(text: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, tuple(int(d) for d in dims.split(",") if d),
+                    n * _DTYPE_BYTES[dt]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(b for _, _, b in _shape_list(text))
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+    fusion_calls: list = dataclasses.field(default_factory=list)
+    while_calls: list = dataclasses.field(default_factory=list)  # (body, cond, trip)
+    plain_calls: list = dataclasses.field(default_factory=list)
+    dus_bytes: float = 0.0        # in-place update slices inside this comp
+    # loop-invariant accounting: gte name -> carry tuple index; reads of
+    # invariant carries are charged ONCE, not per trip (a recurrent cell's
+    # weights stay VMEM/cache-resident on TPU)
+    gte_index: dict = dataclasses.field(default_factory=dict)
+    root_tuple: list = dataclasses.field(default_factory=list)
+    inv_reads: dict = dataclasses.field(default_factory=dict)  # idx -> bytes
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\-.]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\-.]+)\s*=\s*(.+)$")
+_OP_RE = re.compile(r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+                    r"([\w\-]+)\((.*)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+
+def parse_module(hlo: str):
+    """Returns dict comp_name -> CompCost, plus entry computation name."""
+    comps: dict[str, CompCost] = {}
+    consts: dict[tuple[str, str], int] = {}       # (comp, name) -> int const
+    shapes: dict[tuple[str, str], str] = {}       # (comp, name) -> shape text
+    compares: dict[str, list[tuple[str, str]]] = defaultdict(list)
+    cur = None
+    entry = None
+
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if (stripped.endswith("{") and " -> " in stripped
+                and "=" not in stripped.split("(")[0]):
+            # computation header: `[ENTRY] %name (params...) -> type {`
+            tok = stripped.split()[1] if stripped.startswith("ENTRY") \
+                else stripped.split()[0]
+            name = tok.lstrip("%").split("(")[0].rstrip(",")
+            if name:
+                cur = name
+                comps[cur] = CompCost()
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rest = mi.groups()
+        mo = _OP_RE.match(rest)
+        if not mo:
+            continue
+        shape_txt, op, args = mo.groups()
+        shapes[(cur, name)] = shape_txt
+        cc = comps[cur]
+
+        mc = _CONST_RE.search(rest)
+        if op == "constant" and mc:
+            consts[(cur, name)] = int(mc.group(1))
+        if op == "get-tuple-element":
+            mi2 = re.search(r"index=(\d+)", rest)
+            if mi2:
+                cc.gte_index[name] = int(mi2.group(1))
+        elif op == "tuple" and "ROOT" in raw:
+            cc.root_tuple = re.findall(r"%([\w\-.]+)",
+                                       rest.split("tuple(")[1])
+
+        if op == "dot":
+            cc.flops += _dot_flops(shape_txt, rest, cur, shapes)
+        elif op == "convolution":
+            cc.flops += _conv_flops(shape_txt, rest, cur, shapes)
+        elif op in _COLLECTIVES or any(
+                op == c + s for c in _COLLECTIVES for s in ("-start",)):
+            base = op.removesuffix("-start")
+            cc.coll[base] = cc.coll.get(base, 0.0) + _bytes_of(shape_txt)
+
+        if op == "fusion":
+            mcall = re.search(r"calls=%?([\w\-.]+)", rest)
+            if mcall:
+                cc.fusion_calls.append((mcall.group(1), shape_txt,
+                                        _operand_bytes(args, cur, shapes, cc)))
+        elif op == "while":
+            mb = re.search(r"body=%?([\w\-.]+)", rest)
+            mcnd = re.search(r"condition=%?([\w\-.]+)", rest)
+            # XLA annotates the trip count directly:
+            #   backend_config={"known_trip_count":{"n":"40"},...}
+            mt = re.search(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)', rest)
+            if mb and mcnd:
+                cc.while_calls.append((mb.group(1), mcnd.group(1),
+                                       int(mt.group(1)) if mt else None))
+        elif op == "dynamic-update-slice":
+            # in-place update: traffic = the updated slice (read+write),
+            # not the whole aliased buffer (matches XLA's convention)
+            upd = _operand_dims(rest, op, cur, shapes, 1)
+            n = 1
+            for d in (upd or ()):
+                n *= d
+            cc.bytes += 2.0 * 4.0 * n      # dtype bound: f32
+            cc.dus_bytes += 2.0 * 4.0 * n
+        elif op == "dynamic-slice":
+            cc.bytes += 2.0 * _bytes_of(shape_txt)
+        elif op in ("call", "conditional"):
+            for mcall in re.finditer(r"(?:to_apply|branch_computations=\{|,)\s*"
+                                     r"%([\w\-.]+)", rest):
+                if mcall.group(1) in comps or True:
+                    cc.plain_calls.append(mcall.group(1))
+        elif op == "compare":
+            margs = re.findall(r"%([\w\-.]+)", args)
+            if len(margs) >= 2:
+                compares[cur].append((margs[0], margs[1]))
+        elif op not in ("parameter", "constant", "get-tuple-element", "tuple",
+                        "bitcast", "after-all"):
+            # materialized op outside a fusion: result + operand traffic
+            cc.bytes += _bytes_of(shape_txt) + _operand_bytes(args, cur, shapes, cc)
+
+    # while trip counts: condition compares something against an integer
+    # constant defined in the same computation
+    trips: dict[str, int] = {}
+    for comp, cmps in compares.items():
+        for a, b in cmps:
+            for cand in (a, b):
+                if (comp, cand) in consts:
+                    trips[comp] = max(trips.get(comp, 1), consts[(comp, cand)])
+    return comps, trips, entry
+
+
+def _operand_bytes(args: str, comp: str, shapes, cc: "CompCost | None" = None
+                   ) -> float:
+    total = 0.0
+    for m in re.finditer(r"%([\w\-.]+)", args.split("),")[0] if ")" in args
+                         else args):
+        name = m.group(1)
+        st = shapes.get((comp, name))
+        if st:
+            b = _bytes_of(st)
+            total += b
+            if cc is not None and name in cc.gte_index:
+                idx = cc.gte_index[name]
+                cc.inv_reads[idx] = cc.inv_reads.get(idx, 0.0) + b
+    return total
+
+
+def _out_elems(result_shape: str) -> int:
+    out = _shape_list(result_shape)
+    if not out:
+        return 0
+    n = 1
+    for d in out[0][1]:
+        n *= d
+    return n
+
+
+def _operand_dims(rest: str, op: str, comp: str, shapes, idx: int):
+    """Dims of the idx-th operand of ``op(...)`` via the symbol table."""
+    mcall = re.search(re.escape(op) + r"\((.*)", rest)
+    if not mcall:
+        return None
+    names = re.findall(r"%([\w\-.]+)", mcall.group(1).split(")")[0])
+    if len(names) <= idx:
+        return None
+    st = shapes.get((comp, names[idx]))
+    if not st:
+        return None
+    sl = _shape_list(st)
+    return sl[0][1] if sl else None
+
+
+def _dot_flops(result_shape: str, rest: str, comp: str, shapes) -> float:
+    out_elems = _out_elems(result_shape)
+    if not out_elems:
+        return 0.0
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+    lhs = _operand_dims(rest, "dot", comp, shapes, 0)
+    k = 1
+    if mdims and lhs:
+        for ci in mdims.group(1).split(","):
+            if ci and int(ci) < len(lhs):
+                k *= lhs[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(result_shape: str, rest: str, comp: str, shapes) -> float:
+    out_elems = _out_elems(result_shape)
+    kernel = _operand_dims(rest, "convolution", comp, shapes, 1)
+    k = 1
+    if kernel:
+        for d in kernel[:-1]:          # all but output-feature dim
+            k *= d
+    return 2.0 * out_elems * k
+
+
+def rollup(hlo: str):
+    """Total per-device (flops, bytes, collectives-dict) with while-loop
+    trip multiplication, from ENTRY."""
+    comps, trips, entry = parse_module(hlo)
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    def visit(name: str, stack=()) -> tuple[float, float, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, {})
+        cc = comps[name]
+        fl, by = cc.flops, cc.bytes
+        coll = dict(cc.coll)
+        for call in cc.fusion_calls:
+            callee, result_shape, op_bytes = call
+            f2, _b2, c2 = visit(callee, stack + (name,))
+            fl += f2                      # fused flops are real
+            callee_cc = comps.get(callee)
+            # fused internals are NOT materialized: traffic is the call
+            # site's operands + result — except in-place stash updates,
+            # where only the update slice moves
+            if callee_cc is not None and callee_cc.dus_bytes > 0:
+                rb = _bytes_of(result_shape)
+                by += callee_cc.dus_bytes + max(op_bytes - rb, 0.0)
+            else:
+                by += _bytes_of(result_shape) + op_bytes
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0.0) + v
+        for callee in cc.plain_calls:
+            f2, b2, c2 = visit(callee, stack + (name,))
+            fl += f2
+            by += b2
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0.0) + v
+        for body, cond, known in cc.while_calls:
+            trip = known if known is not None else trips.get(cond, 1)
+            fb, bb, cb = visit(body, stack + (name,))
+            fc, bc, _ = visit(cond, stack + (name,))
+            # loop-invariant carries (root passes gte i through at index i)
+            # are resident across iterations: charge their reads once
+            bcc = comps.get(body)
+            inv = 0.0
+            if bcc is not None and bcc.root_tuple:
+                for i, nm in enumerate(bcc.root_tuple):
+                    if bcc.gte_index.get(nm) == i and i in bcc.inv_reads:
+                        inv += bcc.inv_reads[i]
+            inv = min(inv, bb)
+            fl += trip * (fb + fc)
+            by += trip * (bb - inv + bc) + inv
+            for k, v in cb.items():
+                coll[k] = coll.get(k, 0.0) + trip * v
+        memo[name] = (fl, by, coll)
+        return memo[name]
+
+    return visit(entry)

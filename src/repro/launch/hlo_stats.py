@@ -1,0 +1,62 @@
+"""Parse collective traffic out of lowered/compiled HLO text (§Roofline).
+
+``cost_analysis()`` has no collective-bytes term, so we sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op in the (optimized, SPMD-partitioned) module.  Result
+shapes are per-participant, so totals are per-device traffic — exactly the
+term the ICI roofline needs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction: `%name = <shape-or-tuple>[{layout}] opcode(...)`
+_INSTR = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-opcode result bytes summed over the module (per device)."""
+    out: dict[str, int] = defaultdict(int)
+    for m in _INSTR.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        # ignore the -done halves of async pairs (counted at -start)
+        if m.group(0).rstrip("(").endswith("-done"):
+            continue
+        out[op] += _shape_bytes(shapes)
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opcodes=("fusion", "custom-call", "while",
+                                      "dot", "convolution")) -> dict[str, int]:
+    counts = {}
+    for op in opcodes + _COLLECTIVES:
+        counts[op] = len(re.findall(rf"\s{re.escape(op)}(?:-start)?\(",
+                                    hlo_text))
+    return counts

@@ -1,0 +1,34 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (256 chips/pod) single-pod mesh, or 2×16×16 = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(launch/dryrun.py sets this automatically)")
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...] | str:
+    """The batch-sharding axes of a production mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]

@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch × shape)
+combination (deliverable e step 2): weak-type-correct, shardable, no device
+allocation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, InputShape
+from repro.models import cache_specs, init_cache, init_params, param_specs
+from repro.training import init_opt_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything needed to lower one (arch × shape × mesh) combination."""
+    cfg: ArchConfig               # possibly the +swa long-context variant
+    shape: InputShape
+    kind: str                     # train | prefill | decode
+    args: tuple                   # ShapeDtypeStructs, in order
+    in_shardings: tuple
+    out_shardings: Any
+    act_spec: tuple | None = None  # residual-stream sharding constraint
+    donate: tuple[int, ...] = ()
+
+
+def _seq_axis(cfg: ArchConfig):
+    """Sequence-parallel residual sharding pays off when layers gather the
+    full sequence anyway (attention K/V); strictly-recurrent stacks
+    (xLSTM) are cheaper batch-only sharded (§Perf iteration B4)."""
+    has_attn = any(s.kind in ("attn", "swa", "cross")
+                   for s in cfg.layer_sequence())
+    return "model" if has_attn else None
+
+
+def effective_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """long_500k on archs with full attention uses the sliding-window
+    variant (ring KV cache) — DESIGN.md §4 'Input shapes and skips'."""
+    if shape.name == "long_500k" and any(
+            s.kind == "attn" for s in cfg.layer_sequence()):
+        return cfg.with_sliding_window()
+    return cfg
+
+
+def batch_specs_for(cfg: ArchConfig, shape: InputShape, dp) -> dict:
+    b = shape.global_batch
+    bspec = P(dp, None) if b > 1 else P(None, None)
+    out = dict(tokens=SDS((b, shape.seq_len), jnp.int32))
+    shard = dict(tokens=bspec)
+    if shape.kind == "train":
+        out.update(labels=SDS((b, shape.seq_len), jnp.int32),
+                   mask=SDS((b, shape.seq_len), jnp.float32))
+        shard.update(labels=bspec, mask=bspec)
+    if cfg.num_vision_tokens:
+        out["vision"] = SDS((b, cfg.num_vision_tokens, cfg.d_model),
+                            jnp.bfloat16)
+        shard["vision"] = P(dp, None, None) if b > 1 else P(None, None, None)
+    return out, shard
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh,
+                param_dtype=None) -> LoweringSpec:
+    from .mesh import data_axes, model_axis_size
+    cfg = effective_config(cfg, shape)
+    if param_dtype is None:
+        # training keeps f32 master weights; serving streams bf16 (§Perf C2)
+        param_dtype = jnp.float32 if shape.kind == "train" else jnp.bfloat16
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    msize = model_axis_size(mesh)
+    dsize = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dsize *= mesh.shape[a]
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=param_dtype))
+
+    if shape.kind == "train":
+        pspecs = param_specs(cfg, axis_size=msize, fsdp_axis="data",
+                             fsdp_size=mesh.shape["data"])
+        opt_shape = jax.eval_shape(lambda: init_opt_state(params_shape))
+        ospecs = dict(mu=pspecs, nu=pspecs, step=P())
+        batch, bshard = batch_specs_for(cfg, shape, dp)
+        args = (params_shape, opt_shape, batch)
+        in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs),
+                 jax.tree.map(ns, bshard))
+        out_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, ospecs), None)
+        act = (dp, _seq_axis(cfg), None)
+        return LoweringSpec(cfg, shape, "train", args, in_sh, out_sh,
+                            act_spec=act)
+
+    # inference: params replicated over data, TP over model
+    pspecs = param_specs(cfg, axis_size=msize)
+    if shape.kind == "prefill":
+        batch, bshard = batch_specs_for(cfg, shape, dp)
+        args = (params_shape, batch)
+        in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, bshard))
+        b = shape.global_batch
+        out_sh = ns(P(dp if b > 1 else None, None, "model"))
+        act = (dp if b > 1 else None, _seq_axis(cfg), None)
+        return LoweringSpec(cfg, shape, "prefill", args, in_sh, out_sh,
+                            act_spec=act)
+
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    cache_len = shape.seq_len
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, b, cache_len, dtype=jnp.bfloat16))
+    cspecs = cache_specs(cfg, b, cache_len, data_axes=dp,
+                         axis_size=msize, shard_len=(b == 1))
+    # decode cache['pos'] must reflect a full context for roofline realism
+    batch = dict(tokens=SDS((b, 1), jnp.int32))
+    bshard = dict(tokens=P(dp, None) if b > 1 else P(None, None))
+    if cfg.num_vision_tokens:
+        batch["vision"] = SDS((b, cfg.num_vision_tokens, cfg.d_model),
+                              jnp.bfloat16)
+        bshard["vision"] = (P(dp, None, None) if b > 1
+                            else P(None, None, None))
+    args = (params_shape, cache_shape, batch)
+    in_sh = (jax.tree.map(ns, pspecs), jax.tree.map(ns, cspecs),
+             jax.tree.map(ns, bshard))
+    out_sh = (ns(P(dp if b > 1 else None, None, "model")),
+              jax.tree.map(ns, cspecs))
+    act = (dp if b > 1 else None, None, None)   # S=1: no sequence parallel
+    return LoweringSpec(cfg, shape, "decode", args, in_sh, out_sh,
+                        act_spec=act)

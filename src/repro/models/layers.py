@@ -1,0 +1,193 @@
+"""Attention / MLP / norm building blocks (pure JAX, pjit-friendly).
+
+Attention uses a *blockwise* online-softmax formulation (lax.scan over KV
+chunks) so the lowered HLO never materializes the (S × S) score matrix —
+required for the 32k prefill shape to fit HBM, and the exact pure-jnp
+counterpart of the Pallas flash kernel in :mod:`repro.kernels`.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            ).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+                            ).reshape(b, s, kv * n_rep, hd)
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array    # (d, H*hd)
+    wk: jax.Array    # (d, KV*hd)
+    wv: jax.Array    # (d, KV*hd)
+    wo: jax.Array    # (H*hd, d)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        window: int | None = None, kv_len=None,
+                        chunk: int = 1024):
+    """Online-softmax attention, scanned over KV chunks.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KV, hd) with KV | H.
+    ``q_offset``: absolute position of q[0] (decode / chunked prefill).
+    ``window``: sliding-window size (None = full).
+    ``kv_len``: number of valid KV entries (static or traced scalar) — ring
+    caches pass the filled length.
+    Returns (B, Sq, H, hd), accumulated in f32.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, sk)
+    n_chunks = sk // chunk
+    rem = sk - n_chunks * chunk
+    # Grouped-GQA math (§Perf iteration A1): K/V keep their kv heads — no
+    # head broadcast — so the full-sequence gather GSPMD inserts under
+    # sequence-parallel sharding moves kv (not h) heads, in the compute
+    # dtype.  Scores accumulate in f32 via preferred_element_type.
+    q5 = q.reshape(b, sq, kv, g, hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def attend(carry, inputs):
+        acc, m, l = carry
+        k_c, v_c, k_start = inputs
+        # scores: (B, KV, G, Sq, C)
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", q5, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = k_start + jnp.arange(k_c.shape[1])
+        mask = jnp.ones((sq, k_c.shape[1]), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        if kv_len is not None:
+            mask &= (k_pos < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqj,bjkd->bkgqd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l), None
+
+    acc = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    m = jnp.full((b, kv, g, sq), _NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kv, g, sq), jnp.float32)
+
+    # checkpoint each chunk: backward recomputes the (Sq × chunk) score /
+    # prob tiles from (q, k_c, v_c) instead of storing 32+ of them — the
+    # flash-attention memory property, preserved under autodiff.
+    attend_ckpt = jax.checkpoint(attend)
+    if n_chunks > 0:
+        ks = k[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, kv, hd)
+        vs = v[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, kv, hd)
+        starts = jnp.arange(n_chunks) * chunk
+        (acc, m, l), _ = jax.lax.scan(
+            attend_ckpt, (acc, m, l),
+            (ks.transpose(1, 0, 2, 3, 4), vs.transpose(1, 0, 2, 3, 4), starts))
+    if rem:
+        (acc, m, l), _ = attend_ckpt((acc, m, l),
+                                     (k[:, n_chunks * chunk:],
+                                      v[:, n_chunks * chunk:],
+                                      jnp.asarray(n_chunks * chunk)))
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)      # (B,KV,G,Sq,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def self_attention(p: AttnParams, x, cfg, *, positions, causal=True,
+                   window=None, compute_dtype=jnp.bfloat16):
+    """Full self-attention sub-layer (projections + blockwise attention)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xc = x.astype(compute_dtype)
+    q = (xc @ p.wq.astype(compute_dtype)).reshape(b, s, h, hd)
+    k = (xc @ p.wk.astype(compute_dtype)).reshape(b, s, kv, hd)
+    v = (xc @ p.wv.astype(compute_dtype)).reshape(b, s, kv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, causal=causal, window=window)
+    return (o.reshape(b, s, h * hd) @ p.wo.astype(compute_dtype)).astype(x.dtype)
+
+
+def cross_attention(p: AttnParams, x, kv_src, cfg,
+                    compute_dtype=jnp.bfloat16):
+    """Cross-attention onto vision tokens (no mask, no RoPE on KV)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    tv = kv_src.shape[1]
+    xc = x.astype(compute_dtype)
+    kvc = kv_src.astype(compute_dtype)
+    q = (xc @ p.wq.astype(compute_dtype)).reshape(b, s, h, hd)
+    k = (kvc @ p.wk.astype(compute_dtype)).reshape(b, tv, kv, hd)
+    v = (kvc @ p.wv.astype(compute_dtype)).reshape(b, tv, kv, hd)
+    o = blockwise_attention(q, k, v, causal=False)
+    return (o.reshape(b, s, h * hd) @ p.wo.astype(compute_dtype)).astype(x.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, window=None,
+                     chunk: int = 4096):
+    """Single-token attention over a (possibly ring) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, L, KV, hd); ``pos``: current absolute
+    position (traced scalar).  For ring caches L == window and every slot is
+    valid once pos >= L; for full caches slots >= pos+1 are masked.
+    """
+    b, _, h, hd = q.shape
+    L, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    # grouped-GQA (no head broadcast of the cache — §Perf iteration A1/C1)
+    q5 = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bjkd->bkgj", q5, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    slot = jnp.arange(L)
+    valid = slot <= pos if window is None else slot < jnp.minimum(pos + 1, L)
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def mlp(params: dict, x, gated: bool, compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    if gated:
+        g = jax.nn.silu(xc @ params["w_gate"].astype(compute_dtype))
+        u = xc @ params["w_up"].astype(compute_dtype)
+        return ((g * u) @ params["w_down"].astype(compute_dtype)).astype(x.dtype)
+    u = jax.nn.gelu(xc @ params["w_up"].astype(compute_dtype))
+    return (u @ params["w_down"].astype(compute_dtype)).astype(x.dtype)

@@ -1,0 +1,667 @@
+"""Unified decoder model over heterogeneous layer plans.
+
+Parameters are stored *stacked per plan segment*: every pattern element's
+arrays carry a leading ``repeats`` dim and the executor ``lax.scan``s over
+it — one compiled body per pattern element regardless of depth (a 95-layer
+dense model lowers to a single scanned block).  This is what keeps the 80
+dry-run compiles tractable on one CPU core (DESIGN.md §5).
+
+Public API:
+  init_params(cfg, key)                 -> params pytree
+  param_specs(cfg, model_axis, size)    -> matching PartitionSpec pytree
+  forward(cfg, params, tokens, ...)     -> (logits, aux)
+  init_cache(cfg, batch, cache_len)     -> decode cache pytree
+  cache_specs(cfg, ...)                 -> cache PartitionSpec pytree
+  prefill(cfg, params, tokens, ...)     -> (logits, cache)
+  decode_step(cfg, params, cache, tok)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, LayerSpec
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (AttnParams, blockwise_attention, cross_attention,
+                     decode_attention, mlp, rms_norm, rope)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_ffn(key, spec: LayerSpec, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    if spec.ffn == "dense":
+        if cfg.gated_mlp:
+            p["w_gate"] = _dense(ks[0], (d, cfg.d_ff), dtype=dtype)
+        p["w_up"] = _dense(ks[1], (d, cfg.d_ff), dtype=dtype)
+        p["w_down"] = _dense(ks[2], (cfg.d_ff, d), dtype=dtype)
+        p["norm2"] = jnp.ones((d,), dtype)
+    elif spec.ffn == "moe":
+        E, ff = cfg.moe_experts, cfg.moe_d_ff
+        p["router"] = _dense(ks[0], (d, E), dtype=dtype)
+        if cfg.gated_mlp:
+            p["w_gate"] = _dense(ks[1], (E, d, ff), dtype=dtype)
+        p["w_up"] = _dense(ks[2], (E, d, ff), dtype=dtype)
+        p["w_down"] = _dense(ks[3], (E, ff, d), dtype=dtype)
+        if cfg.moe_shared_experts:
+            sf = ff * cfg.moe_shared_experts
+            if cfg.gated_mlp:
+                p["shared_w_gate"] = _dense(ks[4], (d, sf), dtype=dtype)
+            p["shared_w_up"] = _dense(ks[5], (d, sf), dtype=dtype)
+            p["shared_w_down"] = _dense(ks[6], (sf, d), dtype=dtype)
+        p["norm2"] = jnp.ones((d,), dtype)
+    return p
+
+
+def _init_elem(key, spec: LayerSpec, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    p: dict[str, Any] = {"norm1": jnp.ones((d,), dtype)}
+    if spec.kind in ("attn", "swa", "cross"):
+        p["wq"] = _dense(ks[0], (d, h * hd), dtype=dtype)
+        p["wk"] = _dense(ks[1], (d, kv * hd), dtype=dtype)
+        p["wv"] = _dense(ks[2], (d, kv * hd), dtype=dtype)
+        p["wo"] = _dense(ks[3], (h * hd, d), dtype=dtype)
+    elif spec.kind == "mamba2":
+        di, G, N = cfg.ssm_d_inner, cfg.ssm_n_groups, cfg.ssm_state
+        H = cfg.ssm_heads
+        p["in_proj"] = _dense(ks[0], (d, 2 * di + 2 * G * N + H), dtype=dtype)
+        p["conv_w"] = _dense(ks[1], (cfg.ssm_conv, di + 2 * G * N), 0.2, dtype)
+        p["dt_bias"] = jnp.zeros((H,), jnp.float32)
+        p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32)
+        p["D"] = jnp.ones((H,), jnp.float32)
+        p["norm"] = jnp.ones((di,), dtype)
+        p["out_proj"] = _dense(ks[2], (di, d), dtype=dtype)
+    elif spec.kind == "mlstm":
+        di = cfg.ssm_d_inner
+        p["wq"] = _dense(ks[0], (d, di), dtype=dtype)
+        p["wk"] = _dense(ks[1], (d, di), dtype=dtype)
+        p["wv"] = _dense(ks[2], (d, di), dtype=dtype)
+        p["wf"] = _dense(ks[3], (d, cfg.num_heads), dtype=dtype)
+        p["wi"] = _dense(ks[4], (d, cfg.num_heads), dtype=dtype)
+        p["wo_gate"] = _dense(ks[5], (d, di), dtype=dtype)
+        p["norm"] = jnp.ones((di,), dtype)
+        p["out_proj"] = _dense(ks[6], (di, d), dtype=dtype)
+    elif spec.kind == "slstm":
+        H = cfg.num_heads
+        dh = d // H
+        p["wx"] = _dense(ks[0], (d, 4 * d), dtype=dtype)
+        p["r"] = _dense(ks[1], (H, dh, 4 * dh), dtype=dtype)
+        p["b"] = jnp.zeros((4 * d,), jnp.float32)
+        p["norm"] = jnp.ones((d,), dtype)
+        p["out_proj"] = _dense(ks[2], (d, d), dtype=dtype)
+    p.update(_init_ffn(ks[7], spec, cfg, dtype))
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, len(cfg.plan) + 2)
+    segments = []
+    for (pattern, reps), k in zip(cfg.plan, keys[:-2]):
+        elems = []
+        for ei, spec in enumerate(pattern):
+            rep_keys = jax.random.split(jax.random.fold_in(k, ei), reps)
+            stacked = jax.vmap(
+                lambda kk: _init_elem(kk, spec, cfg, dtype))(rep_keys)
+            elems.append(stacked)
+        segments.append(elems)
+    params = {
+        "embed": {"w": _dense(keys[-2], (cfg.vocab_size, cfg.d_model),
+                              dtype=dtype)},
+        "segments": segments,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": _dense(keys[-1],
+                                         (cfg.d_model, cfg.vocab_size),
+                                         dtype=dtype)}
+    if cfg.num_vision_tokens:
+        params["vision_embed"] = {
+            "w": _dense(jax.random.fold_in(keys[-1], 7),
+                        (cfg.num_vision_tokens, cfg.d_model), dtype=dtype)}
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpecs
+# ---------------------------------------------------------------------------
+
+def _div(n: int, size: int):
+    return n % size == 0
+
+
+def _spec_for(name: str, shape: tuple[int, ...], stacked: bool,
+              axis: str, size: int) -> P:
+    """Sharding rule per leaf name; replicates non-divisible dims."""
+    def m(dim):                      # 'model' if divisible else None
+        return axis if _div(dim, size) else None
+
+    core = shape[1:] if stacked else shape
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "wo_gate",
+                "wx", "shared_w_gate", "shared_w_up"):
+        if len(core) == 3:           # MoE experts (E, d, ff)
+            spec = (None, None, m(core[2]))
+        else:
+            spec = (None, m(core[1]))
+    elif name in ("wo", "w_down", "out_proj", "shared_w_down"):
+        if len(core) == 3:           # MoE (E, ff, d)
+            spec = (None, m(core[1]), None)
+        else:
+            spec = (m(core[0]), None)
+    elif name in ("wf", "wi", "router", "b", "dt_bias", "A_log", "D", "r"):
+        spec = (None,) * len(core)
+    elif name == "conv_w":
+        spec = (None, m(core[1]))
+    elif name == "norm":             # inner (di,) norms
+        spec = (m(core[0]),) if len(core) == 1 else (None,) * len(core)
+    elif name in ("norm1", "norm2", "final_norm"):
+        spec = (None,) * len(core)
+    elif name == "w":                # embed / lm_head / vision_embed
+        spec = (None, m(core[1]))
+    else:
+        spec = (None,) * len(core)
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def param_specs(cfg: ArchConfig, model_axis: str = "model",
+                axis_size: int = 16, *, fsdp_axis: str | None = None,
+                fsdp_size: int = 16, min_fsdp_dim: int = 1024):
+    """Tensor-parallel specs over ``model_axis``; with ``fsdp_axis`` set,
+    large matrices additionally shard their first free (None) divisible dim
+    over the data axis — ZeRO-3-style weight sharding for training (weights
+    all-gather per layer, grads reduce-scatter; GSPMD inserts both)."""
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        # segment leaves are stacked; top-level dicts (embed/lm_head) are not
+        is_segment = len(path) >= 2 and isinstance(
+            path[0], jax.tree_util.DictKey) and path[0].key == "segments"
+        if name is None and isinstance(path[-1], jax.tree_util.DictKey):
+            name = path[-1].key
+        spec = _spec_for(name, leaf.shape, is_segment, model_axis, axis_size)
+        # the embedding table stays out of FSDP (token gather locality);
+        # the LM head joins it (its grad otherwise all-reduces fully)
+        is_embed = (name == "w" and len(path) >= 1 and isinstance(
+            path[0], jax.tree_util.DictKey) and path[0].key in
+            ("embed", "vision_embed"))
+        if (fsdp_axis is not None and leaf.ndim >= 2 and not is_embed
+                and int(np.prod(leaf.shape)) >= min_fsdp_dim ** 2):
+            parts = list(spec)
+            start = 1 if is_segment else 0
+            for dim in range(start, leaf.ndim):
+                if (parts[dim] is None and leaf.shape[dim] % fsdp_size == 0
+                        and leaf.shape[dim] >= 128):
+                    parts[dim] = fsdp_axis
+                    break
+            spec = P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    cfg: ArchConfig
+    compute_dtype: Any = jnp.bfloat16
+    kv_chunk: int = 1024
+    ssm_chunk: int = 256
+    moe_capacity: float = 1.25
+    remat: bool = False
+    # residual stream dtype (params stay f32 for training; the stream is
+    # cast once after the embedding — halves every scan carry).  None ⇒
+    # follow compute_dtype.
+    stream_dtype: Any = None
+    # Megatron-style sequence-parallel residual: activations between blocks
+    # carry P(act_spec) so scan carries shard over the model axis too.
+    # None disables (CPU smoke tests run without a mesh).
+    act_spec: tuple | None = None
+
+    @property
+    def stream(self):
+        return self.stream_dtype or self.compute_dtype
+
+    def constrain(self, h):
+        if self.act_spec is not None:
+            from jax.sharding import PartitionSpec
+            h = jax.lax.with_sharding_constraint(
+                h, PartitionSpec(*self.act_spec))
+        return h
+
+
+def _apply_ffn(spec: LayerSpec, p, h, ctx: RunCtx, aux):
+    if spec.ffn == "none":
+        return h, aux
+    hn = rms_norm(h, p["norm2"], ctx.cfg.norm_eps)
+    if spec.ffn == "dense":
+        out = mlp(p, hn, ctx.cfg.gated_mlp, ctx.compute_dtype)
+    else:
+        out, moe_aux = moe_lib.moe_ffn(p, hn, ctx.cfg,
+                                       compute_dtype=ctx.compute_dtype,
+                                       capacity_factor=ctx.moe_capacity,
+                                       act_spec=ctx.act_spec)
+        aux = dict(load_balance=aux["load_balance"] + moe_aux["load_balance"],
+                   router_z=aux["router_z"] + moe_aux["router_z"])
+    return h + out, aux
+
+
+def _apply_elem(spec: LayerSpec, p, h, ctx: RunCtx, positions, vision, aux):
+    cfg = ctx.cfg
+    hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if spec.kind in ("attn", "swa"):
+        ap = AttnParams(p["wq"], p["wk"], p["wv"], p["wo"])
+        b, s, d = hn.shape
+        xc = hn.astype(ctx.compute_dtype)
+        q = (xc @ ap.wq.astype(ctx.compute_dtype)).reshape(
+            b, s, cfg.num_heads, cfg.head_dim)
+        k = (xc @ ap.wk.astype(ctx.compute_dtype)).reshape(
+            b, s, cfg.num_kv_heads, cfg.head_dim)
+        v = (xc @ ap.wv.astype(ctx.compute_dtype)).reshape(
+            b, s, cfg.num_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = blockwise_attention(q, k, v, causal=True,
+                                window=spec.window, chunk=ctx.kv_chunk)
+        out = (o.reshape(b, s, -1) @ ap.wo.astype(ctx.compute_dtype)
+               ).astype(h.dtype)
+        h = h + out
+    elif spec.kind == "cross":
+        ap = AttnParams(p["wq"], p["wk"], p["wv"], p["wo"])
+        h = h + cross_attention(ap, hn, vision, cfg, ctx.compute_dtype)
+    elif spec.kind == "mamba2":
+        out, _ = ssm_lib.mamba2_mix(p, hn, cfg, compute_dtype=ctx.compute_dtype,
+                                    chunk=ctx.ssm_chunk)
+        h = h + out
+    elif spec.kind == "mlstm":
+        out, _ = ssm_lib.mlstm_mix(p, hn, cfg, compute_dtype=ctx.compute_dtype,
+                                   chunk=ctx.ssm_chunk)
+        h = h + out
+    elif spec.kind == "slstm":
+        out, _ = ssm_lib.slstm_mix(p, hn, cfg, compute_dtype=ctx.compute_dtype)
+        h = h + out
+    else:
+        raise ValueError(spec.kind)
+    return _apply_ffn(spec, p, h, ctx, aux)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, vision=None,
+            ctx: RunCtx | None = None):
+    """tokens: (B, S) int32 -> (logits (B,S,V), aux)."""
+    ctx = ctx or RunCtx(cfg)
+    B, S = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    h = ctx.constrain(h.astype(ctx.stream))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux = dict(load_balance=jnp.zeros((), jnp.float32),
+               router_z=jnp.zeros((), jnp.float32))
+
+    # §Perf iteration A2: cast the stacked block weights to the compute
+    # dtype ONCE, outside the layer scan — the per-layer FSDP all-gathers
+    # then move bf16, not f32 (2× collective traffic reduction).  1-D
+    # leaves (norm scales, gates' biases, A_log/dt_bias) stay f32.
+    segments = [
+        [jax.tree.map(lambda x: x.astype(ctx.compute_dtype)
+                      if x.dtype == jnp.float32 and x.ndim >= 3 else x, e)
+         for e in seg]
+        for seg in params["segments"]]
+
+    for seg_params, (pattern, reps) in zip(segments, cfg.plan):
+        def body(carry, xs):
+            h, lb, rz = carry
+            a = dict(load_balance=lb, router_z=rz)
+            for spec, p in zip(pattern, xs):
+                h, a = _apply_elem(spec, p, h, ctx, positions, vision, a)
+            h = ctx.constrain(h)
+            return (h, a["load_balance"], a["router_z"]), None
+
+        if ctx.remat:
+            body = jax.checkpoint(body)
+        if reps == 1:
+            (h, lb, rz), _ = body(
+                (h, aux["load_balance"], aux["router_z"]),
+                [jax.tree.map(lambda x: x[0], e) for e in seg_params])
+        else:
+            (h, lb, rz), _ = jax.lax.scan(
+                body, (h, aux["load_balance"], aux["router_z"]),
+                tuple(seg_params))
+        aux = dict(load_balance=lb, router_z=rz)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w_out = (params["embed"]["w"].T if cfg.tie_embeddings
+             else params["lm_head"]["w"])
+    if ctx.act_spec is not None:
+        # §Perf A2: pin the head matmul's data flow — h batch-sharded with
+        # full d (one local S-gather), logits (batch, ·, vocab/model) —
+        # otherwise GSPMD reshards h across the batch for the big matmul
+        from jax.sharding import PartitionSpec
+        h = jax.lax.with_sharding_constraint(
+            h, PartitionSpec(ctx.act_spec[0], None, None))
+    logits = (h.astype(ctx.compute_dtype)
+              @ w_out.astype(ctx.compute_dtype)).astype(jnp.float32)
+    if ctx.act_spec is not None:
+        from jax.sharding import PartitionSpec
+        logits = jax.lax.with_sharding_constraint(
+            logits, PartitionSpec(ctx.act_spec[0], None, "model"))
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _elem_cache(spec: LayerSpec, cfg: ArchConfig, batch: int, cache_len: int,
+                dtype):
+    if spec.kind in ("attn", "swa"):
+        L = min(cache_len, spec.window) if spec.window else cache_len
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        return dict(k=jnp.zeros((batch, L, kv, hd), dtype),
+                    v=jnp.zeros((batch, L, kv, hd), dtype))
+    if spec.kind == "cross":
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        tv = cfg.num_vision_tokens
+        return dict(k=jnp.zeros((batch, tv, kv, hd), dtype),
+                    v=jnp.zeros((batch, tv, kv, hd), dtype))
+    if spec.kind == "mamba2":
+        return ssm_lib.mamba2_init_state(cfg, batch)
+    if spec.kind == "mlstm":
+        return ssm_lib.mlstm_init_state(cfg, batch)
+    if spec.kind == "slstm":
+        return ssm_lib.slstm_init_state(cfg, batch)
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    """Cache pytree: per segment, per pattern element, stacked over reps."""
+    segments = []
+    for pattern, reps in cfg.plan:
+        elems = []
+        for spec in pattern:
+            one = _elem_cache(spec, cfg, batch, cache_len, dtype)
+            elems.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one))
+        segments.append(elems)
+    return dict(segments=segments, pos=jnp.zeros((), jnp.int32))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int, *,
+                data_axes, model_axis: str = "model", axis_size: int = 16,
+                shard_len: bool = False, dtype=jnp.bfloat16):
+    """PartitionSpec tree for the cache.  ``shard_len=True`` shards the KV
+    length dim over the data axes (long_500k, batch=1)."""
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, batch, cache_len, dtype))
+
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        if name == "pos":
+            return P()
+        if name in ("k", "v") and leaf.ndim == 5:      # (R,B,L,KV,hd)
+            kv, L = leaf.shape[3], leaf.shape[2]
+            kv_ax = model_axis if kv % axis_size == 0 else None
+            if shard_len:                              # batch=1 (long_500k)
+                return P(None, None, data_axes, kv_ax, None)
+            # kv heads not TP-shardable -> shard the cache length over
+            # 'model' instead (flash-decode style partial softmax; GSPMD
+            # inserts the combine collectives)
+            L_ax = (model_axis if kv_ax is None and L % axis_size == 0
+                    else None)
+            return P(None, data_axes, L_ax, kv_ax, None)
+        # ssm states: shard batch (unless batch=1 / shard_len mode);
+        # channel dims over model when divisible
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and not shard_len and leaf.shape[1] > 1:
+            spec[1] = data_axes
+        for dim in range(2, leaf.ndim):
+            if leaf.shape[dim] % axis_size == 0 and leaf.shape[dim] >= 256:
+                spec[dim] = model_axis
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def _decode_elem(spec: LayerSpec, p, cache, h, ctx: RunCtx, pos):
+    cfg = ctx.cfg
+    hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+    b = h.shape[0]
+    if spec.kind in ("attn", "swa"):
+        L = cache["k"].shape[1]
+        xc = hn.astype(ctx.compute_dtype)
+        q = (xc @ p["wq"].astype(ctx.compute_dtype)).reshape(
+            b, 1, cfg.num_heads, cfg.head_dim)
+        k = (xc @ p["wk"].astype(ctx.compute_dtype)).reshape(
+            b, 1, cfg.num_kv_heads, cfg.head_dim)
+        v = (xc @ p["wv"].astype(ctx.compute_dtype)).reshape(
+            b, 1, cfg.num_kv_heads, cfg.head_dim)
+        posb = jnp.broadcast_to(pos[None], (b, 1))
+        q = rope(q, posb, cfg.rope_theta)
+        k = rope(k, posb, cfg.rope_theta)
+        slot = pos % L if spec.window else jnp.minimum(pos, L - 1)
+        # masked-where cache write (§Perf iteration C1): a dynamic-update-
+        # slice at a traced index on the *sharded* cache-length dim makes
+        # GSPMD gather the whole cache; an elementwise select over an iota
+        # mask shards trivially (pure local HBM traffic, no collectives)
+        sel = (jnp.arange(L) == slot)[None, :, None, None]
+        ck = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        o = decode_attention(q, ck, cv, pos=pos,
+                             window=spec.window)
+        out = (o.reshape(b, 1, -1).astype(ctx.compute_dtype)
+               @ p["wo"].astype(ctx.compute_dtype)).astype(h.dtype)
+        h = h + out
+        cache = dict(k=ck, v=cv)
+    elif spec.kind == "cross":
+        # vision K/V were projected at prefill time and are static
+        q = (hn.astype(ctx.compute_dtype)
+             @ p["wq"].astype(ctx.compute_dtype)).reshape(
+                 b, 1, cfg.num_heads, cfg.head_dim)
+        o = decode_attention(q, cache["k"], cache["v"],
+                             pos=jnp.asarray(cfg.num_vision_tokens - 1))
+        out = (o.reshape(b, 1, -1).astype(ctx.compute_dtype)
+               @ p["wo"].astype(ctx.compute_dtype)).astype(h.dtype)
+        h = h + out
+    elif spec.kind == "mamba2":
+        out, cache = ssm_lib.mamba2_mix(p, hn, cfg,
+                                        compute_dtype=ctx.compute_dtype,
+                                        state=cache, step=True)
+        h = h + out
+    elif spec.kind == "mlstm":
+        out, cache = ssm_lib.mlstm_mix(p, hn, cfg,
+                                       compute_dtype=ctx.compute_dtype,
+                                       state=cache, step=True)
+        h = h + out
+    elif spec.kind == "slstm":
+        out, cache = ssm_lib.slstm_mix(p, hn, cfg,
+                                       compute_dtype=ctx.compute_dtype,
+                                       state=cache, step=True)
+        h = h + out
+    aux = dict(load_balance=jnp.zeros((), jnp.float32),
+               router_z=jnp.zeros((), jnp.float32))
+    h, _ = _apply_ffn(spec, p, h, ctx, aux)
+    return h, cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, *,
+                ctx: RunCtx | None = None):
+    """One token step.  tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+    ctx = ctx or RunCtx(cfg)
+    pos = cache["pos"]
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(ctx.stream)
+
+    new_segments = []
+    for seg_params, seg_cache, (pattern, reps) in zip(
+            params["segments"], cache["segments"], cfg.plan):
+        def body(h, xs):
+            ps, cs = xs
+            new_cs = []
+            for spec, p, c in zip(pattern, ps, cs):
+                h, c2 = _decode_elem(spec, p, c, h, ctx, pos)
+                new_cs.append(c2)
+            return h, new_cs
+
+        if reps == 1:
+            h, ncs = body(h, ([jax.tree.map(lambda x: x[0], e)
+                               for e in seg_params],
+                              [jax.tree.map(lambda x: x[0], e)
+                               for e in seg_cache]))
+            ncs = [jax.tree.map(lambda x: x[None], c) for c in ncs]
+        else:
+            h, ncs = jax.lax.scan(body, h, (tuple(seg_params),
+                                            tuple(seg_cache)))
+        new_segments.append(ncs)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w_out = (params["embed"]["w"].T if cfg.tie_embeddings
+             else params["lm_head"]["w"])
+    logits = (h.astype(ctx.compute_dtype)
+              @ w_out.astype(ctx.compute_dtype)).astype(jnp.float32)
+    return logits, dict(segments=new_segments, pos=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (forward + cache construction, for the serving engine)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params, tokens, *, vision=None,
+            cache_len: int | None = None, ctx: RunCtx | None = None):
+    """Run the prompt and build the decode cache (pure-JAX reference path;
+    the serving engine uses it for the co-inference examples)."""
+    ctx = ctx or RunCtx(cfg)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    cache = init_cache(cfg, B, cache_len)
+    logits, _ = forward(cfg, params, tokens, vision=vision, ctx=ctx)
+
+    # rebuild per-layer cache state by a scan of decode steps would be O(S·L);
+    # instead recompute K/V and final SSM states directly per element.
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(ctx.stream)
+    new_segments = []
+    for seg_params, seg_cache, (pattern, reps) in zip(
+            params["segments"], cache["segments"], cfg.plan):
+        def body(h, xs):
+            ps, cs = xs
+            new_cs = []
+            for spec, p, c in zip(pattern, ps, cs):
+                h, c2, _ = _prefill_elem(spec, p, c, h, ctx, positions,
+                                         vision)
+                new_cs.append(c2)
+            return h, new_cs
+
+        if reps == 1:
+            h, ncs = body(h, ([jax.tree.map(lambda x: x[0], e)
+                               for e in seg_params],
+                              [jax.tree.map(lambda x: x[0], e)
+                               for e in seg_cache]))
+            ncs = [jax.tree.map(lambda x: x[None], c) for c in ncs]
+        else:
+            h, ncs = jax.lax.scan(body, h, (tuple(seg_params),
+                                            tuple(seg_cache)))
+        new_segments.append(ncs)
+    return logits, dict(segments=new_segments,
+                        pos=jnp.full((), S, jnp.int32))
+
+
+def _prefill_elem(spec: LayerSpec, p, cache, h, ctx: RunCtx, positions,
+                  vision):
+    cfg = ctx.cfg
+    hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+    b, s, _ = h.shape
+    if spec.kind in ("attn", "swa"):
+        xc = hn.astype(ctx.compute_dtype)
+        q = (xc @ p["wq"].astype(ctx.compute_dtype)).reshape(
+            b, s, cfg.num_heads, cfg.head_dim)
+        k = (xc @ p["wk"].astype(ctx.compute_dtype)).reshape(
+            b, s, cfg.num_kv_heads, cfg.head_dim)
+        v = (xc @ p["wv"].astype(ctx.compute_dtype)).reshape(
+            b, s, cfg.num_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = blockwise_attention(q, k, v, causal=True, window=spec.window,
+                                chunk=ctx.kv_chunk)
+        out = (o.reshape(b, s, -1) @ p["wo"].astype(ctx.compute_dtype)
+               ).astype(h.dtype)
+        h = h + out
+        L = cache["k"].shape[1]
+        if spec.window and s > L:          # ring: keep the last L entries
+            k_keep, v_keep = k[:, -L:], v[:, -L:]
+            # place so that slot == pos % L matches absolute positions
+            start = (s - L) % L
+            roll = jnp.roll(k_keep, start, axis=1)
+            rollv = jnp.roll(v_keep, start, axis=1)
+            cache = dict(k=roll.astype(cache["k"].dtype),
+                         v=rollv.astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k[:, :L].astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v[:, :L].astype(cache["v"].dtype), (0, 0, 0, 0))
+            cache = dict(k=ck, v=cv)
+    elif spec.kind == "cross":
+        ap = AttnParams(p["wq"], p["wk"], p["wv"], p["wo"])
+        h = h + cross_attention(ap, hn, vision, cfg, ctx.compute_dtype)
+        kvc = vision.astype(ctx.compute_dtype)
+        tv = kvc.shape[1]
+        k = (kvc @ p["wk"].astype(ctx.compute_dtype)).reshape(
+            b, tv, cfg.num_kv_heads, cfg.head_dim)
+        v = (kvc @ p["wv"].astype(ctx.compute_dtype)).reshape(
+            b, tv, cfg.num_kv_heads, cfg.head_dim)
+        cache = dict(k=k.astype(cache["k"].dtype),
+                     v=v.astype(cache["v"].dtype))
+    elif spec.kind == "mamba2":
+        out, cache = ssm_lib.mamba2_mix(p, hn, cfg,
+                                        compute_dtype=ctx.compute_dtype,
+                                        chunk=ctx.ssm_chunk,
+                                        state=jax.tree.map(
+                                            lambda x: x, cache))
+        h = h + out
+    elif spec.kind == "mlstm":
+        out, cache = ssm_lib.mlstm_mix(p, hn, cfg,
+                                       compute_dtype=ctx.compute_dtype,
+                                       chunk=ctx.ssm_chunk, state=cache)
+        h = h + out
+    elif spec.kind == "slstm":
+        out, cache = ssm_lib.slstm_mix(p, hn, cfg,
+                                       compute_dtype=ctx.compute_dtype,
+                                       state=cache)
+        h = h + out
+    aux = dict(load_balance=jnp.zeros((), jnp.float32),
+               router_z=jnp.zeros((), jnp.float32))
+    h, _ = _apply_ffn(spec, p, h, ctx, aux)
+    return h, cache, None

@@ -1,0 +1,274 @@
+"""Recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2's SSD and the mLSTM matrix memory are both instances of *gated
+linear attention*:   S_t = a_t · S_{t-1} + k_t v_tᵀ,   y_t = q_t · S_t
+with per-(step, head) scalar decay a_t ∈ (0,1].  :func:`gla_chunked`
+implements the chunkwise-parallel form (intra-chunk quadratic term +
+inter-chunk state carry, lax.scan over chunks) used for train/prefill;
+:func:`gla_step` is the O(1) recurrent form used for decode.  The Pallas
+kernel in :mod:`repro.kernels.gla_scan` mirrors ``gla_chunked`` exactly.
+
+Shapes: q,k: (B, L, H, Dk); v: (B, L, H, Dv); log_decay: (B, L, H) ≤ 0.
+State: (B, H, Dk, Dv), f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+def gla_chunked(q, k, v, log_decay, *, chunk: int = 256, state_in=None):
+    B, L, H, Dk = q.shape
+    Dv = v.shape[-1]
+    c = min(chunk, L)
+    Lp = ((L + c - 1) // c) * c
+    if Lp != L:
+        # pad with identity steps: decay=exp(0)=1 and k=v=0 leave the state
+        # untouched; padded y rows are sliced off below.
+        pad = [(0, 0), (0, Lp - L), (0, 0), (0, 0)]
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        log_decay = jnp.pad(log_decay, pad[:3])
+    L_orig, L = L, Lp
+    n = L // c
+    # q/k/v stay in their input dtype (bf16 on the production path, §Perf
+    # B3) — einsums accumulate in f32 via preferred_element_type; only the
+    # decay chain and the recurrent state are f32.
+    q = q.reshape(B, n, c, H, Dk)
+    k = k.reshape(B, n, c, H, Dk)
+    v = v.reshape(B, n, c, H, Dv)
+    ld = log_decay.astype(jnp.float32).reshape(B, n, c, H)
+    cum = jnp.cumsum(ld, axis=2)                       # (B,n,c,H) Σ_{j<=t}
+    if state_in is None:
+        state_in = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    idx = jnp.arange(c)
+    tri = idx[:, None] >= idx[None, :]                 # s <= t
+
+    def per_chunk(S, xs):
+        qc, kc, vc, cc = xs                            # (B,c,H,*)
+        # intra-chunk: y_t += Σ_{s<=t} exp(cum_t - cum_s) (q_t·k_s) v_s
+        att = jnp.einsum("bthd,bshd->bhts", qc, kc,
+                         preferred_element_type=jnp.float32)
+        decay = cc.transpose(0, 2, 1)[:, :, :, None] - cc.transpose(0, 2, 1)[:, :, None, :]
+        att = att * jnp.where(tri[None, None], jnp.exp(decay), 0.0)
+        y = jnp.einsum("bhts,bshd->bthd", att.astype(vc.dtype), vc,
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: y_t += exp(cum_t) q_t · S
+        qs = qc.astype(jnp.float32) * jnp.exp(cc)[..., None]
+        y = y + jnp.einsum("bthd,bhde->bthe", qs, S)
+        # state update: S' = exp(cum_c) S + Σ_s exp(cum_c - cum_s) k_s v_sᵀ
+        total = cc[:, -1]                              # (B,H)
+        kw = kc.astype(jnp.float32) * jnp.exp(total[:, None] - cc)[..., None]
+        S = (S * jnp.exp(total)[..., None, None]
+             + jnp.einsum("bshd,bshe->bhde", kw, vc.astype(jnp.float32)))
+        return S, y
+
+    xs = (q.transpose(1, 0, 2, 3, 4), k.transpose(1, 0, 2, 3, 4),
+          v.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3))
+    # checkpoint each chunk (§Perf iteration E1): backward recomputes the
+    # (c × c) intra matrices from the chunk inputs instead of stashing
+    # n_chunks of them — the same flash-attention memory property the
+    # blockwise-attention scan uses
+    S, ys = jax.lax.scan(jax.checkpoint(per_chunk), state_in, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H, Dv)
+    return y[:, :L_orig], S
+
+
+def gla_step(q, k, v, log_decay, state):
+    """One decode step.  q,k: (B,H,Dk); v: (B,H,Dv); log_decay: (B,H)."""
+    a = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    state = state * a + jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), state)
+    return y, state
+
+
+def gla_reference(q, k, v, log_decay, state_in=None):
+    """Step-by-step oracle for tests."""
+    B, L, H, Dk = q.shape
+    Dv = v.shape[-1]
+    S = (jnp.zeros((B, H, Dk, Dv), jnp.float32) if state_in is None
+         else state_in)
+    ys = []
+    for t in range(L):
+        y, S = gla_step(q[:, t], k[:, t], v[:, t], log_decay[:, t], S)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), S
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, L, Ch); w: (K, Ch).
+    With ``state`` (B, K-1, Ch) uses & returns the rolling buffer (decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out, new_state
+
+
+def mamba2_mix(p, x, cfg, *, compute_dtype=jnp.bfloat16, chunk=256,
+               state=None, step: bool = False):
+    """Mamba2 mixer.  x: (B,L,d) (or (B,1,d) with ``step=True``).
+
+    p: in_proj (d, 2·di + 2·G·N + H), conv_w (K, di + 2·G·N), dt_bias (H),
+       A_log (H), D (H), norm (di), out_proj (di, d).
+    state: None or dict(conv=(B,K-1,ch), ssd=(B,H,N,P)).
+    Returns (y, new_state).
+    """
+    B, L, d = x.shape
+    di, G, N = cfg.ssm_d_inner, cfg.ssm_n_groups, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    xc = x.astype(compute_dtype)
+    zxbcdt = xc @ p["in_proj"].astype(compute_dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xbc, conv_state = _causal_conv(xbc.astype(jnp.float32),
+                                   p["conv_w"].astype(jnp.float32),
+                                   None if state is None else state["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bmat, Cmat = jnp.split(xbc, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,) < 0
+    log_decay = dt * A                                            # (B,L,H)
+
+    v = xs.reshape(B, L, H, P)
+    rep = H // G
+    Bh = Bmat.reshape(B, L, G, N).repeat(rep, axis=2)
+    Ch = Cmat.reshape(B, L, G, N).repeat(rep, axis=2)
+    k = Bh * dt[..., None]                                        # dt-scaled
+    ssd_in = None if state is None else state["ssd"]
+    if step:
+        y, ssd = gla_step(Ch[:, 0], k[:, 0], v[:, 0], log_decay[:, 0], ssd_in)
+        y = y[:, None]
+    else:
+        y, ssd = gla_chunked(Ch, k, v, log_decay, chunk=chunk,
+                             state_in=ssd_in)
+    y = y + v.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, L, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"],
+                 cfg.norm_eps)
+    out = (y.astype(compute_dtype) @ p["out_proj"].astype(compute_dtype))
+    new_state = dict(conv=conv_state, ssd=ssd)
+    return out.astype(x.dtype), new_state
+
+
+def mamba2_init_state(cfg, batch: int):
+    di, G, N = cfg.ssm_d_inner, cfg.ssm_n_groups, cfg.ssm_state
+    ch = di + 2 * G * N
+    return dict(conv=jnp.zeros((batch, cfg.ssm_conv - 1, ch), jnp.float32),
+                ssd=jnp.zeros((batch, cfg.ssm_heads, N, cfg.ssm_head_dim),
+                              jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (chunkwise-parallel matrix LSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_mix(p, x, cfg, *, compute_dtype=jnp.bfloat16, chunk=256,
+              state=None, step: bool = False):
+    """mLSTM mixer with sigmoid forget/input gates and q·n normalizer
+    (tracked as an appended ones-column of v — DESIGN.md substrate notes).
+
+    p: wq, wk, wv (d, di), wf, wi (d, H), wo_gate (d, di), out_proj (di, d),
+       norm (di).
+    state: None or (B, H, dh, dh+1) f32.
+    """
+    B, L, d = x.shape
+    di = cfg.ssm_d_inner
+    H = cfg.num_heads
+    dh = di // H
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, L, H, dh)
+    k = (xc @ p["wk"].astype(compute_dtype)).reshape(B, L, H, dh) / (dh ** 0.5)
+    v = (xc @ p["wv"].astype(compute_dtype)).reshape(B, L, H, dh)
+    f = x.astype(jnp.float32) @ p["wf"].astype(jnp.float32)       # (B,L,H)
+    i = x.astype(jnp.float32) @ p["wi"].astype(jnp.float32)
+    log_decay = jax.nn.log_sigmoid(f)
+    k = k * jax.nn.sigmoid(i)[..., None].astype(compute_dtype)
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((B, L, H, 1), v.dtype)], -1)
+    if step:
+        y, S = gla_step(q[:, 0], k[:, 0], v_aug[:, 0], log_decay[:, 0], state)
+        y = y[:, None]
+    else:
+        y, S = gla_chunked(q, k, v_aug, log_decay, chunk=chunk,
+                           state_in=state)
+    num, den = y[..., :dh], y[..., dh:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    o = jax.nn.sigmoid(xc @ p["wo_gate"].astype(compute_dtype))
+    y = rms_norm(y.reshape(B, L, di), p["norm"], cfg.norm_eps)
+    y = y.astype(compute_dtype) * o
+    return (y @ p["out_proj"].astype(compute_dtype)).astype(x.dtype), S
+
+
+def mlstm_init_state(cfg, batch: int):
+    dh = cfg.ssm_d_inner // cfg.num_heads
+    return jnp.zeros((batch, cfg.num_heads, dh, dh + 1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar LSTM with exponential gating; strictly recurrent)
+# ---------------------------------------------------------------------------
+
+def slstm_mix(p, x, cfg, *, compute_dtype=jnp.bfloat16, state=None,
+              step: bool = False):
+    """sLSTM with the xLSTM stabilizer state m.
+
+    p: wx (d, 4d), r (H, dh, 4dh), b (4d), out_proj (d, d), norm (d).
+    state: None or dict(c,n,h,m) each (B, d) f32  (m: stabilizer).
+    Head-wise block-diagonal recurrence (H = cfg.num_heads).
+    """
+    B, L, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    if state is None:
+        state = slstm_init_state_d(d, B)
+    xg = x.astype(jnp.float32) @ p["wx"].astype(jnp.float32) + p["b"]
+
+    r = p["r"].astype(jnp.float32)                    # (H, dh, 4dh)
+
+    def cell(carry, g_t):
+        c, n, h, m = carry
+        hr = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hr, r).reshape(B, 4 * d)
+        g = g_t + rec
+        i_t, f_t, z_t, o_t = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(f_t + m, i_t)             # log-space stabilizer
+        c = jnp.exp(f_t + m - m_new) * c + jnp.exp(i_t - m_new) * jnp.tanh(z_t)
+        n = jnp.exp(f_t + m - m_new) * n + jnp.exp(i_t - m_new)
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    if step:
+        carry, h = cell((state["c"], state["n"], state["h"], state["m"]),
+                        xg[:, 0])
+        hs = h[:, None]
+    else:
+        carry, hs = jax.lax.scan(
+            cell, (state["c"], state["n"], state["h"], state["m"]),
+            xg.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+    c, n, h, m = carry
+    y = rms_norm(hs, p["norm"], cfg.norm_eps).astype(compute_dtype)
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out.astype(x.dtype), dict(c=c, n=n, h=h, m=m)
+
+
+def slstm_init_state_d(d: int, batch: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return dict(c=z, n=z, h=z, m=z)
+
+
+def slstm_init_state(cfg, batch: int):
+    return slstm_init_state_d(cfg.d_model, batch)

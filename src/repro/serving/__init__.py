@@ -1,0 +1,5 @@
+from .engine import BlockwiseExecutor, flatten_layers
+from .server import CoInferenceServer, Request, ServeReport
+
+__all__ = ["BlockwiseExecutor", "flatten_layers", "CoInferenceServer",
+           "Request", "ServeReport"]

@@ -1,0 +1,70 @@
+"""Block-partitioned execution engine for co-inference.
+
+The paper's runtime counterpart: a request's DNN pass is split at the J-DOB
+partition point ñ — the "device" computes blocks 1..ñ, ships the boundary
+activation, and the edge executes blocks ñ+1..N *batched* across users
+(greedy batching).  This module runs that split on the real JAX models so
+tests can assert the co-inference output equals the monolithic forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import RunCtx
+from repro.models.model import _apply_elem, rms_norm
+
+
+def flatten_layers(cfg: ArchConfig, params) -> list[tuple[Any, Any]]:
+    """Unstack the segmented params into a per-layer [(spec, params)] list
+    (serving-scale models only; training uses the scanned form)."""
+    out = []
+    for seg_params, (pattern, reps) in zip(params["segments"], cfg.plan):
+        for r in range(reps):
+            for spec, elem in zip(pattern, seg_params):
+                out.append((spec, jax.tree.map(lambda x: x[r], elem)))
+    return out
+
+
+@dataclasses.dataclass
+class BlockwiseExecutor:
+    """Runs arbitrary block ranges of a model — the engine the paper's
+    offloading needs (device prefix / edge suffix)."""
+    cfg: ArchConfig
+    params: Any
+    ctx: RunCtx = None
+
+    def __post_init__(self):
+        self.ctx = self.ctx or RunCtx(self.cfg, compute_dtype=jnp.float32,
+                                      ssm_chunk=16, kv_chunk=64)
+        self.layers = flatten_layers(self.cfg, self.params)
+
+    def embed(self, tokens):
+        h = jnp.take(self.params["embed"]["w"], tokens, axis=0)
+        return h.astype(self.ctx.stream)
+
+    def run_blocks(self, h, lo: int, hi: int, *, vision=None):
+        """Apply layers [lo, hi) to hidden states h (B, S, d)."""
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        aux = dict(load_balance=jnp.zeros((), jnp.float32),
+                   router_z=jnp.zeros((), jnp.float32))
+        for spec, p in self.layers[lo:hi]:
+            h, aux = _apply_elem(spec, p, h, self.ctx, positions, vision, aux)
+        return h
+
+    def head(self, h):
+        h = rms_norm(h, self.params["final_norm"], self.cfg.norm_eps)
+        w = (self.params["embed"]["w"].T if self.cfg.tie_embeddings
+             else self.params["lm_head"]["w"])
+        return (h.astype(self.ctx.compute_dtype)
+                @ w.astype(self.ctx.compute_dtype)).astype(jnp.float32)
+
+    def full_forward(self, tokens, *, vision=None):
+        return self.head(self.run_blocks(self.embed(tokens), 0,
+                                         len(self.layers), vision=vision))

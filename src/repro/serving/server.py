@@ -1,0 +1,122 @@
+"""Co-inference serving: J-DOB-scheduled multi-user batched execution.
+
+``CoInferenceServer`` is the system the paper describes, end to end:
+
+  1. ``M`` device requests arrive (tokens + per-user deadline β).
+  2. The outer OG module groups users by deadline; per group the J-DOB
+     inner module picks (ñ, M'_o, f_e, {f_m}).
+  3. Devices compute blocks 1..ñ on their inputs (executed here on the
+     same weights), "upload" the boundary activation, and the edge runs
+     blocks ñ+1..N as ONE batch (greedy batching) on the batched engine.
+  4. Local users run the whole model themselves.
+
+Outputs are bit-exact with the monolithic forward (tests assert this), and
+the returned report carries the cost-model energy/latency bookkeeping so
+examples can print the paper's tables from a live run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (DeviceFleet, EdgeProfile, Schedule, TaskProfile,
+                        jdob_schedule, optimal_grouping)
+from .engine import BlockwiseExecutor
+
+
+@dataclasses.dataclass
+class Request:
+    user: int
+    tokens: np.ndarray              # (S,) int32
+    deadline: float                 # seconds
+    vision: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class ServeReport:
+    logits: np.ndarray              # (M, S, V) — last block's output
+    schedules: list[Schedule]
+    groups: list[np.ndarray]
+    energy: float
+    per_user_energy: np.ndarray
+    batch_sizes: list[int]
+    partitions: list[int]
+    t_free_end: float
+
+
+class CoInferenceServer:
+    def __init__(self, cfg: ArchConfig, params, profile: TaskProfile,
+                 fleet: DeviceFleet, edge: EdgeProfile,
+                 inner: Callable = jdob_schedule, rho: float = 0.03e9):
+        self.cfg = cfg
+        self.executor = BlockwiseExecutor(cfg, params)
+        self.profile = profile
+        self.fleet = fleet
+        self.edge = edge
+        self.inner = inner
+        self.rho = rho
+        n_layers = len(self.executor.layers)
+        assert profile.N == n_layers, \
+            f"profile N={profile.N} vs layers={n_layers}"
+
+    # block index mapping: J-DOB block n ∈ {1..N} is transformer layer n
+    # (embedding folded into block 1, LM head into block N — matching
+    # core.task_model.profile_from_arch).
+    def _run_schedule(self, requests: list[Request], sched: Schedule):
+        ex = self.executor
+        tokens = jnp.asarray(np.stack([r.tokens for r in requests]))
+        vision = None
+        if requests[0].vision is not None:
+            vision = jnp.asarray(np.stack([r.vision for r in requests]))
+        n_layers = len(ex.layers)
+        nt = sched.partition
+        h = ex.embed(tokens)
+        out = np.zeros((len(requests),) + h.shape[1:-1]
+                       + (self.cfg.vocab_size,), np.float32)
+
+        off = sched.offload
+        loc = ~off
+        if loc.any():
+            hl = ex.run_blocks(h[loc], 0, n_layers,
+                               vision=None if vision is None
+                               else vision[loc])
+            out[np.where(loc)[0]] = np.asarray(ex.head(hl))
+        if off.any():
+            # device side: blocks 1..nt  (nt layers of the transformer,
+            # capped at n_layers — block N is the head, edge-only here)
+            dev_hi = min(nt, n_layers)
+            ho = ex.run_blocks(h[off], 0, dev_hi,
+                               vision=None if vision is None
+                               else vision[off])
+            # "upload" boundary activation; edge batches the suffix
+            ho = ex.run_blocks(ho, dev_hi, n_layers,
+                               vision=None if vision is None
+                               else vision[off])
+            out[np.where(off)[0]] = np.asarray(ex.head(ho))
+        return out
+
+    def serve(self, requests: list[Request], t_free: float = 0.0
+              ) -> ServeReport:
+        fleet = dataclasses.replace(
+            self.fleet,
+            deadline=np.asarray([r.deadline for r in requests]))
+        grouped = optimal_grouping(self.profile, fleet, self.edge,
+                                   inner=self.inner, t_free=t_free,
+                                   rho=self.rho)
+        S = len(requests[0].tokens)
+        logits = np.zeros((len(requests), S, self.cfg.vocab_size),
+                          np.float32)
+        for g, sched in zip(grouped.groups, grouped.schedules):
+            sub = [requests[i] for i in g]
+            logits[g] = self._run_schedule(sub, sched)
+        return ServeReport(
+            logits=logits, schedules=grouped.schedules,
+            groups=grouped.groups, energy=grouped.energy,
+            per_user_energy=grouped.per_user_energy,
+            batch_sizes=[s.batch_size for s in grouped.schedules],
+            partitions=[s.partition for s in grouped.schedules],
+            t_free_end=grouped.t_free_end)

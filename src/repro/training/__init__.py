@@ -1,0 +1,6 @@
+from .optimizer import (AdamWConfig, adamw_update, cosine_lr, global_norm,
+                        init_opt_state)
+from .train import lm_loss, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_update", "cosine_lr", "global_norm",
+           "init_opt_state", "lm_loss", "make_train_step"]

@@ -1,0 +1,49 @@
+"""Training step: next-token CE loss (+ MoE aux), grad, AdamW update."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import RunCtx, forward
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def lm_loss(cfg: ArchConfig, params, batch, ctx: RunCtx,
+            lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """batch: dict(tokens (B,S), labels (B,S), mask (B,S)) — labels are the
+    next-token targets (already shifted by the data pipeline)."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          vision=batch.get("vision"), ctx=ctx)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                             axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    n_moe = max(1, sum(r for p, r in cfg.plan
+                       for s in p if s.ffn == "moe"))
+    loss = (ce + lb_coef * aux["load_balance"] / n_moe
+            + z_coef * aux["router_z"] / n_moe)
+    return loss, dict(ce=ce, **aux)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    ctx: RunCtx | None = None):
+    ctx = ctx or RunCtx(cfg, remat=True)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch, ctx), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, dict(loss=loss, **metrics, **opt_metrics)
+
+    return train_step
+
+
+__all__ = ["lm_loss", "make_train_step", "AdamWConfig", "init_opt_state"]

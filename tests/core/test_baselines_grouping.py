@@ -1,0 +1,104 @@
+"""Baselines, OG grouping, task profiles, cost-model calibration."""
+import numpy as np
+import pytest
+
+from repro.core import (ip_ssa, jdob_schedule, local_computing,
+                        make_edge_profile, make_fleet, mobilenet_v2_profile,
+                        optimal_grouping, single_group)
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+
+
+def test_mobilenet_profile_matches_paper_fig2():
+    # N = 10 sub-tasks: conv1, B1..B7, conv2, cls (Fig. 2)
+    assert PROF.N == 10
+    assert PROF.block_names == ("input", "conv1", "B1", "B2", "B3", "B4",
+                                "B5", "B6", "B7", "conv2", "cls")
+    # output shapes of Fig. 2 (fp32 bytes)
+    shapes = [224 * 224 * 3, 112 * 112 * 32, 112 * 112 * 16, 56 * 56 * 24,
+              28 * 28 * 32, 14 * 14 * 64, 14 * 14 * 96, 7 * 7 * 160,
+              7 * 7 * 320, 7 * 7 * 1280, 1000]
+    np.testing.assert_allclose(PROF.O, np.array(shapes) * 4.0)
+    # MobileNetV2(1.0)@224 is ~300M MACs = ~0.6 GFLOPs
+    assert 0.55e9 < PROF.total_flops < 0.65e9
+
+
+def test_fleet_calibration_alpha_eta():
+    fleet = make_fleet(4, PROF, EDGE, beta=1.0, alpha=1.0, eta=0.6, seed=0)
+    edge_lat = EDGE.batch_latency(PROF, 0, 1, EDGE.f_max)
+    np.testing.assert_allclose(fleet.local_latency(PROF), edge_lat, rtol=1e-9)
+    edge_pow = EDGE.batch_energy(PROF, 0, 1, EDGE.f_max) / edge_lat
+    local_pow = fleet.local_energy(PROF) / fleet.local_latency(PROF)
+    np.testing.assert_allclose(local_pow, 0.6 * edge_pow, rtol=1e-9)
+
+
+def test_edge_profile_fig3_shape():
+    """Fig. 3: total latency/energy increase with b; per-sample decrease."""
+    bs = np.array([1, 2, 4, 8, 16, 32, 64])
+    lat = np.array([EDGE.batch_latency(PROF, 0, b, EDGE.f_max) for b in bs])
+    en = np.array([EDGE.batch_energy(PROF, 0, b, EDGE.f_max) for b in bs])
+    assert np.all(np.diff(lat) > 0) and np.all(np.diff(en) > 0)
+    assert np.all(np.diff(lat / bs) < 0) and np.all(np.diff(en / bs) < 0)
+
+
+def test_ip_ssa_feasible_and_poor_at_small_m():
+    """§IV-A: IP-SSA is poor at small M (GPU energy inefficiency at b=1)."""
+    fleet = make_fleet(2, PROF, EDGE, beta=2.13, seed=0)
+    ip = ip_ssa(PROF, fleet, EDGE)
+    lc = local_computing(PROF, fleet, EDGE)
+    jd = jdob_schedule(PROF, fleet, EDGE)
+    assert ip.energy > lc.energy          # the paper's observed pathology
+    assert jd.energy <= lc.energy * (1 + 1e-9)
+
+
+def test_grouping_different_deadlines_beats_single_group():
+    """With widely different deadlines, OG grouping should (weakly) beat
+    one giant group, and every group schedule must chain t_free."""
+    fleet = make_fleet(10, PROF, EDGE, beta=(0.0, 10.0), seed=3)
+    one = single_group(PROF, fleet, EDGE)
+    og = optimal_grouping(PROF, fleet, EDGE)
+    assert og.energy <= one.energy * (1 + 1e-9)
+    # groups are contiguous in deadline order and cover everyone exactly once
+    all_members = np.concatenate(og.groups)
+    assert sorted(all_members.tolist()) == list(range(10))
+    # t_free chains monotonically
+    tf = 0.0
+    for s in og.schedules:
+        assert s.t_free_end >= tf - 1e-12
+        tf = s.t_free_end
+
+
+def test_grouping_identical_deadlines_collapses_to_one_group():
+    fleet = make_fleet(8, PROF, EDGE, beta=5.0, seed=0)
+    og = optimal_grouping(PROF, fleet, EDGE)
+    one = single_group(PROF, fleet, EDGE)
+    assert og.energy == pytest.approx(one.energy, rel=1e-6)
+
+
+def test_per_user_energy_sums_to_device_plus_uplink():
+    fleet = make_fleet(6, PROF, EDGE, beta=5.0, seed=1)
+    s = jdob_schedule(PROF, fleet, EDGE)
+    assert s.per_user_energy.sum() == pytest.approx(
+        s.terms["device"] + s.terms["uplink"], rel=1e-4)
+    assert s.energy == pytest.approx(
+        sum(s.terms.values()), rel=1e-6)
+
+
+def test_tpu_v5e_edge_profile():
+    """The analytic v5e profile (DESIGN.md §3.2) has the Fig.-3 shape and
+    supports scheduling under phone-vs-TPU calibration."""
+    from repro.core import jdob_schedule, make_tpu_v5e_edge_profile
+    v5e = make_tpu_v5e_edge_profile(PROF, param_bytes=3.4e6 * 2)
+    import numpy as np
+    bs = np.array([1, 4, 16, 64])
+    lat = np.array([v5e.batch_latency(PROF, 0, b, v5e.f_max) for b in bs])
+    en = np.array([v5e.batch_energy(PROF, 0, b, v5e.f_max) for b in bs])
+    assert np.all(np.diff(lat) > 0) and np.all(np.diff(en) > 0)
+    assert np.all(np.diff(lat / bs) < 0) and np.all(np.diff(en / bs) < 0)
+    fleet = make_fleet(8, PROF, v5e, beta=10.0, alpha=40.0, eta=0.015,
+                       seed=0)
+    s = jdob_schedule(PROF, fleet, v5e)
+    lc = local_computing(PROF, fleet, v5e)
+    assert s.energy < lc.energy * 0.75       # real savings on the TPU edge
+    assert 0 < s.partition < PROF.N          # genuine co-inference split

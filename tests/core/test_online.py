@@ -1,0 +1,81 @@
+"""Online scheduler (paper future work): correctness and dominance."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (all_local_energy, make_edge_profile, make_fleet,
+                        mobilenet_v2_profile, oracle_bound, poisson_arrivals,
+                        simulate_online)
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+
+
+def _setup(M=8, beta=20.0, rate=100.0, seed=0):
+    fleet = make_fleet(M, PROF, EDGE, beta=beta, seed=seed)
+    arrivals = poisson_arrivals(M, rate, fleet, seed=seed)
+    return fleet, arrivals
+
+
+@pytest.mark.parametrize("policy", ["immediate", "window", "slack",
+                                    "lastcall"])
+def test_no_deadline_violations_and_all_served(policy):
+    fleet, arrivals = _setup()
+    r = simulate_online(arrivals, PROF, fleet, EDGE, policy=policy,
+                        window=0.02)
+    assert r.violations == 0
+    assert np.all(r.per_user_energy > 0)          # everyone served
+    assert sum(r.batch_sizes) <= fleet.M
+
+
+@pytest.mark.parametrize("rate", [10.0, 100.0, 1000.0])
+def test_online_never_beats_oracle(rate):
+    fleet, arrivals = _setup(rate=rate)
+    orc = oracle_bound(arrivals, PROF, fleet, EDGE)
+    for policy in ("immediate", "window", "slack"):
+        r = simulate_online(arrivals, PROF, fleet, EDGE, policy=policy,
+                            window=0.02)
+        assert r.energy >= orc * (1 - 1e-6), policy
+
+
+@pytest.mark.parametrize("rate", [10.0, 100.0, 1000.0])
+def test_slack_policy_beats_lc_and_tracks_oracle(rate):
+    fleet, arrivals = _setup(rate=rate)
+    lc = all_local_energy(arrivals, PROF, fleet, EDGE)
+    orc = oracle_bound(arrivals, PROF, fleet, EDGE)
+    r = simulate_online(arrivals, PROF, fleet, EDGE, policy="slack")
+    assert r.energy < lc                          # online still saves energy
+    assert r.energy <= orc * 1.10                 # within 10% of clairvoyant
+
+
+def test_batches_grow_with_arrival_rate():
+    fleet_lo, arr_lo = _setup(rate=5.0, seed=3)
+    fleet_hi, arr_hi = _setup(rate=2000.0, seed=3)
+    r_lo = simulate_online(arr_lo, PROF, fleet_lo, EDGE, policy="slack")
+    r_hi = simulate_online(arr_hi, PROF, fleet_hi, EDGE, policy="slack")
+    assert max(r_hi.batch_sizes) > max(r_lo.batch_sizes)
+
+
+def test_gpu_occupancy_threads_between_flushes():
+    """Two dense bursts: the second flush must respect the GPU time the
+    first one booked (no overlapping batches)."""
+    fleet, _ = _setup(M=8)
+    from repro.core import OnlineArrival
+    arrivals = ([OnlineArrival(m, 0.0, float(fleet.deadline[m]))
+                 for m in range(4)]
+                + [OnlineArrival(m, 1e-4, float(fleet.deadline[m]))
+                   for m in range(4, 8)])
+    r = simulate_online(arrivals, PROF, fleet, EDGE, policy="immediate")
+    assert r.violations == 0
+    assert len(r.flush_times) >= 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(M=st.integers(2, 10), rate=st.floats(5.0, 2000.0),
+       beta=st.floats(8.0, 40.0), seed=st.integers(0, 999))
+def test_property_online_feasible_any_traffic(M, rate, beta, seed):
+    fleet = make_fleet(M, PROF, EDGE, beta=beta, seed=seed)
+    arrivals = poisson_arrivals(M, rate, fleet, seed=seed)
+    r = simulate_online(arrivals, PROF, fleet, EDGE, policy="slack")
+    assert r.violations == 0
+    assert r.energy >= oracle_bound(arrivals, PROF, fleet, EDGE) * (1 - 1e-6)

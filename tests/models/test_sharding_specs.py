@@ -1,0 +1,82 @@
+"""Sharding-spec metadata validation for every architecture — pure
+shape/spec reasoning, no mesh or compile needed.  Catches divisibility
+regressions (e.g. a config change that breaks the 16-way model axis)
+before the expensive dry-run does."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.core import profile_from_arch
+from repro.models import cache_specs, init_cache, init_params, param_specs
+
+ARCH_IDS = sorted(ARCHS)
+AXIS = 16
+
+
+def _check_tree(shapes, specs, axis_sizes):
+    flat_shapes = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_specs = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(flat_shapes) == len(flat_specs)
+    for (path, leaf), spec in zip(flat_shapes, flat_specs):
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        for dim, part in enumerate(spec):
+            if part is None:
+                continue
+            parts = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([axis_sizes[p] for p in parts]))
+            assert leaf.shape[dim] % size == 0, \
+                f"{jax.tree_util.keystr(path)} dim{dim}={leaf.shape[dim]} " \
+                f"not divisible by {part}({size})"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_divisible(arch, fsdp):
+    cfg = ARCHS[arch]
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, axis_size=AXIS,
+                        fsdp_axis="data" if fsdp else None, fsdp_size=AXIS)
+    _check_tree(shapes, specs, {"model": AXIS, "data": AXIS})
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    from repro.launch.specs import effective_config
+    shape = SHAPES[shape_name]
+    cfg = effective_config(ARCHS[arch], shape)
+    b = shape.global_batch
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, b, shape.seq_len, dtype=jnp.bfloat16))
+    specs = cache_specs(cfg, b, shape.seq_len, data_axes="data",
+                        axis_size=AXIS, shard_len=(b == 1))
+    _check_tree(shapes, specs, {"model": AXIS, "data": AXIS})
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_profile_from_arch_invariants(arch):
+    cfg = ARCHS[arch]
+    for mode in ("prefill", "decode"):
+        p = profile_from_arch(cfg, seq=2048, mode=mode)
+        assert p.N == cfg.num_layers
+        assert p.A[0] == 0 and np.all(p.A[1:] > 0)
+        assert np.all(p.O > 0)
+        assert np.all(np.isfinite(p.A)) and np.all(np.isfinite(p.O))
+    # decode hand-off suffix is non-increasing over partition points 0..N-1
+    pd = profile_from_arch(cfg, seq=2048, mode="decode")
+    assert np.all(np.diff(pd.O[:-1]) <= 1e-9)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_context_variant_is_subquadratic(arch):
+    """Every arch must have a long_500k-legal config: either no full
+    attention or the +swa variant (DESIGN.md §4)."""
+    from repro.launch.specs import effective_config
+    cfg = effective_config(ARCHS[arch], SHAPES["long_500k"])
+    assert all(s.kind != "attn" for s in cfg.layer_sequence()), cfg.name
+    for s in cfg.layer_sequence():
+        if s.kind == "swa":
+            assert s.window and s.window <= 8192

@@ -1,0 +1,45 @@
+"""The runnable examples must actually run (deliverable b)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(script, timeout=600):
+    proc = subprocess.run([sys.executable, os.path.join(REPO, script)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=ENV, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return proc.stdout
+
+
+def test_quickstart():
+    out = _run("examples/quickstart.py")
+    assert "% saved" in out
+
+
+@pytest.mark.slow
+def test_co_inference_serve():
+    out = _run("examples/co_inference_serve.py", timeout=900)
+    assert "outputs verified exact" in out
+
+
+@pytest.mark.slow
+def test_jdob_for_llms():
+    out = _run("examples/jdob_for_llms.py", timeout=900)
+    assert "zamba2-7b" in out
+
+
+@pytest.mark.slow
+def test_train_lm_loss_decreases():
+    out = _run("examples/train_lm.py", timeout=1200)
+    assert "reduction" in out
+
+
+def test_online_serving():
+    out = _run("examples/online_serving.py")
+    assert "oracle" in out
