@@ -1,0 +1,102 @@
+"""Old-vs-new optimal-grouping wall-clock benchmark.
+
+Compares the seed sequential DP (``optimal_grouping_reference``: one jit
+dispatch per contiguous segment, one XLA recompile per distinct segment
+size) against the batched level-synchronous planner (``optimal_grouping``:
+one compiled shape per fleet, M small padded dispatches) on the paper's two
+grouping scenarios:
+
+* identical deadlines (β = 2.13, §IV-A — OG collapses to one group)
+* different deadlines (β ~ U(0, 10), §IV-B — OG splits the fleet)
+
+Each (implementation, M, scenario) measurement runs in a FRESH subprocess
+so neither side inherits the other's (or a previous size's) XLA compile
+cache — wall-clock includes everything a cold planner pays.  Energies must
+be IDENTICAL (the batched core is bitwise padding-invariant and the level
+solver replays the sequential DP's exact solves); the bench exits non-zero
+on any mismatch.
+
+  PYTHONPATH=src python benchmarks/planner_bench.py            # M = 10..80
+  PYTHONPATH=src python benchmarks/planner_bench.py --dry-run  # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+SCENARIOS = ("identical-deadline", "different-deadline")
+
+
+def _measure(impl: str, M: int, scenario: str, seed: int) -> None:
+    """Child-process entry: one cold planning run, prints TIME/ENERGY."""
+    import time
+
+    from repro.core import (make_edge_profile, make_fleet,
+                            mobilenet_v2_profile, optimal_grouping,
+                            optimal_grouping_reference)
+
+    prof = mobilenet_v2_profile()
+    edge = make_edge_profile(prof)
+    beta = 2.13 if scenario == "identical-deadline" else (0.0, 10.0)
+    fleet = make_fleet(M, prof, edge, beta=beta, seed=seed)
+    fn = optimal_grouping if impl == "new" else optimal_grouping_reference
+    t0 = time.perf_counter()
+    g = fn(prof, fleet, edge)
+    dt = time.perf_counter() - t0
+    print(f"TIME {dt:.6f} ENERGY {g.energy!r}")
+
+
+def _spawn(impl: str, M: int, scenario: str, seed: int) -> tuple[float, float]:
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--measure", impl,
+         str(M), scenario, "--seed", str(seed)],
+        capture_output=True, text=True, check=True, env=os.environ)
+    for line in out.stdout.splitlines():
+        if line.startswith("TIME "):
+            _, t, _, e = line.split()
+            return float(t), float(e)
+    raise RuntimeError(f"no measurement in child output:\n{out.stdout}\n"
+                       f"{out.stderr}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[10, 20, 40, 80],
+                    help="fleet sizes M to benchmark")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes for CI (correctness + wiring only)")
+    ap.add_argument("--measure", nargs=3, metavar=("IMPL", "M", "SCENARIO"),
+                    help=argparse.SUPPRESS)     # internal child mode
+    args = ap.parse_args(argv)
+    if args.measure:
+        impl, M, scenario = args.measure
+        _measure(impl, int(M), scenario, args.seed)
+        return 0
+
+    sizes = [4, 6] if args.dry_run else args.sizes
+    print(f"{'M':>4} {'scenario':<20} {'seed DP (s)':>12} "
+          f"{'batched (s)':>12} {'speedup':>8}  energy")
+    failures = 0
+    for M in sizes:
+        for scenario in SCENARIOS:
+            t_new, e_new = _spawn("new", M, scenario, args.seed)
+            t_ref, e_ref = _spawn("ref", M, scenario, args.seed)
+            same = e_new == e_ref
+            if not same:
+                failures += 1
+            print(f"{M:>4} {scenario:<20} {t_ref:>12.2f} {t_new:>12.2f} "
+                  f"{t_ref / max(t_new, 1e-9):>7.1f}x  "
+                  f"{e_new:.9g}"
+                  f"{'' if same else '  ENERGY MISMATCH vs ' + repr(e_ref)}")
+    if failures:
+        print(f"{failures} energy mismatch(es) between seed and batched "
+              f"planner", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""Reproduction of "Joint Optimization of Offloading, Batching and DVFS for
+Multiuser Co-Inference" on a JAX/Pallas serving stack."""
+
+__version__ = "0.1.0"

@@ -15,7 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from .cost_models import DeviceFleet, EdgeProfile
-from .jdob import Schedule, jdob_schedule
+from .jdob import BatchedPlanner, Schedule, jdob_schedule
 from .task_model import TaskProfile
 
 
@@ -39,18 +39,35 @@ def jdob_binary(profile, fleet, edge, t_free=0.0, rho=0.03e9):
                          partitions=[0, profile.N])
 
 
+#: the J-DOB+ ordering portfolio (see jdob_plus)
+JDOB_PLUS_SORT_KEYS = ("gamma", "budget", "energy")
+
+
 def jdob_plus(profile, fleet, edge, t_free=0.0, rho=0.03e9):
     """Beyond-paper portfolio: J-DOB under three user orderings — the
     paper's γ (latency cost), budget T_m − γ_m (heterogeneous deadlines),
     and local-energy (κ/ζ-heterogeneous fleets, where the paper's ordering
     is energy-blind).  Same asymptotic cost (3 sweeps), never worse than
-    faithful J-DOB."""
-    best = None
-    for key in ("gamma", "budget", "energy"):
-        s = jdob_schedule(profile, fleet, edge, t_free, rho, sort_key=key)
-        if best is None or s.energy < best.energy:
-            best = s
-    return best
+    faithful J-DOB.  Runs through the batched planner's portfolio combine
+    (ties keep the earlier key, matching the sequential loop it replaces)."""
+    planner = BatchedPlanner(profile, edge, rho=rho,
+                             sort_keys=JDOB_PLUS_SORT_KEYS)
+    return planner.plan([fleet], [t_free], pad_users=False)[0]
+
+
+def planner_spec(inner, profile: TaskProfile) -> dict | None:
+    """BatchedPlanner constructor kwargs replicating ``inner``, or ``None``
+    when ``inner`` is an arbitrary callable the batched core cannot mirror
+    (callers then fall back to sequential per-group solves)."""
+    if inner is jdob_schedule:
+        return dict(sort_keys=("gamma",))
+    if inner is jdob_plus:
+        return dict(sort_keys=JDOB_PLUS_SORT_KEYS)
+    if inner is jdob_no_edge_dvfs:
+        return dict(sort_keys=("gamma",), edge_dvfs=False)
+    if inner is jdob_binary:
+        return dict(sort_keys=("gamma",), partitions=[0, profile.N])
+    return None
 
 
 def ip_ssa(profile: TaskProfile, fleet: DeviceFleet, edge: EdgeProfile,

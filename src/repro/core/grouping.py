@@ -5,11 +5,32 @@ served in deadline order, each occupying the edge GPU from the previous
 group's ``t_free`` (Eq. 22 threads through).  A dynamic program over prefix
 boundaries picks the grouping that minimizes total energy.
 
+Two implementations:
+
+* :func:`optimal_grouping` — the production path.  All O(M²) contiguous
+  segments of the deadline-sorted fleet are enumerated up front, then
+  solved by the **batched** J-DOB core
+  (:class:`repro.core.jdob.BatchedPlanner`) level-synchronously: the DP is
+  lower-triangular in the prefix end j, so once dp[0..j-1] are final the
+  threaded ``t_free`` of every segment ending at j is known, and all of
+  level j's (segment, t_free) solves go through ONE padded batched
+  dispatch.  Group count and user width pad to a common power-of-two
+  bucket, so an entire fleet plans against a single compiled shape in M
+  small dispatches — versus the seed's O(M²) dispatches and one XLA
+  recompile per distinct segment size.  The level solver consumes exactly
+  the (segment, t_free) pairs the sequential DP consumes, with the same
+  memo keys and tie-breaks, and the batched core is bitwise
+  padding-invariant, so the result matches
+  :func:`optimal_grouping_reference` bit for bit.
+* :func:`optimal_grouping_reference` — the seed's sequential DP (one
+  ``inner`` call per (segment, t_free) with per-prefix threading), kept as
+  the benchmark baseline, the test oracle, and the fallback for arbitrary
+  ``inner`` callables the batched core cannot mirror.
+
 Note (documented deviation): the exact DP state would carry the continuous
-``t_free``; like [10] we keep the scalar DP over prefixes, storing the
-(energy, t_free) of the best split per prefix — optimal when inner costs are
-monotone in ``t_free`` (they are: a later GPU start can only shrink the
-feasible set), and empirically tight in the paper's regime.
+``t_free``; like [10] we keep the scalar DP over prefixes — optimal when
+inner costs are monotone in ``t_free`` (they are: a later GPU start can
+only shrink the feasible set), and empirically tight in the paper's regime.
 """
 from __future__ import annotations
 
@@ -18,8 +39,9 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from .baselines import planner_spec
 from .cost_models import DeviceFleet
-from .jdob import Schedule, jdob_schedule
+from .jdob import BatchedPlanner, Schedule, _bucket, jdob_schedule
 
 
 @dataclasses.dataclass
@@ -38,10 +60,137 @@ class GroupedSchedule:
         return out
 
 
+def _run_dp(M: int, t_free: float, solve, level_prefetch=None
+            ) -> list[tuple[int, int]]:
+    """The shared prefix DP: ``dp[j] = (energy, t_free, split i)`` for
+    users [0, j), folding ``solve(i, j, tf_i)`` with ascending-``i``
+    tie-breaks.  ``level_prefetch(j, dp)``, when given, runs before level j
+    folds so a batched backend can warm every (i, j, tf_i) solve at once.
+    Returns the chain of contiguous segments covering [0, M).  Both
+    grouping implementations run THIS function — their bit-for-bit parity
+    is structural, not coincidental."""
+    INF = np.inf
+    dp: list[tuple[float, float, int]] = [(0.0, t_free, -1)]
+    for j in range(1, M + 1):
+        if level_prefetch is not None:
+            level_prefetch(j, dp)
+        best = (INF, t_free, 0)
+        for i in range(j):
+            e_i, tf_i, _ = dp[i]
+            if not np.isfinite(e_i):
+                continue
+            s = solve(i, j, tf_i)
+            cand = e_i + s.energy
+            if cand < best[0]:
+                best = (cand, s.t_free_end, i)
+        dp.append(best)
+    chain: list[tuple[int, int]] = []
+    j = M
+    while j > 0:
+        i = dp[j][2]
+        chain.append((i, j))
+        j = i
+    chain.reverse()
+    return chain
+
+
+def _collect_chain(chain, order, solve, t_free: float) -> GroupedSchedule:
+    """Walk the DP-selected chain threading t_free exactly (Eq. 22)."""
+    groups, schedules = [], []
+    tf = t_free
+    total = 0.0
+    for (i, j) in chain:
+        s = solve(i, j, tf)
+        groups.append(order[i:j])
+        schedules.append(s)
+        total += s.energy
+        tf = s.t_free_end
+    return GroupedSchedule(total, groups, schedules, tf)
+
+
 def optimal_grouping(profile, fleet: DeviceFleet, edge,
                      inner: Callable = jdob_schedule,
                      t_free: float = 0.0, rho: float = 0.03e9,
-                     max_groups: int | None = None) -> GroupedSchedule:
+                     max_groups: int | None = None,
+                     planner: BatchedPlanner | None = None
+                     ) -> GroupedSchedule:
+    """OG over the deadline-sorted fleet.  ``inner`` picks the per-group
+    solver; the J-DOB family routes through the batched planner (pass a
+    prebuilt ``planner`` to reuse its compiled shapes across calls), other
+    callables fall back to :func:`optimal_grouping_reference`.
+    ``max_groups`` is accepted for API compatibility and, as in the seed
+    implementation, not enforced (the DP picks the group count freely)."""
+    spec = planner_spec(inner, profile)
+    if spec is None:
+        # ``inner`` is authoritative: an arbitrary callable always takes
+        # the sequential path, even when a prebuilt planner was supplied
+        return optimal_grouping_reference(profile, fleet, edge, inner,
+                                          t_free, rho, max_groups)
+    if planner is None:
+        planner = BatchedPlanner(profile, edge, rho=rho, **spec)
+    else:
+        # a prebuilt planner takes over solving, so it must actually
+        # replicate the requested inner/rho — fail loudly on disagreement
+        # instead of returning plausible-but-wrong energies
+        want_parts = spec.get("partitions")
+        assert (planner.sort_keys == tuple(spec.get("sort_keys", ("gamma",)))
+                and planner.edge_dvfs == spec.get("edge_dvfs", True)
+                and planner.partitions == (None if want_parts is None
+                                           else tuple(want_parts))
+                and planner.rho == rho), \
+            "prebuilt planner configuration disagrees with inner/rho"
+
+    M = fleet.M
+    order = np.argsort(fleet.deadline, kind="stable")
+    sorted_fleet = fleet.subset(order)
+
+    # enumerate ALL contiguous segments of the sorted fleet up front
+    sub = {(i, j): sorted_fleet.subset(np.arange(i, j))
+           for i in range(M) for j in range(i + 1, M + 1)}
+    # one compiled shape for the whole fleet: every level dispatch pads
+    # groups and users to the same power-of-two bucket
+    pad = _bucket(M, planner.min_user_bucket)
+    # cache keyed exactly like the sequential DP's memo: (i, j, round(tf, 9))
+    cache: dict[tuple[int, int, float], Schedule] = {}
+
+    def solve_many(pairs: Sequence[tuple[int, int, float]]):
+        plans = planner.plan([sub[(i, j)] for (i, j, _) in pairs],
+                             [tf for (_, _, tf) in pairs],
+                             m_pad=pad, g_pad=min(pad, planner.group_chunk))
+        for (i, j, tf), p in zip(pairs, plans):
+            cache[(i, j, round(tf, 9))] = p
+
+    def solve(i: int, j: int, tf: float) -> Schedule:
+        key = (i, j, round(tf, 9))
+        if key not in cache:
+            solve_many([(i, j, tf)])
+        return cache[key]
+
+    def level_prefetch(j: int, dp) -> None:
+        # level-synchronous batching: when level j folds, dp[0..j-1] are
+        # final, so the threaded t_free of every candidate segment (i, j)
+        # is known — warm all of the level's missing solves in ONE
+        # batched dispatch
+        need = []
+        for i in range(j):
+            e_i, tf_i, _ = dp[i]
+            if np.isfinite(e_i) and (i, j, round(tf_i, 9)) not in cache:
+                need.append((i, j, tf_i))
+        if need:
+            solve_many(need)
+
+    chain = _run_dp(M, t_free, solve, level_prefetch)
+    return _collect_chain(chain, order, solve, t_free)
+
+
+def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
+                               inner: Callable = jdob_schedule,
+                               t_free: float = 0.0, rho: float = 0.03e9,
+                               max_groups: int | None = None
+                               ) -> GroupedSchedule:
+    """The seed's sequential DP: one ``inner`` dispatch per (segment,
+    t_free) with per-prefix t_free threading.  O(M²) dispatches — kept as
+    the benchmark baseline / oracle and the arbitrary-``inner`` fallback."""
     M = fleet.M
     order = np.argsort(fleet.deadline, kind="stable")
     sorted_fleet = fleet.subset(order)
@@ -56,40 +205,8 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
                                edge, t_free=tf, rho=rho)
         return cache[key]
 
-    INF = np.inf
-    # dp[j] = (energy, t_free, split point i) for users [0, j)
-    dp: list[tuple[float, float, int]] = [(0.0, t_free, -1)]
-    for j in range(1, M + 1):
-        best = (INF, t_free, 0)
-        for i in range(j):
-            e_i, tf_i, _ = dp[i]
-            if not np.isfinite(e_i):
-                continue
-            s = solve(i, j, tf_i)
-            cand = e_i + s.energy
-            if cand < best[0]:
-                best = (cand, s.t_free_end, i)
-        dp.append(best)
-
-    # reconstruct
-    groups_sorted: list[tuple[int, int]] = []
-    j = M
-    while j > 0:
-        i = dp[j][2]
-        groups_sorted.append((i, j))
-        j = i
-    groups_sorted.reverse()
-
-    groups, schedules = [], []
-    tf = t_free
-    total = 0.0
-    for (i, j) in groups_sorted:
-        s = solve(i, j, tf)
-        groups.append(order[i:j])
-        schedules.append(s)
-        total += s.energy
-        tf = s.t_free_end
-    return GroupedSchedule(total, groups, schedules, tf)
+    chain = _run_dp(M, t_free, solve)
+    return _collect_chain(chain, order, solve, t_free)
 
 
 def single_group(profile, fleet, edge, inner=jdob_schedule,

@@ -1,16 +1,30 @@
 """J-DOB: Joint DVFS, Offloading and Batching (paper Alg. 1 + Alg. 2).
 
-Two implementations:
+Three layers:
 
-* :func:`jdob_schedule` — the production path: fully vectorized JAX. The
-  paper's outer loop over partition points ñ (Alg. 1 line 3) is a ``vmap``;
-  the edge-frequency sweep (Alg. 2 lines 6-24) is a dense (ñ × k × M)
-  tensor evaluation.  The paper's monotone-pointer update of the greedy
-  batching set (Alg. 2 lines 7-12) becomes a ``searchsorted``-style
-  first-true-index over the non-increasing threshold sequence — same
-  semantics, O(1) depth.
-* :mod:`repro.core.reference` holds ``jdob_reference`` — a line-by-line
-  loop transcription of the pseudocode used as the test oracle.
+* :func:`jdob_plan_batched` — the production core: a pure-JAX, fully jitted
+  solver for **G padded groups at once**.  Each group is a user subset of a
+  common width ``M_max`` with a boolean activity mask; masked users
+  contribute exactly zero energy, sort behind every active user, and never
+  enter the greedy batching set.  The paper's outer loop over partition
+  points ñ (Alg. 1 line 3) is a ``vmap``; the edge-frequency sweep
+  (Alg. 2 lines 6-24) is a dense (ñ × k × M) tensor evaluation; the whole
+  thing is ``vmap``-ped once more over groups.  The paper's monotone-pointer
+  update of the greedy batching set (Alg. 2 lines 7-12) becomes a
+  ``searchsorted``-style first-true-index over the non-increasing threshold
+  sequence — same semantics, O(1) depth.  The argmin over the (ñ, f_e) grid
+  and the winning strategy's reconstruction also happen on device, so one
+  dispatch plans an arbitrary number of groups.
+* :func:`jdob_schedule` — the historical single-group API, now a thin
+  wrapper that plans a batch of one.  Results are unchanged.
+* :class:`BatchedPlanner` — a reusable handle that caches the task/edge
+  constants and the frequency sweep, pads group widths to power-of-two
+  buckets and chunks large batches, so repeated planning (the OG outer
+  module, online flushes, the serving path) hits a handful of compiled
+  shapes instead of recompiling per group size.
+
+:mod:`repro.core.reference` holds ``jdob_reference`` — a line-by-line loop
+transcription of the pseudocode used as the test oracle.
 
 Internally everything is scaled to (GHz, seconds, J) so the math is well
 conditioned in float32; public inputs/outputs stay SI (Hz).
@@ -30,6 +44,12 @@ from .task_model import TaskProfile
 
 _GHZ = 1e9
 _INF = jnp.inf
+
+#: per-user entries of the planner's constant dict (batched to (G, M_max))
+_USER_KEYS = ("zeta", "ku", "fm_min", "fm_max", "rate", "p_up", "T")
+#: neutral padding so masked users never produce inf/nan intermediates
+_PAD_VALUES = dict(zeta=0.0, ku=0.0, fm_min=1.0, fm_max=1.0,
+                   rate=1.0, p_up=0.0, T=1.0)
 
 
 @dataclasses.dataclass
@@ -51,124 +71,372 @@ class Schedule:
         return int(self.offload.sum())
 
 
-def _prep(profile: TaskProfile, fleet: DeviceFleet, edge: EdgeProfile):
-    """Pre-scale all constants to (GHz, s, J) jnp arrays."""
-    v = profile.v() / _GHZ          # Gcycles/ζ  (multiply by ζ later)
-    u = profile.u()
+def _prep_blocks(profile: TaskProfile, edge: EdgeProfile) -> dict:
+    """Per-block constants shared by every group (scaled to GHz/s/J)."""
     phi_b, phi_s = edge.phi_coeffs(profile)
     psi_b, psi_s = edge.psi_coeffs(profile)
     return dict(
-        v=jnp.asarray(v), u=jnp.asarray(u),
-        o_up=jnp.asarray(profile.O),                       # bytes
+        v=jnp.asarray(profile.v() / _GHZ),               # Gcycles/ζ
+        u=jnp.asarray(profile.u()),
+        o_up=jnp.asarray(profile.O),                     # bytes
         phi_b=jnp.asarray(phi_b / _GHZ), phi_s=jnp.asarray(phi_s / _GHZ),
-        psi_b=jnp.asarray(psi_b * _GHZ ** 2), psi_s=jnp.asarray(psi_s * _GHZ ** 2),
-        zeta=jnp.asarray(fleet.zeta),
-        ku=jnp.asarray(fleet.kappa * _GHZ ** 2),           # J/(cycle·GHz²)·…
-        fm_min=jnp.asarray(fleet.f_min / _GHZ),
-        fm_max=jnp.asarray(fleet.f_max / _GHZ),
-        rate=jnp.asarray(fleet.rate), p_up=jnp.asarray(fleet.p_up),
-        T=jnp.asarray(fleet.deadline),
+        psi_b=jnp.asarray(psi_b * _GHZ ** 2),
+        psi_s=jnp.asarray(psi_s * _GHZ ** 2),
     )
 
 
-def _local_opt(c):
-    """Per-user optimal all-local DVFS (Eq. 20 local branch): f, energy."""
+def _pad_fleets(fleets: Sequence[DeviceFleet], m_pad: int):
+    """Stack per-user constants of G fleets into (G, m_pad) arrays + mask."""
+    G = len(fleets)
+    out = {k: np.full((G, m_pad), _PAD_VALUES[k], np.float64)
+           for k in _USER_KEYS}
+    mask = np.zeros((G, m_pad), bool)
+    for g, fl in enumerate(fleets):
+        m = fl.M
+        out["zeta"][g, :m] = fl.zeta
+        out["ku"][g, :m] = fl.kappa * _GHZ ** 2
+        out["fm_min"][g, :m] = fl.f_min / _GHZ
+        out["fm_max"][g, :m] = fl.f_max / _GHZ
+        out["rate"][g, :m] = fl.rate
+        out["p_up"][g, :m] = fl.p_up
+        out["T"][g, :m] = fl.deadline
+        mask[g, :m] = True
+    return {k: jnp.asarray(v) for k, v in out.items()}, jnp.asarray(mask)
+
+
+def _pow2_sum(x):
+    """Padding-invariant float sum: zero-pad to a power of two, then fold
+    halves.  All-zero halves collapse exactly (x + 0.0 == x bitwise), so a
+    group solved at any padded width M_pad ≥ M produces bit-identical sums
+    to the unpadded solve — the property the batched-vs-solo equivalence
+    tests assert.  (``jnp.sum`` picks a length-dependent reduction tree,
+    which perturbs the last ulp across pad widths.)"""
+    n = x.shape[0]
+    p = 1
+    while p < n:
+        p *= 2
+    if p != n:
+        x = jnp.concatenate([x, jnp.zeros(p - n, x.dtype)])
+    while p > 1:
+        p //= 2
+        x = x[:p] + x[p:]
+    return x[0]
+
+
+def _local_opt(c, act):
+    """Per-user optimal all-local DVFS (Eq. 20 local branch): f, energy.
+    Masked users get exactly zero energy (ku is padded to 0 as well)."""
     gamma_loc = c["zeta"] * c["v"][-1] / c["T"]
     f_loc = jnp.clip(gamma_loc, c["fm_min"], c["fm_max"])
-    e_loc = c["ku"] * c["u"][-1] * f_loc ** 2
+    e_loc = jnp.where(act, c["ku"] * c["u"][-1] * f_loc ** 2, 0.0)
     return f_loc, e_loc
 
 
-@functools.partial(jax.jit, static_argnames=("n_partitions", "sort_key"))
-def _jdob_grid(c, f_sweep, t_free, n_partitions: int, sort_key: str = "gamma"):
-    """Dense evaluation of Alg. 1+2 over (ñ, f_e).  Returns the full grid of
-    energies (ñ, k) plus everything needed to reconstruct the argmin
-    strategy.  ñ = n_partitions-1 (== N) rows are masked: that is the
-    all-local strategy, handled in closed form by the caller."""
+def _sorted_ctx(c, act, f_loc, nt, sort_key: str):
+    """Alg. 1 lines 4-6 for partition ñ = nt: user ordering, suffix
+    deadlines, batching thresholds.  Masked users sort last, have +inf
+    thresholds (never join the batch), and +inf deadlines (never bind)."""
     M = c["T"].shape[0]
-    f_loc, e_loc = _local_opt(c)
-    idx_n = jnp.arange(n_partitions)
+    # Alg.1 line 4: minimum latency cost γ_m^(ñ)  (Eq. 17)
+    gamma = c["o_up"][nt] / c["rate"] + c["zeta"] * c["v"][nt] / c["fm_max"]
+    # Alg.1 line 5: sort descending by γ (paper), or one of the
+    # beyond-paper orderings (see EXPERIMENTS.md §Beyond-paper):
+    #   budget — ascending T_m − γ_m: exact when deadlines differ
+    #   energy — ascending local-opt energy: keeps the *costliest*
+    #            (most offload-worthy) users in the greedy set longest
+    if sort_key == "gamma":
+        key = -gamma
+    elif sort_key == "budget":
+        key = c["T"] - gamma
+    else:                                   # "energy"
+        key = c["ku"] * c["u"][-1] * f_loc ** 2
+    order = jnp.argsort(jnp.where(act, key, _INF))
+    g_s = gamma[order]
+    T_s = jnp.where(act, c["T"], _INF)[order]
+    act_s = act[order]
+    # suffix-min of deadlines: l_o for the set list[i:]
+    suffT = jax.lax.associative_scan(jnp.minimum, T_s, reverse=True)
+    # batch size if list[i:] offload = number of ACTIVE users in the suffix
+    b_if_in = jax.lax.associative_scan(
+        jnp.add, act_s.astype(jnp.float32), reverse=True)
+    # Alg.1 line 6 / Eq. 18: thresholds (non-increasing over the active
+    # prefix; +inf where the user cannot make its deadline at any f_e)
+    phi_i = c["phi_b"][nt] + c["phi_s"][nt] * b_if_in
+    denom = suffT - g_s
+    th = jnp.where(act_s & (denom > 0),
+                   phi_i / jnp.maximum(denom, 1e-30), _INF)
     # NOTE: membership under non-γ orderings is re-validated per candidate
-    # (dev_ok / gpu_ok below), so non-monotone threshold sequences remain
+    # (dev_ok / gpu_ok in _cell), so non-monotone threshold sequences remain
     # safe — infeasible (ñ, f_e) cells are masked to +inf, never selected.
+    return dict(nt=nt, order=order, suffT=suffT, b_if_in=b_if_in, th=th)
 
-    def per_partition(nt):
-        # Alg.1 line 4: minimum latency cost γ_m^(ñ)  (Eq. 17)
-        gamma = c["o_up"][nt] / c["rate"] + c["zeta"] * c["v"][nt] / c["fm_max"]
-        # Alg.1 line 5: sort descending by γ (paper), or one of the
-        # beyond-paper orderings (see EXPERIMENTS.md §Beyond-paper):
-        #   budget — ascending T_m − γ_m: exact when deadlines differ
-        #   energy — ascending local-opt energy: keeps the *costliest*
-        #            (most offload-worthy) users in the greedy set longest;
-        #            matters for κ/ζ-heterogeneous fleets where the paper's
-        #            latency-only ordering is energy-blind
-        if sort_key == "gamma":
-            order = jnp.argsort(-gamma)
-        elif sort_key == "budget":
-            order = jnp.argsort(c["T"] - gamma)
-        else:                                   # "energy"
-            order = jnp.argsort(e_loc)
-        g_s = gamma[order]
-        T_s = c["T"][order]
-        # suffix-min of deadlines: l_o for the set list[i:]
-        suffT = jax.lax.associative_scan(jnp.minimum, T_s, reverse=True)
-        # Alg.1 line 6 / Eq. 18: thresholds (non-increasing; +inf where the
-        # user cannot make its deadline at any edge frequency)
-        b_if_in = M - jnp.arange(M)                # batch size if list[i:] offload
-        phi_i = c["phi_b"][nt] + c["phi_s"][nt] * b_if_in
-        denom = suffT - g_s
-        th = jnp.where(denom > 0, phi_i / jnp.maximum(denom, 1e-30), _INF)
 
-        def per_freq(f_e):
-            # greedy batching set under f_e: first index with th[i] <= f_e
-            ok = th <= f_e
-            j = jnp.where(jnp.any(ok), jnp.argmax(ok), M)
-            B_o = M - j
-            has = B_o > 0
-            jc = jnp.minimum(j, M - 1)
-            l_o = suffT[jc]                         # Eq. 10
-            phi = c["phi_b"][nt] + c["phi_s"][nt] * B_o
-            psi = c["psi_b"][nt] + c["psi_s"][nt] * B_o
-            # Eq. 6 / Alg.2 line 13: GPU availability
-            gpu_ok = f_e * (l_o - t_free) >= phi
-            # membership of each (unsorted) user
-            rank = jnp.empty(M, jnp.int32).at[order].set(jnp.arange(M, dtype=jnp.int32))
-            off = rank >= j
-            # Eq. 19/20: optimal device DVFS
-            slack = l_o - c["o_up"][nt] / c["rate"] - phi / f_e
-            gamma_off = c["zeta"] * c["v"][nt] / jnp.maximum(slack, 1e-30)
-            gamma_off = jnp.where(slack > 0, gamma_off, _INF)
-            f_dev = jnp.where(off,
-                              jnp.clip(gamma_off, c["fm_min"], c["fm_max"]),
-                              f_loc)
-            dev_ok = jnp.where(off, gamma_off <= c["fm_max"] * (1 + 1e-9), True)
-            # Eq. 21: total energy
-            e_up = c["o_up"][nt] / c["rate"] * c["p_up"]
-            e_user = jnp.where(off, c["ku"] * c["u"][nt] * f_dev ** 2 + e_up,
-                               e_loc)
-            energy = e_user.sum() + jnp.where(has, psi * f_e ** 2, 0.0)
-            feas = has & gpu_ok & jnp.all(dev_ok)
-            # Eq. 22: end of GPU occupation
-            t_up = jnp.where(off, c["zeta"] * c["v"][nt] / f_dev
-                             + c["o_up"][nt] / c["rate"], -_INF)
-            t_end = jnp.maximum(t_free, jnp.max(t_up)) + phi / f_e
-            return jnp.where(feas, energy, _INF), off, f_dev, t_end, e_user
+def _cell(c, act, f_loc, e_loc, t_free, ctx, f_e):
+    """Alg. 2's inner evaluation at one (ñ, f_e) grid cell."""
+    M = c["T"].shape[0]
+    nt = ctx["nt"]
+    # greedy batching set under f_e: first index with th[i] <= f_e
+    ok = ctx["th"] <= f_e
+    j = jnp.where(jnp.any(ok), jnp.argmax(ok), M)
+    jc = jnp.minimum(j, M - 1)
+    B_o = jnp.where(j < M, ctx["b_if_in"][jc], 0.0)
+    has = B_o > 0
+    l_o = ctx["suffT"][jc]                              # Eq. 10
+    phi = c["phi_b"][nt] + c["phi_s"][nt] * B_o
+    psi = c["psi_b"][nt] + c["psi_s"][nt] * B_o
+    # Eq. 6 / Alg.2 line 13: GPU availability
+    gpu_ok = f_e * (l_o - t_free) >= phi
+    # membership of each (unsorted) user
+    rank = jnp.empty(M, jnp.int32).at[ctx["order"]].set(
+        jnp.arange(M, dtype=jnp.int32))
+    off = (rank >= j) & act
+    # Eq. 19/20: optimal device DVFS
+    slack = l_o - c["o_up"][nt] / c["rate"] - phi / f_e
+    gamma_off = c["zeta"] * c["v"][nt] / jnp.maximum(slack, 1e-30)
+    gamma_off = jnp.where(slack > 0, gamma_off, _INF)
+    f_dev = jnp.where(off,
+                      jnp.clip(gamma_off, c["fm_min"], c["fm_max"]),
+                      f_loc)
+    dev_ok = jnp.where(off, gamma_off <= c["fm_max"] * (1 + 1e-9), True)
+    # Eq. 21: total energy
+    e_up = c["o_up"][nt] / c["rate"] * c["p_up"]
+    e_user = jnp.where(off, c["ku"] * c["u"][nt] * f_dev ** 2 + e_up,
+                       e_loc)
+    energy = _pow2_sum(e_user) + jnp.where(has, psi * f_e ** 2, 0.0)
+    feas = has & gpu_ok & jnp.all(dev_ok)
+    # Eq. 22: end of GPU occupation
+    t_up = jnp.where(off, c["zeta"] * c["v"][nt] / f_dev
+                     + c["o_up"][nt] / c["rate"], -_INF)
+    t_end = jnp.maximum(t_free, jnp.max(t_up)) + phi / f_e
+    return jnp.where(feas, energy, _INF), off, f_dev, t_end, e_user
 
-        return jax.vmap(per_freq)(f_sweep)
 
-    E, off, f_dev, t_end, e_user = jax.vmap(per_partition)(idx_n)
+def _solve_group(c, f_sweep, t_free, act, part_mask, n_partitions: int,
+                 sort_key: str):
+    """Dense Alg. 1+2 evaluation + argmin + winner reconstruction for ONE
+    (masked) group.  ñ = n_partitions-1 (== N) rows are masked: that is the
+    all-local strategy, handled in closed form by the host wrapper."""
+    K = f_sweep.shape[0]
+    f_loc, e_loc = _local_opt(c, act)
+
+    def energies(nt):
+        ctx = _sorted_ctx(c, act, f_loc, nt, sort_key)
+        return jax.vmap(
+            lambda f: _cell(c, act, f_loc, e_loc, t_free, ctx, f)[0]
+        )(f_sweep)
+
+    E = jax.vmap(energies)(jnp.arange(n_partitions))
     # mask ñ = N: "offloading after the last block" is local computing
     E = E.at[n_partitions - 1].set(_INF)
-    return E, off, f_dev, t_end, e_user
+    if part_mask is not None:
+        E = jnp.where(part_mask[:, None], E, _INF)
+    flat = jnp.argmin(E.reshape(-1))
+    nt_b = flat // K
+    fi_b = flat % K
+    # re-evaluate the winning cell (identical ops => identical bits)
+    ctx_b = _sorted_ctx(c, act, f_loc, nt_b, sort_key)
+    e_b, off, f_dev, t_end, e_user = _cell(c, act, f_loc, e_loc, t_free,
+                                           ctx_b, f_sweep[fi_b])
+    return dict(E=E, nt=nt_b, fi=fi_b, energy=E.reshape(-1)[flat],
+                off=off, f_dev=f_dev, t_end=t_end, e_user=e_user)
+
+
+@functools.partial(jax.jit, static_argnames=("n_partitions", "sort_key"))
+def jdob_plan_batched(c_batch, f_sweep, t_free_batch, mask, part_mask=None,
+                      *, n_partitions: int, sort_key: str = "gamma"):
+    """Solve G padded groups in one jitted vmap.
+
+    ``c_batch``: dict with per-block constants shaped (N+1,) (shared across
+    groups) and per-user constants shaped (G, M_max) (see ``_USER_KEYS``);
+    ``f_sweep``: (K,) shared GHz sweep; ``t_free_batch``: (G,) GPU release
+    times; ``mask``: (G, M_max) bool — True for real users; ``part_mask``:
+    optional (N+1,) bool restricting candidate partitions (the J-DOB-binary
+    baseline).  Returns a dict of stacked grids/winners: ``E`` (G, N+1, K),
+    ``nt``/``fi``/``energy``/``t_end`` (G,), ``off``/``f_dev``/``e_user``
+    (G, M_max).  Masked users contribute exactly zero energy and never
+    enter the greedy batching set.
+    """
+    axes = ({k: (0 if k in _USER_KEYS else None) for k in c_batch},
+            None, 0, 0, None)
+    return jax.vmap(
+        lambda c, f, tf, act, pm: _solve_group(
+            c, f, tf, act, pm, n_partitions, sort_key),
+        in_axes=axes)(c_batch, f_sweep, t_free_batch, mask, part_mask)
 
 
 def make_f_sweep(edge: EdgeProfile, rho: float = 0.03e9) -> np.ndarray:
     """Alg. 2's frequency sweep grid (descending, includes f_max & f_min)."""
     k = int(np.floor((edge.f_max - edge.f_min) / rho + 1e-9)) + 1
     f = edge.f_max - rho * np.arange(k)
-    if f[-1] > edge.f_min + 1e-6:
+    # Append f_min only when the grid genuinely stops short of it; when the
+    # last grid point lands on f_min (up to rounding), snap instead of
+    # appending — an absolute 1e-6 Hz test duplicated f_min whenever
+    # floating error at GHz scale exceeded it.
+    if f[-1] - edge.f_min > 1e-9 * rho:
         f = np.concatenate([f, [edge.f_min]])
+    else:
+        f[-1] = edge.f_min
     return f
+
+
+def _bucket(n: int, minimum: int = 4) -> int:
+    """Next power of two ≥ n (≥ minimum) — the shape-bucketing unit."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class BatchedPlanner:
+    """Plans many co-inference groups per XLA dispatch.
+
+    Caches the scaled task/edge constants and the frequency sweep; pads
+    group widths to power-of-two buckets and splits large batches into
+    fixed-size chunks so the jitted core compiles O(log M_max) shapes total
+    no matter how many times / at what sizes it is invoked (OG segment
+    enumeration, online flushes, serving).
+
+    ``sort_keys`` with more than one entry evaluates the beyond-paper
+    J-DOB+ ordering portfolio and keeps, per group, the best result
+    (ties prefer the earlier key, matching the sequential portfolio).
+    """
+
+    def __init__(self, profile: TaskProfile, edge: EdgeProfile, *,
+                 rho: float = 0.03e9, sort_keys: Sequence[str] = ("gamma",),
+                 edge_dvfs: bool = True,
+                 partitions: Sequence[int] | None = None,
+                 group_chunk: int = 256, min_user_bucket: int = 4):
+        self.profile = profile
+        self.edge = edge
+        self.rho = rho
+        self.sort_keys = tuple(sort_keys)
+        self.edge_dvfs = edge_dvfs
+        self.partitions = None if partitions is None else tuple(partitions)
+        self.group_chunk = group_chunk
+        self.min_user_bucket = min_user_bucket
+        self.blocks = _prep_blocks(profile, edge)
+        if edge_dvfs:
+            self.f_sweep_np = make_f_sweep(edge, rho)
+        else:
+            self.f_sweep_np = np.asarray([edge.f_max])
+        self.f_sweep = jnp.asarray(self.f_sweep_np / _GHZ)
+        n = profile.N
+        if partitions is not None:
+            pm = np.zeros(n + 1, bool)
+            pm[list(partitions)] = True
+            self.part_mask = jnp.asarray(pm)
+        else:
+            self.part_mask = None
+        self.psi_b, self.psi_s = edge.psi_coeffs(profile)
+        self._vN = profile.v()[-1]
+        self._uN = profile.u()[-1]
+
+    # ---- device passes -------------------------------------------------
+    def _run(self, fleets, t_frees, m_pad: int):
+        """One padded batch through the jitted core (per sort key)."""
+        users, mask = _pad_fleets(fleets, m_pad)
+        c = {**self.blocks, **users}
+        tf = jnp.asarray(np.asarray(t_frees, np.float64))
+        outs = []
+        for key in self.sort_keys:
+            outs.append(jdob_plan_batched(
+                c, self.f_sweep, tf, mask, self.part_mask,
+                n_partitions=self.profile.N + 1, sort_key=key))
+        return outs
+
+    def plan(self, fleets: Sequence[DeviceFleet],
+             t_frees: Sequence[float] | None = None,
+             pad_users: bool = True, m_pad: int | None = None,
+             g_pad: int | None = None) -> list[Schedule]:
+        """Solve every group; returns one :class:`Schedule` per fleet.
+
+        ``m_pad``/``g_pad`` pin the padded user width / group count so a
+        caller issuing many variable-size batches (the OG level solver)
+        hits a single compiled shape; by default both round up to a power
+        of two.  Padding never changes results: masked users sum in as
+        exact zeros (see ``_pow2_sum``) and filler groups are dropped."""
+        G = len(fleets)
+        if G == 0:
+            return []
+        if t_frees is None:
+            t_frees = [0.0] * G
+        m_max = max(fl.M for fl in fleets)
+        if m_pad is not None:
+            assert m_pad >= m_max
+        elif pad_users:
+            m_pad = _bucket(m_max, self.min_user_bucket)
+        else:
+            m_pad = m_max
+        # chunk + bucket the group dimension: large batches split into
+        # fixed-size chunks, small ones pad to a power of two — every call
+        # lands on one of O(log) compiled shapes instead of one per G
+        schedules: list[Schedule] = []
+        chunk = self.group_chunk
+        if G > chunk:
+            starts = range(0, G, chunk)
+        elif g_pad is not None:
+            assert g_pad >= G
+            starts = [0]
+            chunk = g_pad
+        else:
+            starts = [0]
+            # floor of 1, not min_user_bucket: a single-group plan (online
+            # flushes) must not compute filler groups — G=1 is already a
+            # stable compiled shape
+            chunk = _bucket(G, 1) if pad_users else G
+        pad_fleet = fleets[0].subset(np.arange(0))      # zero-user filler
+        for s in starts:
+            part = list(fleets[s:s + chunk])
+            tfs = list(t_frees[s:s + chunk])
+            n_real = len(part)
+            while len(part) < chunk:                    # ragged last chunk
+                part.append(pad_fleet)
+                tfs.append(0.0)
+            outs = self._run(part, tfs, m_pad)
+            for g in range(n_real):
+                schedules.append(self._reconstruct(
+                    fleets[s + g], float(t_frees[s + g]), outs, g))
+        return schedules
+
+    # ---- host-side winner reconstruction ------------------------------
+    def _reconstruct(self, fleet: DeviceFleet, t_free: float, outs,
+                     g: int) -> Schedule:
+        profile, edge = self.profile, self.edge
+        # portfolio combine: strict < keeps the earlier sort key on ties
+        best = 0
+        e_best = float(np.asarray(outs[0]["energy"][g]))
+        for i in range(1, len(outs)):
+            e_i = float(np.asarray(outs[i]["energy"][g]))
+            if e_i < e_best:
+                best, e_best = i, e_i
+        out = outs[best]
+        # all-local fallback (ñ = N branch of Alg. 1; always feasible by the
+        # standing assumption f_max can meet every deadline locally) —
+        # float64 so the fallback agrees bit-for-bit with the LC baseline
+        f_loc64 = np.clip(fleet.zeta * self._vN / fleet.deadline,
+                          fleet.f_min, fleet.f_max)
+        e_loc64 = fleet.kappa * self._uN * f_loc64 ** 2
+        e_all_local = float(e_loc64.sum())
+        if not np.isfinite(e_best) or e_all_local <= e_best:
+            return Schedule(True, e_all_local, profile.N, float(edge.f_max),
+                            np.zeros(fleet.M, bool), f_loc64, t_free,
+                            dict(device=e_all_local, uplink=0.0, edge=0.0),
+                            e_loc64)
+        M = fleet.M
+        nt = int(np.asarray(out["nt"][g]))
+        fi = int(np.asarray(out["fi"][g]))
+        off_b = np.asarray(out["off"][g])[:M]
+        f_dev_b = np.asarray(out["f_dev"][g], np.float64)[:M] * _GHZ
+        f_e = float(self.f_sweep_np[fi])
+        eu = np.asarray(out["e_user"][g])[:M]
+        # breakdown
+        up = float((profile.O[nt] / fleet.rate * fleet.p_up)[off_b].sum())
+        edge_e = float((self.psi_b[nt] + self.psi_s[nt] * off_b.sum())
+                       * f_e ** 2)
+        dev = e_best - up - edge_e
+        return Schedule(True, e_best, nt, f_e, off_b, f_dev_b,
+                        float(np.asarray(out["t_end"][g])),
+                        dict(device=dev, uplink=up, edge=edge_e), eu)
 
 
 def jdob_schedule(profile: TaskProfile,
@@ -179,61 +447,24 @@ def jdob_schedule(profile: TaskProfile,
                   partitions: Sequence[int] | None = None,
                   edge_dvfs: bool = True,
                   sort_key: str = "gamma") -> Schedule:
-    """Run J-DOB for one group.  ``partitions`` restricts ñ candidates
-    (``[0, N]`` gives the J-DOB-binary baseline); ``edge_dvfs=False`` pins
-    f_e = f_e,max (the J-DOB-w/o-edge-DVFS baseline); ``sort_key="budget"``
-    selects the beyond-paper J-DOB+ user ordering."""
-    c = _prep(profile, fleet, edge)
-    N = profile.N
-    if edge_dvfs:
-        f_sweep = jnp.asarray(make_f_sweep(edge, rho) / _GHZ)
-    else:
-        f_sweep = jnp.asarray([edge.f_max / _GHZ])
-
-    E, off, f_dev, t_end, e_user = _jdob_grid(c, f_sweep, t_free / 1.0,
-                                              n_partitions=N + 1,
-                                              sort_key=sort_key)
-    E = np.array(E)
-    if partitions is not None:
-        keep = np.zeros(N + 1, bool)
-        keep[list(partitions)] = True
-        E[~keep, :] = np.inf
-
-    # all-local fallback (ñ = N branch of Alg. 1; always feasible by the
-    # standing assumption f_max can meet every deadline locally) — float64
-    # so the fallback agrees bit-for-bit with the LC baseline
-    f_loc64 = np.clip(fleet.zeta * profile.v()[-1] / fleet.deadline,
-                      fleet.f_min, fleet.f_max)
-    e_loc64 = fleet.kappa * profile.u()[-1] * f_loc64 ** 2
-    e_all_local = float(e_loc64.sum())
-
-    best = np.unravel_index(np.argmin(E), E.shape)
-    if not np.isfinite(E[best]) or e_all_local <= E[best]:
-        return Schedule(True, e_all_local, N, float(edge.f_max),
-                        np.zeros(fleet.M, bool), f_loc64, t_free,
-                        dict(device=e_all_local, uplink=0.0, edge=0.0),
-                        e_loc64)
-
-    nt, fi = int(best[0]), int(best[1])
-    off_b = np.asarray(off[nt, fi])
-    f_dev_b = np.asarray(f_dev[nt, fi]) * _GHZ
-    f_e = float(np.asarray(f_sweep)[fi]) * _GHZ
-    eu = np.asarray(e_user[nt, fi])
-    # breakdown
-    up = float((profile.O[nt] / fleet.rate * fleet.p_up)[off_b].sum())
-    psi_b_, psi_s_ = edge.psi_coeffs(profile)
-    edge_e = float((psi_b_[nt] + psi_s_[nt] * off_b.sum()) * f_e ** 2)
-    dev = float(E[best]) - up - edge_e
-    return Schedule(True, float(E[best]), nt, f_e, off_b, f_dev_b,
-                    float(np.asarray(t_end[nt, fi])),
-                    dict(device=dev, uplink=up, edge=edge_e), eu)
+    """Run J-DOB for one group (a batch of one through the batched core).
+    ``partitions`` restricts ñ candidates (``[0, N]`` gives the
+    J-DOB-binary baseline); ``edge_dvfs=False`` pins f_e = f_e,max (the
+    J-DOB-w/o-edge-DVFS baseline); ``sort_key="budget"`` selects the
+    beyond-paper J-DOB+ user ordering."""
+    planner = BatchedPlanner(profile, edge, rho=rho, sort_keys=(sort_key,),
+                             edge_dvfs=edge_dvfs, partitions=partitions)
+    return planner.plan([fleet], [t_free], pad_users=False)[0]
 
 
 def jdob_energy_grid(profile: TaskProfile, fleet: DeviceFleet,
                      edge: EdgeProfile, t_free: float = 0.0,
                      rho: float = 0.03e9) -> np.ndarray:
     """(N+1, k) energy grid — diagnostics + the Pallas kernel's oracle."""
-    c = _prep(profile, fleet, edge)
-    f_sweep = jnp.asarray(make_f_sweep(edge, rho) / _GHZ)
-    E, *_ = _jdob_grid(c, f_sweep, t_free, n_partitions=profile.N + 1)
-    return np.asarray(E)
+    blocks = _prep_blocks(profile, edge)
+    users, mask = _pad_fleets([fleet], fleet.M)
+    out = jdob_plan_batched({**blocks, **users},
+                            jnp.asarray(make_f_sweep(edge, rho) / _GHZ),
+                            jnp.asarray(np.asarray([t_free])), mask,
+                            n_partitions=profile.N + 1)
+    return np.asarray(out["E"][0])

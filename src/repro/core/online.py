@@ -30,10 +30,10 @@ from typing import Callable
 
 import numpy as np
 
-from .baselines import jdob_plus, local_computing
+from .baselines import jdob_plus, local_computing, planner_spec
 from .cost_models import DeviceFleet, EdgeProfile
 from .grouping import optimal_grouping
-from .jdob import Schedule
+from .jdob import BatchedPlanner, Schedule
 from .task_model import TaskProfile
 
 
@@ -75,14 +75,26 @@ def simulate_online(arrivals: list[OnlineArrival],
     violations = 0
     i = 0
 
+    # fast replanning path: flush-time plans go through the batched planner
+    # (power-of-two user buckets => a handful of compiled shapes across all
+    # queue lengths, instead of one XLA recompile per distinct batch size;
+    # the J-DOB+ ordering portfolio runs as batched candidate plans)
+    spec = planner_spec(inner, profile)
+    planner = (BatchedPlanner(profile, edge, rho=rho, **spec)
+               if spec is not None else None)
+
+    def plan_flush(sub: DeviceFleet, t_free: float) -> Schedule:
+        if planner is not None:
+            return planner.plan([sub], [t_free])[0]
+        return inner(profile, sub, edge, t_free=t_free, rho=rho)
+
     def flush(now: float):
         nonlocal gpu_free, violations
         idx = np.array([a.user for a in queue])
         rel = np.array([a.abs_deadline - now for a in queue])
         violations += int(np.sum(rel < l_min[idx] - 1e-12))
         sub = dataclasses.replace(fleet.subset(idx), deadline=rel)
-        s: Schedule = inner(profile, sub, edge,
-                            t_free=max(gpu_free - now, 0.0), rho=rho)
+        s: Schedule = plan_flush(sub, max(gpu_free - now, 0.0))
         per_user[idx] += s.per_user_energy
         if s.offload.any():
             # edge energy attributed evenly across the batch

@@ -1,0 +1,31 @@
+"""Version-tolerant helpers for the Pallas TPU API.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-compat shims differ by release), so constructing either class directly
+pins the repo to one JAX version.  :func:`tpu_compiler_params` resolves
+whichever class the installed JAX exposes; when neither exists (or the
+installed signature rejects our kwargs) it returns ``None``, which
+``pl.pallas_call`` accepts — correct in interpret mode, where the
+``dimension_semantics`` hint is advisory anyway.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(*, dimension_semantics: tuple[str, ...] | None = None,
+                        **kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    Tries ``pltpu.CompilerParams`` (JAX ≥ 0.5 naming), then
+    ``pltpu.TPUCompilerParams`` (JAX ≤ 0.4.x), then gives up and returns
+    ``None`` so the call site still works in interpret mode.
+    """
+    cls = (getattr(pltpu, "CompilerParams", None)
+           or getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        return None
+    try:
+        return cls(dimension_semantics=dimension_semantics, **kwargs)
+    except TypeError:
+        return None

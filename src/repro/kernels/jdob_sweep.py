@@ -6,8 +6,10 @@ evaluation is a dense VMEM-resident block (the greedy batching set update is
 the ``th <= f`` comparison — valid because the threshold sequence is
 non-increasing, the paper's key structural result).  The host-side sort
 (Alg. 1 line 5) happens in the ops wrapper; the kernel consumes per-ñ
-sorted arrays.  Mirrors :func:`repro.core.jdob._jdob_grid` (same GHz/s/J
-scaled units); oracle = that function itself via :mod:`repro.kernels.ref`.
+sorted arrays.  Mirrors the single-group slice of
+:func:`repro.core.jdob.jdob_plan_batched` (same GHz/s/J scaled units);
+oracle = :func:`repro.core.jdob.jdob_energy_grid` via
+:mod:`repro.kernels.ref`.
 """
 from __future__ import annotations
 
@@ -16,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import tpu_compiler_params
 
 _INF = jnp.inf
 
@@ -74,7 +77,7 @@ def jdob_sweep_kernel(th, sufft, our, eup, eloc, zeta, ku, fmin, fmax,
                                 pl.BlockSpec((1, K), row)],
         out_specs=pl.BlockSpec((1, K), row),
         out_shape=jax.ShapeDtypeStruct((NP, K), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(th, sufft, our, eup, eloc, zeta, ku, fmin, fmax, scal, f_sweep)

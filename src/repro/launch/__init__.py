@@ -1,0 +1,1 @@
+"""Entry points: training/serving drivers, dryrun cost tables, mesh specs."""

@@ -9,6 +9,7 @@ verifies outputs equal the monolithic forward.
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -44,9 +45,12 @@ def main(argv=None) -> dict:
                     deadline=float(fleet.deadline[m]))
             for m in range(args.users)]
 
+    t0 = time.perf_counter()
     report = server.serve(reqs)
+    serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
-    print(f"arch={cfg.name}  M={args.users}  N={profile.N} blocks")
+    print(f"arch={cfg.name}  M={args.users}  N={profile.N} blocks  "
+          f"(planned+served in {serve_s:.2f}s via batched segment planner)")
     for g, s in zip(report.groups, report.schedules):
         print(f"  group {list(g)}: partition ñ={s.partition}, "
               f"batch={s.batch_size}, f_e={s.f_edge / 1e9:.2f} GHz, "

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (DeviceFleet, EdgeProfile, Schedule, TaskProfile,
-                        jdob_schedule, optimal_grouping)
+from repro.core import (BatchedPlanner, DeviceFleet, EdgeProfile, Schedule,
+                        TaskProfile, jdob_schedule, optimal_grouping,
+                        planner_spec)
 from .engine import BlockwiseExecutor
 
 
@@ -59,6 +60,12 @@ class CoInferenceServer:
         self.edge = edge
         self.inner = inner
         self.rho = rho
+        # one batched planner per server: OG's segment solves and every
+        # subsequent serve() reuse its compiled shapes (J-DOB inner family
+        # only; arbitrary inner callables plan sequentially)
+        spec = planner_spec(inner, profile)
+        self.planner = (BatchedPlanner(profile, edge, rho=rho, **spec)
+                        if spec is not None else None)
         n_layers = len(self.executor.layers)
         assert profile.N == n_layers, \
             f"profile N={profile.N} vs layers={n_layers}"
@@ -106,7 +113,7 @@ class CoInferenceServer:
             deadline=np.asarray([r.deadline for r in requests]))
         grouped = optimal_grouping(self.profile, fleet, self.edge,
                                    inner=self.inner, t_free=t_free,
-                                   rho=self.rho)
+                                   rho=self.rho, planner=self.planner)
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)

@@ -1,0 +1,28 @@
+"""Optional-hypothesis shim shared by the property-based test modules.
+
+``hypothesis`` is a test extra (``pip install -e .[test]``); when it is
+absent, ``@given(...)``-decorated tests skip instead of erroring at import.
+Import via ``from _hypothesis_compat import given, settings, st`` —
+``tests/conftest.py`` puts this directory on ``sys.path``.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **kw):               # property tests skip without hypothesis
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*a, **kw):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _StrategyStub()

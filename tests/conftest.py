@@ -1,0 +1,6 @@
+import os
+import sys
+
+# make shared test helpers (tests/_hypothesis_compat.py) importable from
+# test modules in tests/core, tests/models, ... (no __init__.py packages)
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,159 @@
+"""Batched segment planner: padded-batch vs per-group equivalence, padding
+invariance, and optimal-grouping parity with the seed sequential DP."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (BatchedPlanner, brute_force, jdob_plus, jdob_schedule,
+                        make_edge_profile, make_f_sweep, make_fleet,
+                        mobilenet_v2_profile, optimal_grouping,
+                        optimal_grouping_reference)
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+
+
+def fleet_for(M, beta, seed=0):
+    return make_fleet(M, PROF, EDGE, beta=beta, seed=seed)
+
+
+def assert_same_schedule(a, b):
+    """Bit-for-bit identity of two schedules on the real users."""
+    assert a.energy == b.energy
+    assert a.partition == b.partition
+    assert a.f_edge == b.f_edge
+    assert a.t_free_end == b.t_free_end
+    np.testing.assert_array_equal(a.offload, b.offload)
+    np.testing.assert_array_equal(a.per_user_energy, b.per_user_energy)
+    np.testing.assert_array_equal(a.f_device, b.f_device)
+
+
+def test_batched_plan_matches_solo_bit_for_bit():
+    """G padded groups through one dispatch == G independent jdob_schedule
+    calls, bitwise, on the unmasked users."""
+    sizes = [1, 3, 5, 8]
+    t_frees = [0.0, 1e-3, 0.0, 2e-3]
+    fleets = [fleet_for(m, (0.0, 10.0), seed=m) for m in sizes]
+    planner = BatchedPlanner(PROF, EDGE)
+    batch = planner.plan(fleets, t_frees)
+    for fl, tf, b in zip(fleets, t_frees, batch):
+        assert_same_schedule(b, jdob_schedule(PROF, fl, EDGE, t_free=tf))
+
+
+def test_padding_width_invariance():
+    """The same group solved at any padded width gives identical bits
+    (guaranteed by the power-of-two folding sum in the core)."""
+    fl = fleet_for(5, (2.0, 8.0), seed=3)
+    planner = BatchedPlanner(PROF, EDGE)
+    narrow = planner.plan([fl], [1e-3], m_pad=8)[0]
+    wide = planner.plan([fl], [1e-3], m_pad=64, g_pad=16)[0]
+    assert_same_schedule(narrow, wide)
+
+
+def test_portfolio_combine_matches_sequential_loop():
+    """jdob_plus (batched portfolio) == explicit min over the three
+    single-ordering solves, with earlier keys winning ties."""
+    for seed in range(3):
+        fl = fleet_for(7, (0.0, 10.0), seed=seed)
+        plus = jdob_plus(PROF, fl, EDGE)
+        best = None
+        for key in ("gamma", "budget", "energy"):
+            s = jdob_schedule(PROF, fl, EDGE, sort_key=key)
+            if best is None or s.energy < best.energy:
+                best = s
+        assert_same_schedule(plus, best)
+
+
+def test_restricted_baselines_via_planner():
+    """partitions / edge_dvfs restrictions behave identically through the
+    batched planner and the jdob_schedule wrapper."""
+    fl = fleet_for(6, 5.0, seed=1)
+    bin_planner = BatchedPlanner(PROF, EDGE, partitions=[0, PROF.N])
+    assert_same_schedule(
+        bin_planner.plan([fl])[0],
+        jdob_schedule(PROF, fl, EDGE, partitions=[0, PROF.N]))
+    nod_planner = BatchedPlanner(PROF, EDGE, edge_dvfs=False)
+    assert_same_schedule(
+        nod_planner.plan([fl])[0],
+        jdob_schedule(PROF, fl, EDGE, edge_dvfs=False))
+
+
+@pytest.mark.parametrize("M,seed", [(4, 0), (5, 1), (6, 2), (7, 3), (8, 4)])
+def test_og_matches_seed_dp_small_fleets(M, seed):
+    """The level-synchronous batched OG returns the seed DP's energy
+    exactly, and both stay near the single-batch brute-force optimum."""
+    fl = fleet_for(M, (0.0, 10.0), seed=seed)
+    og = optimal_grouping(PROF, fl, EDGE)
+    ref = optimal_grouping_reference(PROF, fl, EDGE)
+    assert og.energy == ref.energy
+    assert [g.tolist() for g in og.groups] == [g.tolist() for g in ref.groups]
+    opt = brute_force(PROF, fl, EDGE)
+    assert og.energy <= opt.energy * 1.05
+
+
+@pytest.mark.parametrize("beta,name", [(2.13, "identical"),
+                                       ((0.0, 10.0), "different")])
+def test_og_paper_scenarios_identical_energy(beta, name):
+    """The acceptance scenarios: identical- and different-deadline fleets
+    report identical energy under old and new optimal_grouping."""
+    fl = fleet_for(12, beta, seed=7)
+    og = optimal_grouping(PROF, fl, EDGE)
+    ref = optimal_grouping_reference(PROF, fl, EDGE)
+    assert og.energy == ref.energy, name
+
+
+def test_og_jdob_plus_inner_matches_reference():
+    fl = fleet_for(8, (0.0, 10.0), seed=3)
+    og = optimal_grouping(PROF, fl, EDGE, inner=jdob_plus)
+    ref = optimal_grouping_reference(PROF, fl, EDGE, inner=jdob_plus)
+    assert og.energy == ref.energy
+
+
+def test_og_arbitrary_inner_falls_back():
+    """A custom inner callable (not in the J-DOB family) still works —
+    routed through the sequential reference path."""
+    calls = []
+
+    def spying_inner(profile, fleet, edge, t_free=0.0, rho=0.03e9):
+        calls.append(fleet.M)
+        return jdob_schedule(profile, fleet, edge, t_free=t_free, rho=rho)
+
+    fl = fleet_for(4, (0.0, 10.0), seed=1)
+    og = optimal_grouping(PROF, fl, EDGE, inner=spying_inner)
+    ref = optimal_grouping_reference(PROF, fl, EDGE)
+    assert calls, "custom inner must actually be invoked"
+    assert og.energy == ref.energy
+
+
+def test_make_f_sweep_no_duplicate_fmin():
+    """When the ρ-grid lands exactly on f_min, f_min must appear once."""
+    import dataclasses
+    for f_min, f_max, rho in [(0.2e9, 2.1e9, 0.05e9),   # exact division
+                              (0.2e9, 2.1e9, 0.03e9),   # inexact
+                              (0.3e9, 0.9e9, 0.2e9)]:
+        edge = dataclasses.replace(EDGE, f_min=f_min, f_max=f_max)
+        f = make_f_sweep(edge, rho)
+        assert f[0] == f_max and f[-1] == f_min
+        assert np.all(np.diff(f) < 0), "strictly descending, no duplicates"
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(1, 9), min_size=1, max_size=4),
+       beta_lo=st.floats(0.0, 6.0),
+       beta_width=st.floats(0.0, 10.0),
+       seed=st.integers(0, 2 ** 16),
+       t_free_ms=st.floats(0.0, 10.0))
+def test_property_batched_equals_solo(sizes, beta_lo, beta_width, seed,
+                                      t_free_ms):
+    """Property: ANY padded batch of groups matches the per-group solves
+    bit for bit on the unmasked users (energies and partitions)."""
+    fleets = [make_fleet(m, PROF, EDGE, beta=(beta_lo, beta_lo + beta_width),
+                         seed=seed + k) for k, m in enumerate(sizes)]
+    t_frees = [t_free_ms * 1e-3 * (k % 2) for k in range(len(sizes))]
+    planner = BatchedPlanner(PROF, EDGE)
+    batch = planner.plan(fleets, t_frees)
+    for fl, tf, b in zip(fleets, t_frees, batch):
+        s = jdob_schedule(PROF, fl, EDGE, t_free=tf)
+        assert b.energy == s.energy
+        assert b.partition == s.partition
+        np.testing.assert_array_equal(b.offload, s.offload)

@@ -1,7 +1,8 @@
 """J-DOB correctness: oracle equivalence, optimality gap, invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (DeviceFleet, brute_force, jdob_binary, jdob_energy_grid,
                         jdob_no_edge_dvfs, jdob_reference, jdob_schedule,

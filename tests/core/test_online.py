@@ -1,7 +1,8 @@
 """Online scheduler (paper future work): correctness and dominance."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (all_local_energy, make_edge_profile, make_fleet,
                         mobilenet_v2_profile, oracle_bound, poisson_arrivals,
