@@ -2,29 +2,35 @@
 from .task_model import TaskProfile, mobilenet_v2_profile, profile_from_arch
 from .cost_models import (DeviceFleet, EdgeProfile, make_edge_profile,
                           make_tpu_v5e_edge_profile, make_fleet)
-from .jdob import (BatchedPlanner, Schedule, jdob_schedule, jdob_energy_grid,
-                   jdob_plan_batched, make_f_sweep)
+from .jdob import (BatchedPlanner, ExecutableCache, PlannerStats, Schedule,
+                   jdob_schedule, jdob_energy_grid, jdob_plan_batched,
+                   make_f_sweep, shared_executable_cache)
 from .reference import jdob_reference
 from .baselines import (STRATEGIES, local_computing, ip_ssa,
-                        jdob_no_edge_dvfs, jdob_binary, jdob_plus,
-                        planner_spec)
+                        jdob_no_edge_dvfs, jdob_binary, jdob_plus)
+from .planner_service import PlannerService, planner_spec
 from .bruteforce import brute_force
 from .grouping import (GroupedSchedule, optimal_grouping,
                        optimal_grouping_reference, single_group)
-from .online import (OnlineArrival, OnlineResult, all_local_energy,
-                     oracle_bound, poisson_arrivals, simulate_online)
+from .online import (FlushEvent, GpuFreeEvent, OnlineArrival, OnlineResult,
+                     OnlineScheduler, all_local_energy, oracle_bound,
+                     poisson_arrivals, simulate_online,
+                     simulate_online_reference)
 
 __all__ = [
     "TaskProfile", "mobilenet_v2_profile", "profile_from_arch",
     "DeviceFleet", "EdgeProfile", "make_edge_profile",
     "make_tpu_v5e_edge_profile", "make_fleet",
-    "BatchedPlanner", "Schedule", "jdob_schedule", "jdob_energy_grid",
-    "jdob_plan_batched", "make_f_sweep",
+    "BatchedPlanner", "ExecutableCache", "PlannerStats", "Schedule",
+    "jdob_schedule", "jdob_energy_grid", "jdob_plan_batched", "make_f_sweep",
+    "shared_executable_cache",
     "jdob_reference", "STRATEGIES", "local_computing", "ip_ssa",
-    "jdob_no_edge_dvfs", "jdob_binary", "jdob_plus", "planner_spec",
+    "jdob_no_edge_dvfs", "jdob_binary", "jdob_plus",
+    "PlannerService", "planner_spec",
     "brute_force",
     "GroupedSchedule", "optimal_grouping", "optimal_grouping_reference",
     "single_group",
-    "OnlineArrival", "OnlineResult", "simulate_online", "oracle_bound",
-    "all_local_energy", "poisson_arrivals",
+    "FlushEvent", "GpuFreeEvent", "OnlineArrival", "OnlineResult",
+    "OnlineScheduler", "simulate_online", "simulate_online_reference",
+    "oracle_bound", "all_local_energy", "poisson_arrivals",
 ]

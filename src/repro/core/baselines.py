@@ -55,21 +55,6 @@ def jdob_plus(profile, fleet, edge, t_free=0.0, rho=0.03e9):
     return planner.plan([fleet], [t_free], pad_users=False)[0]
 
 
-def planner_spec(inner, profile: TaskProfile) -> dict | None:
-    """BatchedPlanner constructor kwargs replicating ``inner``, or ``None``
-    when ``inner`` is an arbitrary callable the batched core cannot mirror
-    (callers then fall back to sequential per-group solves)."""
-    if inner is jdob_schedule:
-        return dict(sort_keys=("gamma",))
-    if inner is jdob_plus:
-        return dict(sort_keys=JDOB_PLUS_SORT_KEYS)
-    if inner is jdob_no_edge_dvfs:
-        return dict(sort_keys=("gamma",), edge_dvfs=False)
-    if inner is jdob_binary:
-        return dict(sort_keys=("gamma",), partitions=[0, profile.N])
-    return None
-
-
 def ip_ssa(profile: TaskProfile, fleet: DeviceFleet, edge: EdgeProfile,
            t_free: float = 0.0, rho: float = 0.03e9) -> Schedule:
     """IP-SSA of [10] adapted to our cost model (see module docstring).
@@ -142,3 +127,7 @@ STRATEGIES = {
     "J-DOB-binary": jdob_binary,
     "J-DOB+": jdob_plus,
 }
+
+# inner-callable → planner-kwargs mapping now lives with the rest of the
+# planner policy in the service layer; re-exported here for compatibility
+from .planner_service import planner_spec  # noqa: E402,F401

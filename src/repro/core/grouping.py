@@ -9,17 +9,19 @@ Two implementations:
 
 * :func:`optimal_grouping` — the production path.  All O(M²) contiguous
   segments of the deadline-sorted fleet are enumerated up front, then
-  solved by the **batched** J-DOB core
-  (:class:`repro.core.jdob.BatchedPlanner`) level-synchronously: the DP is
+  solved by the **batched** J-DOB core level-synchronously: the DP is
   lower-triangular in the prefix end j, so once dp[0..j-1] are final the
   threaded ``t_free`` of every segment ending at j is known, and all of
-  level j's (segment, t_free) solves go through ONE padded batched
-  dispatch.  Group count and user width pad to a common power-of-two
-  bucket, so an entire fleet plans against a single compiled shape in M
-  small dispatches — versus the seed's O(M²) dispatches and one XLA
-  recompile per distinct segment size.  The level solver consumes exactly
-  the (segment, t_free) pairs the sequential DP consumes, with the same
-  memo keys and tie-breaks, and the batched core is bitwise
+  level j's (segment, t_free) solves go through a few padded batched
+  dispatches — versus the seed's O(M²) dispatches and one XLA recompile
+  per distinct segment size.  Shape policy, planner construction and
+  compile caching live in :class:`repro.core.planner_service.\
+PlannerService` (see ARCHITECTURE.md): small fleets plan against one
+  compiled shape, large fleets split each level into 2-3 per-length
+  buckets (restoring the large-M speedup), and every shape the fleet can
+  need is background-prefetched up front.  The level solver consumes
+  exactly the (segment, t_free) pairs the sequential DP consumes, with
+  the same memo keys and tie-breaks, and the batched core is bitwise
   padding-invariant, so the result matches
   :func:`optimal_grouping_reference` bit for bit.
 * :func:`optimal_grouping_reference` — the seed's sequential DP (one
@@ -39,9 +41,9 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .baselines import planner_spec
 from .cost_models import DeviceFleet
-from .jdob import BatchedPlanner, Schedule, _bucket, jdob_schedule
+from .jdob import BatchedPlanner, Schedule, jdob_schedule
+from .planner_service import PlannerService
 
 
 @dataclasses.dataclass
@@ -112,22 +114,30 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
                      inner: Callable = jdob_schedule,
                      t_free: float = 0.0, rho: float = 0.03e9,
                      max_groups: int | None = None,
-                     planner: BatchedPlanner | None = None
+                     planner: BatchedPlanner | None = None,
+                     service: PlannerService | None = None
                      ) -> GroupedSchedule:
     """OG over the deadline-sorted fleet.  ``inner`` picks the per-group
-    solver; the J-DOB family routes through the batched planner (pass a
-    prebuilt ``planner`` to reuse its compiled shapes across calls), other
-    callables fall back to :func:`optimal_grouping_reference`.
-    ``max_groups`` is accepted for API compatibility and, as in the seed
-    implementation, not enforced (the DP picks the group count freely)."""
-    spec = planner_spec(inner, profile)
+    solver; the J-DOB family routes through the planner service (pass a
+    prebuilt ``service`` to reuse its planners/compiled shapes across
+    calls), other callables fall back to
+    :func:`optimal_grouping_reference`.  ``max_groups`` is accepted for API
+    compatibility and, as in the seed implementation, not enforced (the DP
+    picks the group count freely)."""
+    if service is None:
+        service = PlannerService(profile, edge, rho=rho)
+    else:
+        # the service's planners bake in ITS rho — reject disagreement
+        # instead of returning plausible-but-wrong energies
+        assert service.rho == rho, "service rho disagrees with rho argument"
+    spec = service.spec_for(inner)
     if spec is None:
         # ``inner`` is authoritative: an arbitrary callable always takes
         # the sequential path, even when a prebuilt planner was supplied
         return optimal_grouping_reference(profile, fleet, edge, inner,
                                           t_free, rho, max_groups)
     if planner is None:
-        planner = BatchedPlanner(profile, edge, rho=rho, **spec)
+        planner = service.planner(**spec)
     else:
         # a prebuilt planner takes over solving, so it must actually
         # replicate the requested inner/rho — fail loudly on disagreement
@@ -147,18 +157,32 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     # enumerate ALL contiguous segments of the sorted fleet up front
     sub = {(i, j): sorted_fleet.subset(np.arange(i, j))
            for i in range(M) for j in range(i + 1, M + 1)}
-    # one compiled shape for the whole fleet: every level dispatch pads
-    # groups and users to the same power-of-two bucket
-    pad = _bucket(M, planner.min_user_bucket)
+    # per-length shape buckets: each segment solves at the smallest of 2-3
+    # power-of-two user widths covering it, so a level's dispatches stop
+    # paying for masked users of short segments (the seed padded everything
+    # to the fleet-wide bucket, which sank the large-M speedup).  Padding
+    # is bit-invariant, so bucketing can never change results.
+    buckets = service.level_buckets(M)
+    # overlap XLA compiles with the DP's early levels: background-compile
+    # every shape this fleet can need, in first-need order
+    for b, g in service.level_shapes(M):
+        planner.prefetch(b, g)
     # cache keyed exactly like the sequential DP's memo: (i, j, round(tf, 9))
     cache: dict[tuple[int, int, float], Schedule] = {}
 
     def solve_many(pairs: Sequence[tuple[int, int, float]]):
-        plans = planner.plan([sub[(i, j)] for (i, j, _) in pairs],
-                             [tf for (_, _, tf) in pairs],
-                             m_pad=pad, g_pad=min(pad, planner.group_chunk))
-        for (i, j, tf), p in zip(pairs, plans):
-            cache[(i, j, round(tf, 9))] = p
+        by_bucket: dict[int, list[tuple[int, int, float]]] = {}
+        for (i, j, tf) in pairs:
+            by_bucket.setdefault(
+                service.bucket_for(j - i, buckets), []).append((i, j, tf))
+        for b, part in sorted(by_bucket.items()):
+            plans = planner.plan([sub[(i, j)] for (i, j, _) in part],
+                                 [tf for (_, _, tf) in part],
+                                 m_pad=b,
+                                 g_pad=service.level_group_pad(buckets,
+                                                               len(part)))
+            for (i, j, tf), p in zip(part, plans):
+                cache[(i, j, round(tf, 9))] = p
 
     def solve(i: int, j: int, tf: float) -> Schedule:
         key = (i, j, round(tf, 9))

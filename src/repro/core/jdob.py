@@ -31,8 +31,12 @@ conditioned in float32; public inputs/outputs stay SI (Hz).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
 import jax
@@ -287,6 +291,162 @@ def _bucket(n: int, minimum: int = 4) -> int:
     return b
 
 
+@dataclasses.dataclass
+class PlannerStats:
+    """Per-planner compile/shape-cache counters.
+
+    ``hits``/``misses``/``evictions`` count this planner's lookups against
+    its :class:`ExecutableCache` (misses trigger an XLA compile; evictions
+    are entries this planner's compiles pushed out).  ``dispatches`` counts
+    device launches, ``groups_planned`` real (unpadded) groups solved."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    dispatches: int = 0
+    groups_planned: int = 0
+
+    @property
+    def compiles(self) -> int:
+        return self.misses
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def merge(self, other: "PlannerStats") -> "PlannerStats":
+        return PlannerStats(*(a + b for a, b in
+                              zip(dataclasses.astuple(self),
+                                  dataclasses.astuple(other))))
+
+
+class ExecutableCache:
+    """Bounded LRU over AOT-compiled ``jdob_plan_batched`` executables.
+
+    ``jax.jit`` keeps one executable per traced shape forever; a long-lived
+    server sweeping many fleet sizes / bucket policies would grow that cache
+    without bound.  Planners therefore compile through THIS cache instead
+    (``jit(...).lower(args).compile()`` — which bypasses jit's own call
+    cache), keyed by everything that determines the trace: the argument
+    pytree structure, every leaf's (shape, dtype), and the static
+    ``n_partitions`` / ``sort_key``.  Identical key ⇒ identical trace, so
+    one executable safely serves every planner/profile that maps to it;
+    evicting an entry drops the underlying XLA executable.
+
+    :meth:`prefetch` compiles a shape on a small background thread pool
+    (XLA compilation releases the GIL), so a caller that knows its future
+    shapes — the OG level solver knows every per-length bucket a fleet can
+    need — overlaps compiles with its early dispatches instead of stalling
+    level by level.  A pending compile is installed into the LRU (and
+    counted as the consuming planner's miss) at first lookup."""
+
+    def __init__(self, max_entries: int = 64):
+        assert max_entries >= 1
+        self.max_entries = max_entries
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._pending: dict = {}
+        self._lock = threading.Lock()
+        self._pool: ThreadPoolExecutor | None = None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    @property
+    def keys(self):
+        with self._lock:
+            return tuple(self._entries)
+
+    @staticmethod
+    def _key(args, n_partitions: int, sort_key: str):
+        leaves, treedef = jax.tree_util.tree_flatten(args)
+        # works for concrete arrays AND jax.ShapeDtypeStruct placeholders
+        avals = tuple((tuple(l.shape), np.dtype(l.dtype).name)
+                      for l in leaves)
+        return (treedef, avals, n_partitions, sort_key)
+
+    @staticmethod
+    def _compile(args, n_partitions: int, sort_key: str):
+        return jdob_plan_batched.lower(
+            *args, n_partitions=n_partitions, sort_key=sort_key).compile()
+
+    def _install(self, key, exe, stats: PlannerStats | None):
+        """Insert under lock; LRU-evict past the bound."""
+        with self._lock:
+            self._pending.pop(key, None)
+            self._entries[key] = exe
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                if stats is not None:
+                    stats.evictions += 1
+        return exe
+
+    def lookup(self, args, n_partitions: int, sort_key: str,
+               stats: PlannerStats | None = None):
+        """Return the compiled executable for ``args``: LRU hit, pending
+        prefetch (waits for the background compile), or a fresh compile."""
+        key = self._key(args, n_partitions, sort_key)
+        with self._lock:
+            exe = self._entries.get(key)
+            if exe is not None:
+                self._entries.move_to_end(key)
+                if stats is not None:
+                    stats.hits += 1
+                return exe
+            fut = self._pending.get(key)
+        if stats is not None:
+            stats.misses += 1
+        if fut is not None:
+            try:
+                return self._install(key, fut.result(), stats)
+            except Exception:          # background compile failed: go sync
+                with self._lock:
+                    self._pending.pop(key, None)
+        return self._install(key, self._compile(args, n_partitions,
+                                                sort_key), stats)
+
+    def prefetch(self, args, n_partitions: int, sort_key: str) -> None:
+        """Schedule a background compile for a shape that will be needed
+        soon (no-op if cached or already pending).  ``args`` leaves may be
+        ``jax.ShapeDtypeStruct`` placeholders — only avals matter."""
+        key = self._key(args, n_partitions, sort_key)
+        with self._lock:
+            if key in self._entries or key in self._pending:
+                return
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=max(2, min(4, (os.cpu_count() or 2))),
+                    thread_name_prefix="jdob-compile")
+            self._pending[key] = self._pool.submit(
+                self._compile, args, n_partitions, sort_key)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._pending.clear()
+
+    def resize(self, max_entries: int) -> None:
+        assert max_entries >= 1
+        with self._lock:
+            self.max_entries = max_entries
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
+
+#: process-wide default cache — the bounded replacement for jit's own
+#: unbounded per-shape cache (planners constructed without an explicit
+#: ``cache`` share it, so throwaway planners still reuse compiles); sized
+#: generously since correctness never depends on it, only recompile time —
+#: long-lived servers wanting a tight bound pass their own cache / a
+#: PlannerService(max_cached_shapes=...)
+_SHARED_EXEC_CACHE = ExecutableCache(max_entries=256)
+
+
+def shared_executable_cache() -> ExecutableCache:
+    """The process-wide planner compile cache (see :class:`ExecutableCache`)."""
+    return _SHARED_EXEC_CACHE
+
+
 class BatchedPlanner:
     """Plans many co-inference groups per XLA dispatch.
 
@@ -305,10 +465,13 @@ class BatchedPlanner:
                  rho: float = 0.03e9, sort_keys: Sequence[str] = ("gamma",),
                  edge_dvfs: bool = True,
                  partitions: Sequence[int] | None = None,
-                 group_chunk: int = 256, min_user_bucket: int = 4):
+                 group_chunk: int = 256, min_user_bucket: int = 4,
+                 cache: ExecutableCache | None = None):
         self.profile = profile
         self.edge = edge
         self.rho = rho
+        self.cache = cache if cache is not None else _SHARED_EXEC_CACHE
+        self.stats = PlannerStats()
         self.sort_keys = tuple(sort_keys)
         self.edge_dvfs = edge_dvfs
         self.partitions = None if partitions is None else tuple(partitions)
@@ -331,17 +494,32 @@ class BatchedPlanner:
         self._vN = profile.v()[-1]
         self._uN = profile.u()[-1]
 
+    def prefetch(self, m_pad: int, g_pad: int) -> None:
+        """Kick off background compiles for the (g_pad, m_pad) batch shape
+        under every sort key (see :meth:`ExecutableCache.prefetch`) —
+        shape-only, no fleet data needed."""
+        sds = jax.ShapeDtypeStruct
+        f32 = np.dtype(np.float32)
+        users = {k: sds((g_pad, m_pad), f32) for k in _USER_KEYS}
+        c = {**self.blocks, **users}
+        args = (c, self.f_sweep, sds((g_pad,), f32),
+                sds((g_pad, m_pad), np.dtype(bool)), self.part_mask)
+        for key in self.sort_keys:
+            self.cache.prefetch(args, self.profile.N + 1, key)
+
     # ---- device passes -------------------------------------------------
     def _run(self, fleets, t_frees, m_pad: int):
-        """One padded batch through the jitted core (per sort key)."""
+        """One padded batch through the compiled core (per sort key)."""
         users, mask = _pad_fleets(fleets, m_pad)
         c = {**self.blocks, **users}
         tf = jnp.asarray(np.asarray(t_frees, np.float64))
+        args = (c, self.f_sweep, tf, mask, self.part_mask)
         outs = []
         for key in self.sort_keys:
-            outs.append(jdob_plan_batched(
-                c, self.f_sweep, tf, mask, self.part_mask,
-                n_partitions=self.profile.N + 1, sort_key=key))
+            exe = self.cache.lookup(args, self.profile.N + 1, key,
+                                    stats=self.stats)
+            self.stats.dispatches += 1
+            outs.append(exe(*args))
         return outs
 
     def plan(self, fleets: Sequence[DeviceFleet],
@@ -393,6 +571,13 @@ class BatchedPlanner:
                 part.append(pad_fleet)
                 tfs.append(0.0)
             outs = self._run(part, tfs, m_pad)
+            # ONE device→host transfer per output array, not one tiny
+            # jnp slice per group: per-group indexing of jnp arrays was
+            # ~90% of warm planning time at M = 80 ("E" stays on device —
+            # reconstruction never reads the full grid)
+            outs = [{k: np.asarray(v) for k, v in o.items() if k != "E"}
+                    for o in outs]
+            self.stats.groups_planned += n_real
             for g in range(n_real):
                 schedules.append(self._reconstruct(
                     fleets[s + g], float(t_frees[s + g]), outs, g))

@@ -19,6 +19,24 @@ moment:
   the latency budget J-DOB turns into energy savings — measured WORSE
   than local computing (EXPERIMENTS.md §Online).
 
+Two layers:
+
+* :class:`OnlineScheduler` — the production core: an **event-driven**
+  scheduler over a time-ordered heap of arrival / flush / gpu-free events.
+  Requests are submitted at any time (out of order before :meth:`run`, or
+  incrementally between :meth:`step` calls — the live-server regime);
+  whenever the queue changes, the policy re-arms the flush timer; a flush
+  plans through the shared :class:`~repro.core.planner_service.\
+PlannerService` and books the GPU until the planned ``t_free_end``
+  (Eq. 22), emitting a gpu-free event other components can key off.
+  ``on_flush`` / ``on_gpu_free`` callbacks let a real server execute the
+  planned batch on a model the moment it is scheduled —
+  :class:`repro.serving.CoInferenceServer` drives exactly this hook.
+* :func:`simulate_online` — the historical one-shot API, now a thin driver
+  that submits a trace and runs the scheduler to completion.  Results are
+  bit-identical to the seed flush-loop simulator, which survives as
+  :func:`simulate_online_reference` (the test oracle).
+
 The offline **oracle bound** runs OG+J-DOB over all requests with arrival
 times ignored (clairvoyant, free to batch anything) — a lower bound no
 online policy can beat.
@@ -26,15 +44,20 @@ online policy can beat.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 from typing import Callable
 
 import numpy as np
 
-from .baselines import jdob_plus, local_computing, planner_spec
+from .baselines import jdob_plus, local_computing
 from .cost_models import DeviceFleet, EdgeProfile
 from .grouping import optimal_grouping
 from .jdob import BatchedPlanner, Schedule
+from .planner_service import PlannerService, planner_spec
 from .task_model import TaskProfile
+
+POLICIES = ("immediate", "window", "slack", "lastcall")
 
 
 @dataclasses.dataclass
@@ -42,6 +65,7 @@ class OnlineArrival:
     user: int
     arrival: float            # seconds
     rel_deadline: float       # T_m^(d), relative to arrival
+    payload: object = None    # opaque caller data (e.g. the actual Request)
 
     @property
     def abs_deadline(self) -> float:
@@ -58,12 +82,216 @@ class OnlineResult:
     flush_times: list[float]
 
 
+@dataclasses.dataclass(eq=False)
+class FlushEvent:
+    """One scheduler flush: the batch it drained and the plan it booked."""
+
+    time: float
+    arrivals: list[OnlineArrival]
+    users: np.ndarray         # fleet indices, queue (arrival) order
+    schedule: Schedule
+    gpu_free: float           # absolute time the GPU frees (Eq. 22)
+    violations: int           # requests past their point of no return
+
+
+@dataclasses.dataclass(eq=False)
+class GpuFreeEvent:
+    """The GPU occupancy booked by ``flush`` has ended."""
+
+    time: float
+    flush: FlushEvent
+
+
+class OnlineScheduler:
+    """Event-driven online J-DOB scheduler (see module docstring).
+
+    The scheduler is deliberately deterministic: given the same submitted
+    trace it reproduces :func:`simulate_online_reference` bit for bit —
+    the flush decision compares the next arrival against the *policy* time
+    with arrivals winning ties, and the flush itself fires at
+    ``max(policy_time, newest queued arrival)``.
+    """
+
+    def __init__(self, profile: TaskProfile, fleet: DeviceFleet,
+                 edge: EdgeProfile, *, policy: str = "slack",
+                 window: float = 0.0, keep_frac: float = 0.7,
+                 rho: float = 0.03e9, inner: Callable = jdob_plus,
+                 service: PlannerService | None = None,
+                 on_flush: Callable[[FlushEvent], None] | None = None,
+                 on_gpu_free: Callable[[GpuFreeEvent], None] | None = None,
+                 history: int | None = None):
+        assert policy in POLICIES, f"unknown policy {policy!r}"
+        self.profile = profile
+        self.fleet = fleet
+        self.edge = edge
+        self.policy = policy
+        self.window = window
+        self.keep_frac = keep_frac
+        self.rho = rho
+        self.inner = inner
+        self.service = (service if service is not None
+                        else PlannerService(profile, edge, rho=rho))
+        assert self.service.rho == rho, "service rho disagrees"
+        self._planner = self.service.planner_for(inner)
+        self.on_flush = on_flush
+        self.on_gpu_free = on_gpu_free
+        # point of no return offsets: minimum local latency at f_max
+        self._l_min = fleet.zeta * profile.v()[-1] / fleet.f_max
+        self._seq = itertools.count()
+        self._arrivals: list = []                 # heap of pending arrivals
+        self._timers: list = []                   # heap of gpu-free events
+        self._queue: list[OnlineArrival] = []
+        self.now = 0.0
+        self.gpu_free = 0.0                       # absolute booking horizon
+        #: rich per-flush events; a live server running forever should cap
+        #: this with ``history=N`` (aggregates below are always complete —
+        #: they are scalars, not pinned payloads/schedules)
+        self.flushes: list[FlushEvent] = []
+        self.history = history
+        self.violations = 0
+        self.per_user_energy = np.zeros(fleet.M)
+        self._batches: list[int] = []
+        self._flush_times: list[float] = []
+
+    # ---- submission ----------------------------------------------------
+    def submit(self, arrival: OnlineArrival) -> None:
+        """Queue a future arrival (heap-ordered; equal times keep
+        submission order, matching the reference's stable sort)."""
+        assert 0 <= arrival.user < self.fleet.M
+        heapq.heappush(self._arrivals,
+                       (arrival.arrival, next(self._seq), arrival))
+
+    def submit_many(self, arrivals) -> None:
+        for a in arrivals:
+            self.submit(a)
+
+    # ---- policy --------------------------------------------------------
+    def _policy_time(self) -> float:
+        """The armed flush time for the current (non-empty) queue."""
+        q = self._queue
+        if self.policy == "immediate":
+            return q[-1].arrival
+        if self.policy == "window":
+            return q[0].arrival + self.window
+        if self.policy == "slack":             # keep ≥ keep_frac budget
+            return min(a.arrival + (1.0 - self.keep_frac) * a.rel_deadline
+                       for a in q)
+        # lastcall: the earliest point of no return
+        return min(a.abs_deadline - float(self._l_min[a.user])
+                   for a in q) - 1e-6
+
+    # ---- event processing ----------------------------------------------
+    def _fire_timers(self, upto: float) -> None:
+        while self._timers and self._timers[0][0] <= upto:
+            _, _, ev = heapq.heappop(self._timers)
+            if self.on_gpu_free is not None:
+                self.on_gpu_free(ev)
+
+    def _flush(self, now: float) -> FlushEvent:
+        self.now = now
+        q, self._queue = self._queue, []
+        idx = np.array([a.user for a in q])
+        rel = np.array([a.abs_deadline - now for a in q])
+        late = int(np.sum(rel < self._l_min[idx] - 1e-12))
+        self.violations += late
+        sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
+        t_free = max(self.gpu_free - now, 0.0)
+        if self._planner is not None:
+            s = self._planner.plan([sub], [t_free])[0]
+        else:
+            s = self.inner(self.profile, sub, self.edge, t_free=t_free,
+                           rho=self.rho)
+        # np.add.at, not fancy-index +=: a user may appear twice in a batch
+        np.add.at(self.per_user_energy, idx, s.per_user_energy)
+        # all-local flushes leave the booking horizon alone, but the event
+        # reports when the GPU is actually free, never before the flush
+        gpu_free = max(self.gpu_free, now)
+        if s.offload.any():
+            # edge energy attributed evenly across the batch
+            np.add.at(self.per_user_energy, idx[s.offload],
+                      s.terms["edge"] / s.offload.sum())
+            gpu_free = now + s.t_free_end
+            self.gpu_free = gpu_free
+        ev = FlushEvent(now, q, idx, s, gpu_free, late)
+        self._batches.append(int(s.offload.sum()))
+        self._flush_times.append(now)
+        self.flushes.append(ev)
+        if self.history is not None and len(self.flushes) > self.history:
+            del self.flushes[:-self.history]
+        if self.on_flush is not None:
+            self.on_flush(ev)
+        if s.offload.any():
+            heapq.heappush(self._timers,
+                           (gpu_free, next(self._seq), GpuFreeEvent(gpu_free,
+                                                                    ev)))
+        return ev
+
+    def step(self):
+        """Process the next event; returns it (:class:`OnlineArrival` for
+        an enqueue, :class:`FlushEvent` for a flush) or ``None`` when
+        drained.  GPU-free timers fire as the clock passes them."""
+        if not self._queue:
+            if not self._arrivals:
+                self._fire_timers(np.inf)
+                return None
+            t, _, a = heapq.heappop(self._arrivals)
+            self._fire_timers(t)
+            self.now = t
+            self._queue.append(a)
+            return a
+        t_policy = self._policy_time()
+        if self._arrivals and self._arrivals[0][0] <= t_policy:
+            t, _, a = heapq.heappop(self._arrivals)
+            self._fire_timers(t)
+            self.now = t
+            self._queue.append(a)
+            return a
+        t_fire = max(t_policy, self._queue[-1].arrival)
+        self._fire_timers(t_fire)
+        return self._flush(t_fire)
+
+    def run(self) -> OnlineResult:
+        """Drain every pending event and summarize."""
+        while self.step() is not None:
+            pass
+        return self.result()
+
+    def result(self) -> OnlineResult:
+        return OnlineResult(float(self.per_user_energy.sum()),
+                            len(self._batches), list(self._batches),
+                            self.violations, self.per_user_energy.copy(),
+                            list(self._flush_times))
+
+
 def simulate_online(arrivals: list[OnlineArrival],
                     profile: TaskProfile, fleet: DeviceFleet,
                     edge: EdgeProfile, *, policy: str = "slack",
                     window: float = 0.0, keep_frac: float = 0.7,
                     rho: float = 0.03e9,
-                    inner: Callable = jdob_plus) -> OnlineResult:
+                    inner: Callable = jdob_plus,
+                    service: PlannerService | None = None) -> OnlineResult:
+    """One-shot simulation: submit a whole trace, run to completion.  A
+    thin driver over :class:`OnlineScheduler`; bit-identical to
+    :func:`simulate_online_reference` for every policy on traces with at
+    most one arrival per user per flush.  (With duplicate users inside ONE
+    flush the scheduler's accounting is the correct one — ``np.add.at``
+    accumulates both requests' energies where the seed loop's fancy-index
+    ``+=`` silently dropped duplicates.)"""
+    sched = OnlineScheduler(profile, fleet, edge, policy=policy,
+                            window=window, keep_frac=keep_frac, rho=rho,
+                            inner=inner, service=service)
+    sched.submit_many(sorted(arrivals, key=lambda a: a.arrival))
+    return sched.run()
+
+
+def simulate_online_reference(arrivals: list[OnlineArrival],
+                              profile: TaskProfile, fleet: DeviceFleet,
+                              edge: EdgeProfile, *, policy: str = "slack",
+                              window: float = 0.0, keep_frac: float = 0.7,
+                              rho: float = 0.03e9,
+                              inner: Callable = jdob_plus) -> OnlineResult:
+    """The seed's flush-loop simulator, kept verbatim as the oracle the
+    event-driven scheduler must reproduce bit for bit."""
     arrivals = sorted(arrivals, key=lambda a: a.arrival)
     M = fleet.M
     l_min = fleet.zeta * profile.v()[-1] / fleet.f_max     # (M,)
@@ -75,10 +303,6 @@ def simulate_online(arrivals: list[OnlineArrival],
     violations = 0
     i = 0
 
-    # fast replanning path: flush-time plans go through the batched planner
-    # (power-of-two user buckets => a handful of compiled shapes across all
-    # queue lengths, instead of one XLA recompile per distinct batch size;
-    # the J-DOB+ ordering portfolio runs as batched candidate plans)
     spec = planner_spec(inner, profile)
     planner = (BatchedPlanner(profile, edge, rho=rho, **spec)
                if spec is not None else None)
@@ -97,7 +321,6 @@ def simulate_online(arrivals: list[OnlineArrival],
         s: Schedule = plan_flush(sub, max(gpu_free - now, 0.0))
         per_user[idx] += s.per_user_energy
         if s.offload.any():
-            # edge energy attributed evenly across the batch
             per_user[idx[s.offload]] += s.terms["edge"] / s.offload.sum()
             gpu_free = now + s.t_free_end
         batches.append(int(s.offload.sum()))
@@ -130,21 +353,34 @@ def simulate_online(arrivals: list[OnlineArrival],
                         violations, per_user, flush_times)
 
 
+def _present_fleet(arrivals: list[OnlineArrival], fleet: DeviceFleet
+                   ) -> DeviceFleet:
+    """The sub-fleet of users actually present in ``arrivals``, with each
+    user's deadline replaced by their arrival's relative deadline.  The
+    seed silently assumed exactly one arrival per user indexed 0..M-1;
+    partial traces mis-paired deadlines with users."""
+    by_user = sorted(arrivals, key=lambda a: a.user)
+    users = np.array([a.user for a in by_user], dtype=int)
+    assert len(np.unique(users)) == len(users), \
+        "duplicate arrivals for a user — offline bounds need one request " \
+        "per user (aggregate repeat traffic before calling)"
+    rel = np.array([a.rel_deadline for a in by_user])
+    return dataclasses.replace(fleet.subset(users), deadline=rel)
+
+
 def oracle_bound(arrivals: list[OnlineArrival], profile: TaskProfile,
                  fleet: DeviceFleet, edge: EdgeProfile,
-                 rho: float = 0.03e9) -> float:
-    """Clairvoyant lower bound: OG + J-DOB over the relative deadlines,
-    arrival times ignored."""
-    rel = np.array([a.rel_deadline for a in
-                    sorted(arrivals, key=lambda x: x.user)])
-    sub = dataclasses.replace(fleet, deadline=rel)
-    return optimal_grouping(profile, sub, edge, rho=rho).energy
+                 rho: float = 0.03e9,
+                 service: PlannerService | None = None) -> float:
+    """Clairvoyant lower bound: OG + J-DOB over the relative deadlines of
+    the users actually present, arrival times ignored."""
+    sub = _present_fleet(arrivals, fleet)
+    return optimal_grouping(profile, sub, edge, rho=rho,
+                            service=service).energy
 
 
 def all_local_energy(arrivals, profile, fleet, edge) -> float:
-    rel = np.array([a.rel_deadline for a in
-                    sorted(arrivals, key=lambda x: x.user)])
-    sub = dataclasses.replace(fleet, deadline=rel)
+    sub = _present_fleet(arrivals, fleet)
     return local_computing(profile, sub, edge).energy
 
 

@@ -1,0 +1,219 @@
+"""PlannerService: one owner for planner construction, shape-bucket policy
+and compile caching.
+
+The paper's J-DOB system is a single pipeline — arrivals → OG grouping →
+J-DOB inner solves → batched GPU execution — but the repo used to wire the
+planning side of that pipeline up independently in the OG outer module, the
+online simulator and the serving path, each hand-building its own
+:class:`~repro.core.jdob.BatchedPlanner` and each picking its own padding
+policy.  This module centralizes the three decisions those call sites were
+each making on their own:
+
+* **construction** — :meth:`PlannerService.planner_for` maps an ``inner``
+  solver callable (the J-DOB family: ``jdob_schedule`` / ``jdob_plus`` /
+  the restricted baselines) to a configured planner, memoized per spec so
+  the OG outer module, online flushes and the server share one planner per
+  strategy.  :func:`planner_spec` — the mapping itself — lives here now;
+  :mod:`repro.core.baselines` re-exports it for compatibility.
+* **shape buckets** — :meth:`level_buckets` picks the per-length
+  power-of-two user paddings the OG level solver dispatches against.  The
+  seed padded every DP segment to the fleet-wide bucket, so at M = 80 most
+  of each dispatch was masked users of short segments (the large-M speedup
+  collapsed to ~5x); 2-3 per-length buckets restore it at the cost of a
+  few extra compiles.  Padding is bit-invariant (see ``_pow2_sum``), so
+  the bucket policy can never change results, only wall-clock.
+* **compile caching** — planners constructed by a service share one
+  bounded :class:`~repro.core.jdob.ExecutableCache` (the process-wide one
+  by default), with per-planner hit/miss/eviction counters aggregated by
+  :meth:`stats`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from .cost_models import EdgeProfile
+from .jdob import (BatchedPlanner, ExecutableCache, PlannerStats, _bucket,
+                   shared_executable_cache)
+from .task_model import TaskProfile
+
+
+def planner_spec(inner: Callable, profile: TaskProfile) -> dict | None:
+    """BatchedPlanner constructor kwargs replicating ``inner``, or ``None``
+    when ``inner`` is an arbitrary callable the batched core cannot mirror
+    (callers then fall back to sequential per-group solves)."""
+    # local import: baselines imports jdob only, so this cannot cycle
+    from . import baselines
+    if inner is baselines.jdob_schedule:
+        return dict(sort_keys=("gamma",))
+    if inner is baselines.jdob_plus:
+        return dict(sort_keys=baselines.JDOB_PLUS_SORT_KEYS)
+    if inner is baselines.jdob_no_edge_dvfs:
+        return dict(sort_keys=("gamma",), edge_dvfs=False)
+    if inner is baselines.jdob_binary:
+        return dict(sort_keys=("gamma",), partitions=[0, profile.N])
+    return None
+
+
+class PlannerService:
+    """Constructs, configures and caches the planners one (profile, edge,
+    rho) deployment needs.
+
+    Every consumer of planning — :func:`repro.core.grouping.optimal_grouping`,
+    the event-driven :class:`repro.core.online.OnlineScheduler`, and
+    :class:`repro.serving.CoInferenceServer` — routes through a service so
+    they share compiled shapes and report one coherent stats view.
+
+    ``max_cached_shapes=None`` (default) shares the process-wide executable
+    cache; an integer gives this service a private bounded cache (the right
+    choice for a long-lived server that controls its own memory).
+    """
+
+    def __init__(self, profile: TaskProfile, edge: EdgeProfile, *,
+                 rho: float = 0.03e9,
+                 group_chunk: int = 256, min_user_bucket: int = 4,
+                 min_group_bucket: int = 16,
+                 max_level_buckets: int = 2, bucket_stride: int = 4,
+                 single_bucket_max: int = 64,
+                 max_cached_shapes: int | None = None):
+        assert max_level_buckets >= 1 and bucket_stride >= 2
+        self.profile = profile
+        self.edge = edge
+        self.rho = rho
+        self.group_chunk = group_chunk
+        self.min_user_bucket = min_user_bucket
+        self.min_group_bucket = min_group_bucket
+        self.max_level_buckets = max_level_buckets
+        self.bucket_stride = bucket_stride
+        self.single_bucket_max = single_bucket_max
+        self.cache = (shared_executable_cache() if max_cached_shapes is None
+                      else ExecutableCache(max_cached_shapes))
+        self._planners: dict[tuple, BatchedPlanner] = {}
+
+    # ---- construction --------------------------------------------------
+    def spec_for(self, inner: Callable) -> dict | None:
+        return planner_spec(inner, self.profile)
+
+    def planner(self, *, sort_keys: Sequence[str] = ("gamma",),
+                edge_dvfs: bool = True,
+                partitions: Sequence[int] | None = None) -> BatchedPlanner:
+        """The (memoized) planner for an explicit J-DOB restriction."""
+        key = (tuple(sort_keys), edge_dvfs,
+               None if partitions is None else tuple(partitions))
+        if key not in self._planners:
+            self._planners[key] = BatchedPlanner(
+                self.profile, self.edge, rho=self.rho, sort_keys=sort_keys,
+                edge_dvfs=edge_dvfs, partitions=partitions,
+                group_chunk=self.group_chunk,
+                min_user_bucket=self.min_user_bucket, cache=self.cache)
+        return self._planners[key]
+
+    def planner_for(self, inner: Callable) -> BatchedPlanner | None:
+        """The planner replicating ``inner``, or ``None`` for callables
+        outside the J-DOB family (callers fall back to sequential solves)."""
+        spec = self.spec_for(inner)
+        if spec is None:
+            return None
+        return self.planner(**spec)
+
+    # ---- shape-bucket policy -------------------------------------------
+    @staticmethod
+    def _align(n: int, to: int = 8) -> int:
+        return max(to, to * ((n + to - 1) // to))
+
+    def level_buckets(self, M: int) -> tuple[int, ...]:
+        """Ascending per-length user paddings for a fleet of M users.
+
+        Small fleets (aligned M ≤ ``single_bucket_max``) keep the seed's
+        single compiled shape at width aligned-M: their dispatches are
+        cheap enough that extra compiles cost more than the masked-user
+        waste (padding is bit-invariant at ANY width ≥ the segment length
+        — see ``_pow2_sum`` — so non-power-of-two widths are fine).
+        Large fleets split into up to ``max_level_buckets`` power-of-two
+        buckets spaced ``bucket_stride`` apart — e.g. M = 80 →
+        (32, 128) — so a level's dispatches stop paying for masked
+        users of short segments (the collapse ROADMAP flagged at M = 80);
+        pow-2 widths measured slightly faster than aligned-M here (XLA's
+        sorts/scans pad internally), and they let every fleet size in a
+        stride-4 band share one compiled top shape.  Two buckets measured
+        best cold at M = 80: a third (8-wide) bucket saves almost no
+        dispatch work but costs one more XLA compile and a dispatch per
+        level."""
+        top = self._align(M, max(8, self.min_user_bucket))
+        if top <= self.single_bucket_max:
+            return (top,)
+        out = [_bucket(M, self.min_user_bucket)]
+        b = out[0] // self.bucket_stride
+        while len(out) < self.max_level_buckets and b >= self.min_user_bucket:
+            out.append(b)
+            b //= self.bucket_stride
+        return tuple(reversed(out))
+
+    def bucket_for(self, length: int, buckets: Sequence[int]) -> int:
+        """Smallest bucket covering ``length`` (buckets ascending)."""
+        for b in buckets:
+            if length <= b:
+                return b
+        return buckets[-1]
+
+    def level_shapes(self, M: int) -> list[tuple[int, int]]:
+        """Every (user-bucket, group-pad) batch shape the OG level solver
+        for an M-user fleet can dispatch, ordered by the DP level that
+        first needs it — the prefetch order that overlaps background
+        compiles with the early levels' dispatches."""
+        buckets = self.level_buckets(M)
+        if len(buckets) == 1:
+            return [(buckets[0], min(buckets[0], self.group_chunk))]
+        out = []
+        prev = 0
+        for b in buckets:
+            top = min(b, M)
+            max_count = top - prev          # segments/level in this bucket
+            g, lo = self.min_group_bucket, 0
+            while lo < max_count:
+                out.append((prev + lo + 1, b, min(g, self.group_chunk)))
+                lo = g
+                g *= self.bucket_stride
+            prev = top
+        out.sort()
+        return [(b, g) for (_, b, g) in out]
+
+    def group_pad(self, count: int) -> int | None:
+        """Padded group count for a sub-level batch: a ``bucket_stride``-
+        spaced series starting at ``min_group_bucket`` (coarse on purpose:
+        every extra group shape is an extra XLA compile, and group-dim
+        padding is cheap), capped at ``group_chunk``; ``None`` → let the
+        planner chunk."""
+        if count > self.group_chunk:
+            return None
+        pad = self.min_group_bucket
+        while pad < count:
+            pad *= self.bucket_stride
+        return min(pad, self.group_chunk)
+
+    def level_group_pad(self, buckets: Sequence[int], count: int
+                        ) -> int | None:
+        """Group padding for a level dispatch: single-bucket fleets keep
+        one fixed (seed-style) group shape; bucketed fleets pad to the
+        ``group_pad`` series."""
+        if len(buckets) == 1:
+            return min(buckets[0], self.group_chunk) \
+                if count <= self.group_chunk else None
+        return self.group_pad(count)
+
+    # ---- observability -------------------------------------------------
+    def stats(self) -> PlannerStats:
+        """Aggregate compile/shape-cache counters over this service's
+        planners."""
+        total = PlannerStats()
+        for p in self._planners.values():
+            total = total.merge(p.stats)
+        return total
+
+    def stats_by_planner(self) -> dict[tuple, PlannerStats]:
+        return {k: dataclasses.replace(p.stats)
+                for k, p in self._planners.items()}
+
+    @property
+    def cached_shapes(self) -> int:
+        return len(self.cache)

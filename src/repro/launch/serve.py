@@ -5,6 +5,14 @@ scheduler, executes the partitioned/batched plan on the real model, and
 verifies outputs equal the monolithic forward.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --users 6
+
+``--online`` switches to the event-driven path: requests arrive as a
+Poisson stream and the server's :class:`~repro.core.OnlineScheduler`
+batches them under a flush policy, executing each flush on the model the
+moment it is booked (GPU occupancy threaded between flushes):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --users 6 \\
+      --online --rate 100 --policy slack
 """
 from __future__ import annotations
 
@@ -15,10 +23,71 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import (jdob_schedule, local_computing, make_edge_profile,
-                        make_fleet, profile_from_arch)
+from repro.core import (local_computing, make_edge_profile, make_fleet,
+                        profile_from_arch)
 from repro.models import init_params
-from repro.serving import BlockwiseExecutor, CoInferenceServer, Request
+from repro.serving import CoInferenceServer, Request
+
+
+def _verify(report_logits, executor, reqs) -> float:
+    import jax.numpy as jnp
+    want = np.asarray(executor.full_forward(
+        jnp.asarray(np.stack([r.tokens for r in reqs]))))
+    return float(np.abs(report_logits - want).max())
+
+
+def _serve_offline(server, fleet, profile, edge, reqs, args) -> dict:
+    t0 = time.perf_counter()
+    report = server.serve(reqs)
+    serve_s = time.perf_counter() - t0
+    lc = local_computing(profile, fleet, edge)
+    print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
+          f"(planned+served in {serve_s:.2f}s via planner service)")
+    for g, s in zip(report.groups, report.schedules):
+        print(f"  group {list(g)}: partition ñ={s.partition}, "
+              f"batch={s.batch_size}, f_e={s.f_edge / 1e9:.2f} GHz, "
+              f"energy={s.energy:.4f} J")
+    print(f"total energy: {report.energy:.4f} J "
+          f"(LC: {lc.energy:.4f} J, saving "
+          f"{100 * (1 - report.energy / lc.energy):.1f}%)")
+    err = _verify(report.logits, server.executor, reqs)
+    print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
+    assert err < 1e-3
+    return dict(energy=report.energy, lc=lc.energy, err=err)
+
+
+def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
+    t0 = time.perf_counter()
+    report = server.serve_online(reqs, policy=args.policy,
+                                 window=args.window)
+    serve_s = time.perf_counter() - t0
+    lc = local_computing(profile, fleet, edge)
+    print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
+          f"online policy={args.policy}  rate={args.rate}/s  "
+          f"(planned+served in {serve_s:.2f}s, event-driven)")
+    for ev in report.flushes:
+        print(f"  t={ev.time * 1e3:8.2f} ms  flush users={list(ev.users)}  "
+              f"ñ={ev.schedule.partition}  batch={ev.schedule.batch_size}  "
+              f"energy={ev.schedule.energy:.4f} J  "
+              f"gpu_free={ev.gpu_free * 1e3:.2f} ms")
+    print(f"total energy: {report.energy:.4f} J (LC: {lc.energy:.4f} J)  "
+          f"violations={report.violations}  "
+          f"gpu busy until {report.gpu_busy_until * 1e3:.2f} ms")
+    err = _verify(report.logits, server.executor, reqs)
+    print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
+    assert err < 1e-3
+    if report.violations:
+        # legitimate under tight --beta: requests past their point of no
+        # return by the time the policy flushed — report, don't crash
+        print(f"WARNING: {report.violations} deadline violation(s) — "
+              f"tighten the policy (--policy immediate) or relax --beta")
+    stats = server.service.stats()
+    print(f"planner service: {stats.dispatches} dispatches, "
+          f"{stats.hits} cache hits / {stats.misses} compiles / "
+          f"{stats.evictions} evictions")
+    return dict(energy=report.energy, lc=lc.energy, err=err,
+                violations=report.violations,
+                n_flushes=len(report.flushes))
 
 
 def main(argv=None) -> dict:
@@ -28,6 +97,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--beta", type=float, nargs=2, default=[2.0, 8.0])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--online", action="store_true",
+                    help="event-driven serving over a Poisson arrival stream")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="online arrival rate (requests/s)")
+    ap.add_argument("--policy", default="slack",
+                    choices=["immediate", "window", "slack", "lastcall"])
+    ap.add_argument("--window", type=float, default=0.02)
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch].reduced()
@@ -39,35 +115,18 @@ def main(argv=None) -> dict:
     server = CoInferenceServer(cfg, params, profile, fleet, edge)
 
     rng = np.random.default_rng(args.seed)
+    arrivals = (np.cumsum(rng.exponential(1.0 / args.rate, args.users))
+                if args.online else np.zeros(args.users))
     reqs = [Request(user=m,
                     tokens=rng.integers(0, cfg.vocab_size, args.seq,
                                         dtype=np.int32),
-                    deadline=float(fleet.deadline[m]))
+                    deadline=float(fleet.deadline[m]),
+                    arrival=float(arrivals[m]))
             for m in range(args.users)]
 
-    t0 = time.perf_counter()
-    report = server.serve(reqs)
-    serve_s = time.perf_counter() - t0
-    lc = local_computing(profile, fleet, edge)
-    print(f"arch={cfg.name}  M={args.users}  N={profile.N} blocks  "
-          f"(planned+served in {serve_s:.2f}s via batched segment planner)")
-    for g, s in zip(report.groups, report.schedules):
-        print(f"  group {list(g)}: partition ñ={s.partition}, "
-              f"batch={s.batch_size}, f_e={s.f_edge / 1e9:.2f} GHz, "
-              f"energy={s.energy:.4f} J")
-    print(f"total energy: {report.energy:.4f} J "
-          f"(LC: {lc.energy:.4f} J, saving "
-          f"{100 * (1 - report.energy / lc.energy):.1f}%)")
-
-    # verify against monolithic execution
-    ex = BlockwiseExecutor(cfg, params)
-    import jax.numpy as jnp
-    want = np.asarray(ex.full_forward(
-        jnp.asarray(np.stack([r.tokens for r in reqs]))))
-    err = float(np.abs(report.logits - want).max())
-    print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
-    assert err < 1e-3
-    return dict(energy=report.energy, lc=lc.energy, err=err)
+    if args.online:
+        return _serve_online(server, fleet, profile, edge, reqs, args)
+    return _serve_offline(server, fleet, profile, edge, reqs, args)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 from .engine import BlockwiseExecutor, flatten_layers
-from .server import CoInferenceServer, Request, ServeReport
+from .server import (CoInferenceServer, OnlineServeReport, Request,
+                     ServeReport)
 
 __all__ = ["BlockwiseExecutor", "flatten_layers", "CoInferenceServer",
-           "Request", "ServeReport"]
+           "OnlineServeReport", "Request", "ServeReport"]

@@ -13,6 +13,16 @@
 Outputs are bit-exact with the monolithic forward (tests assert this), and
 the returned report carries the cost-model energy/latency bookkeeping so
 examples can print the paper's tables from a live run.
+
+Two entry points share one :class:`~repro.core.PlannerService` (planners,
+shape buckets and compiled XLA programs are reused across them):
+
+* :meth:`CoInferenceServer.serve` — one-shot: a full wave of requests,
+  grouped by the OG outer module, planned and executed batch by batch.
+* :meth:`CoInferenceServer.serve_online` — event-driven: requests arrive
+  over time (``Request.arrival``); the :class:`~repro.core.OnlineScheduler`
+  batches them under a flush policy and each flush executes on the model
+  the moment it is booked, with GPU occupancy threaded between flushes.
 """
 from __future__ import annotations
 
@@ -23,9 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (BatchedPlanner, DeviceFleet, EdgeProfile, Schedule,
-                        TaskProfile, jdob_schedule, optimal_grouping,
-                        planner_spec)
+from repro.core import (DeviceFleet, EdgeProfile, FlushEvent, OnlineArrival,
+                        OnlineResult, OnlineScheduler, PlannerService,
+                        Schedule, TaskProfile, jdob_schedule,
+                        optimal_grouping)
 from .engine import BlockwiseExecutor
 
 
@@ -33,8 +44,9 @@ from .engine import BlockwiseExecutor
 class Request:
     user: int
     tokens: np.ndarray              # (S,) int32
-    deadline: float                 # seconds
+    deadline: float                 # seconds (relative to arrival)
     vision: np.ndarray | None = None
+    arrival: float = 0.0            # seconds (online serving)
 
 
 @dataclasses.dataclass
@@ -49,10 +61,24 @@ class ServeReport:
     t_free_end: float
 
 
+@dataclasses.dataclass
+class OnlineServeReport:
+    """Event-driven serving outcome: one logits row per request (request
+    order), plus the scheduler's flush timeline and energy bookkeeping."""
+
+    logits: np.ndarray              # (n_requests, S, V)
+    result: OnlineResult
+    flushes: list[FlushEvent]
+    energy: float
+    violations: int
+    gpu_busy_until: float           # absolute time the GPU frees (Eq. 22)
+
+
 class CoInferenceServer:
     def __init__(self, cfg: ArchConfig, params, profile: TaskProfile,
                  fleet: DeviceFleet, edge: EdgeProfile,
-                 inner: Callable = jdob_schedule, rho: float = 0.03e9):
+                 inner: Callable = jdob_schedule, rho: float = 0.03e9,
+                 service: PlannerService | None = None):
         self.cfg = cfg
         self.executor = BlockwiseExecutor(cfg, params)
         self.profile = profile
@@ -60,12 +86,13 @@ class CoInferenceServer:
         self.edge = edge
         self.inner = inner
         self.rho = rho
-        # one batched planner per server: OG's segment solves and every
-        # subsequent serve() reuse its compiled shapes (J-DOB inner family
-        # only; arbitrary inner callables plan sequentially)
-        spec = planner_spec(inner, profile)
-        self.planner = (BatchedPlanner(profile, edge, rho=rho, **spec)
-                        if spec is not None else None)
+        # one planner service per server: OG's segment solves, every
+        # subsequent serve() and the online scheduler share its planners
+        # and compiled shapes (J-DOB inner family only; arbitrary inner
+        # callables plan sequentially)
+        self.service = (service if service is not None
+                        else PlannerService(profile, edge, rho=rho))
+        self.planner = self.service.planner_for(inner)
         n_layers = len(self.executor.layers)
         assert profile.N == n_layers, \
             f"profile N={profile.N} vs layers={n_layers}"
@@ -113,7 +140,8 @@ class CoInferenceServer:
             deadline=np.asarray([r.deadline for r in requests]))
         grouped = optimal_grouping(self.profile, fleet, self.edge,
                                    inner=self.inner, t_free=t_free,
-                                   rho=self.rho, planner=self.planner)
+                                   rho=self.rho, planner=self.planner,
+                                   service=self.service)
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)
@@ -127,3 +155,45 @@ class CoInferenceServer:
             batch_sizes=[s.batch_size for s in grouped.schedules],
             partitions=[s.partition for s in grouped.schedules],
             t_free_end=grouped.t_free_end)
+
+    def scheduler(self, *, policy: str = "slack", window: float = 0.0,
+                  keep_frac: float = 0.7,
+                  on_flush=None, on_gpu_free=None) -> OnlineScheduler:
+        """An event-driven scheduler wired to this server's fleet and
+        planner service (compiled shapes shared with ``serve``)."""
+        return OnlineScheduler(self.profile, self.fleet, self.edge,
+                               policy=policy, window=window,
+                               keep_frac=keep_frac, rho=self.rho,
+                               inner=self.inner, service=self.service,
+                               on_flush=on_flush, on_gpu_free=on_gpu_free)
+
+    def serve_online(self, requests: list[Request], *,
+                     policy: str = "slack", window: float = 0.0,
+                     keep_frac: float = 0.7) -> OnlineServeReport:
+        """Serve requests arriving over time (``Request.arrival``).
+
+        Each policy flush executes its planned batch on the model the
+        moment the scheduler books it — devices run blocks 1..ñ, the edge
+        batches the suffix — with GPU occupancy threaded between flushes.
+        Unlike :meth:`serve`, a user may appear in several flushes (repeat
+        traffic) and requests need not cover the fleet."""
+        S = len(requests[0].tokens)
+        logits = np.zeros((len(requests), S, self.cfg.vocab_size),
+                          np.float32)
+
+        def execute(ev: FlushEvent) -> None:
+            reqs = [a.payload for a in ev.arrivals]
+            rows = [r for (r, _) in reqs]
+            logits[rows] = self._run_schedule([r for (_, r) in reqs],
+                                              ev.schedule)
+
+        sched = self.scheduler(policy=policy, window=window,
+                               keep_frac=keep_frac, on_flush=execute)
+        for row, r in enumerate(requests):
+            sched.submit(OnlineArrival(r.user, r.arrival, r.deadline,
+                                       payload=(row, r)))
+        result = sched.run()
+        return OnlineServeReport(logits=logits, result=result,
+                                 flushes=sched.flushes, energy=result.energy,
+                                 violations=result.violations,
+                                 gpu_busy_until=sched.gpu_free)

@@ -1,0 +1,223 @@
+"""PlannerService: construction memoization, shape-bucket policy, and the
+bounded LRU compile cache with its hit/miss/eviction counters."""
+import numpy as np
+import pytest
+
+from repro.core import (ExecutableCache, PlannerService, jdob_binary,
+                        jdob_no_edge_dvfs, jdob_plus, jdob_schedule,
+                        local_computing, make_edge_profile, make_fleet,
+                        mobilenet_v2_profile, optimal_grouping,
+                        optimal_grouping_reference, planner_spec)
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+
+
+def fleet_for(M, beta, seed=0):
+    return make_fleet(M, PROF, EDGE, beta=beta, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# construction / planner_spec collapse
+# ---------------------------------------------------------------------------
+
+def test_planner_for_memoizes_per_spec():
+    svc = PlannerService(PROF, EDGE)
+    p1 = svc.planner_for(jdob_schedule)
+    p2 = svc.planner_for(jdob_schedule)
+    assert p1 is p2
+    p3 = svc.planner_for(jdob_plus)
+    assert p3 is not p1 and p3.sort_keys == ("gamma", "budget", "energy")
+    assert svc.planner_for(local_computing) is None
+
+
+def test_planner_for_replicates_restricted_baselines():
+    svc = PlannerService(PROF, EDGE)
+    fl = fleet_for(6, 5.0, seed=1)
+    assert (svc.planner_for(jdob_binary).plan([fl])[0].energy
+            == jdob_binary(PROF, fl, EDGE).energy)
+    assert (svc.planner_for(jdob_no_edge_dvfs).plan([fl])[0].energy
+            == jdob_no_edge_dvfs(PROF, fl, EDGE).energy)
+
+
+def test_planner_spec_reexport_compat():
+    """The legacy baselines re-export keeps working after the collapse."""
+    from repro.core.baselines import planner_spec as legacy
+    assert legacy is planner_spec
+    assert planner_spec(jdob_schedule, PROF) == dict(sort_keys=("gamma",))
+    assert planner_spec(local_computing, PROF) is None
+    assert planner_spec(jdob_binary, PROF)["partitions"] == [0, PROF.N]
+
+
+def test_service_planners_share_one_cache():
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=8)
+    assert svc.planner_for(jdob_schedule).cache is svc.cache
+    assert svc.planner_for(jdob_plus).cache is svc.cache
+
+
+# ---------------------------------------------------------------------------
+# shape-bucket policy
+# ---------------------------------------------------------------------------
+
+def test_level_buckets_shapes():
+    svc = PlannerService(PROF, EDGE)
+    # large fleets: per-length pow-2 buckets
+    assert svc.level_buckets(80) == (32, 128)
+    assert svc.level_buckets(100) == (32, 128)
+    # small fleets keep the seed's single compiled shape (aligned M)
+    assert svc.level_buckets(40) == (40,)
+    assert svc.level_buckets(12) == (16,)
+    assert svc.level_buckets(3) == (8,)
+    for M in (3, 12, 40, 80, 100):
+        buckets = svc.level_buckets(M)
+        assert len(buckets) <= svc.max_level_buckets
+        assert buckets[-1] >= M
+    # forcing multi-bucket mode (what the parity tests exercise)
+    svc0 = PlannerService(PROF, EDGE, single_bucket_max=0)
+    assert svc0.level_buckets(12) == (4, 16)
+    assert svc0.level_buckets(80) == (32, 128)
+
+
+def test_bucket_for_picks_smallest_cover():
+    svc = PlannerService(PROF, EDGE)
+    buckets = svc.level_buckets(80)           # (32, 128)
+    assert svc.bucket_for(1, buckets) == 32
+    assert svc.bucket_for(32, buckets) == 32
+    assert svc.bucket_for(33, buckets) == 128
+    assert svc.bucket_for(80, buckets) == 128
+
+
+def test_group_pad_policy():
+    svc = PlannerService(PROF, EDGE)
+    assert svc.group_pad(1) == 16
+    assert svc.group_pad(16) == 16
+    assert svc.group_pad(17) == 64
+    assert svc.group_pad(65) == 256
+    assert svc.group_pad(svc.group_chunk + 1) is None   # planner chunks
+    # single-bucket fleets pin ONE group shape; bucketed use the series
+    assert svc.level_group_pad((40,), 3) == 40
+    assert svc.level_group_pad((40,), 40) == 40
+    assert svc.level_group_pad((32, 128), 3) == 16
+    assert svc.level_group_pad((32, 128), 20) == 64
+
+
+def test_level_shapes_cover_and_order():
+    svc = PlannerService(PROF, EDGE)
+    assert svc.level_shapes(40) == [(40, 40)]           # seed-style
+    shapes = svc.level_shapes(80)
+    assert shapes == [(32, 16), (32, 64), (128, 16), (128, 64)]
+
+
+@pytest.mark.parametrize("M,seed", [(9, 5), (13, 11), (18, 2)])
+def test_per_length_buckets_keep_og_bit_identical(M, seed):
+    """The acceptance property: per-length level buckets never change the
+    grouping DP's result (padding is bit-invariant at any width)."""
+    fl = fleet_for(M, (0.0, 10.0), seed=seed)
+    svc = PlannerService(PROF, EDGE, single_bucket_max=0)   # force buckets
+    assert len(svc.level_buckets(M)) > 1
+    og = optimal_grouping(PROF, fl, EDGE, service=svc)
+    ref = optimal_grouping_reference(PROF, fl, EDGE)
+    assert og.energy == ref.energy
+    assert [g.tolist() for g in og.groups] == [g.tolist() for g in ref.groups]
+    np.testing.assert_array_equal(og.per_user_energy, ref.per_user_energy)
+
+
+@pytest.mark.parametrize("M,seed", [(7, 0), (11, 4)])
+def test_single_bucket_mode_keeps_og_bit_identical(M, seed):
+    """Default small-fleet policy (aligned-M single shape) is equally
+    bit-identical to the sequential reference."""
+    fl = fleet_for(M, (0.0, 10.0), seed=seed)
+    svc = PlannerService(PROF, EDGE)
+    assert len(svc.level_buckets(M)) == 1
+    og = optimal_grouping(PROF, fl, EDGE, service=svc)
+    ref = optimal_grouping_reference(PROF, fl, EDGE)
+    assert og.energy == ref.energy
+    assert [g.tolist() for g in og.groups] == [g.tolist() for g in ref.groups]
+
+
+def test_og_reuses_service_across_calls():
+    """A second fleet through the same service hits the compile cache."""
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=16)
+    optimal_grouping(PROF, fleet_for(6, (0.0, 10.0), seed=0), EDGE,
+                     service=svc)
+    misses_first = svc.stats().misses
+    assert misses_first >= 1
+    optimal_grouping(PROF, fleet_for(6, (2.0, 9.0), seed=1), EDGE,
+                     service=svc)
+    assert svc.stats().misses == misses_first    # same shapes, all hits
+    assert svc.stats().hits > 0
+
+
+# ---------------------------------------------------------------------------
+# bounded LRU compile cache + stats
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_counters():
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=8)
+    planner = svc.planner_for(jdob_schedule)
+    fl = fleet_for(5, (2.0, 8.0), seed=3)
+    planner.plan([fl])
+    assert planner.stats.misses == 1 and planner.stats.hits == 0
+    planner.plan([fl])
+    assert planner.stats.misses == 1 and planner.stats.hits == 1
+    assert planner.stats.dispatches == 2
+    assert planner.stats.groups_planned == 2
+    assert svc.cached_shapes == 1
+
+
+def test_cache_eviction_is_lru_bounded():
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=1)
+    planner = svc.planner_for(jdob_schedule)
+    small = fleet_for(3, 5.0, seed=0)
+    large = fleet_for(9, 5.0, seed=0)
+    planner.plan([small])                       # shape A: compile
+    planner.plan([large])                       # shape B: compile, evict A
+    assert planner.stats.evictions == 1
+    assert len(svc.cache) == 1
+    planner.plan([small])                       # A again: recompile
+    assert planner.stats.misses == 3
+    assert planner.stats.hits == 0
+    # results stay correct through eviction/recompile
+    a = planner.plan([small])[0]
+    b = jdob_schedule(PROF, small, EDGE)
+    assert a.energy == b.energy
+
+
+def test_cache_resize_and_clear():
+    cache = ExecutableCache(max_entries=4)
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=4)
+    planner = svc.planner_for(jdob_schedule)
+    for m in (2, 5, 9, 17):                     # buckets 4, 8, 16, 32
+        planner.plan([fleet_for(m, 5.0, seed=0)])
+    assert len(svc.cache) == 4
+    svc.cache.resize(2)
+    assert len(svc.cache) == 2
+    svc.cache.clear()
+    assert len(svc.cache) == 0
+    assert cache.max_entries == 4               # independent instances
+
+
+def test_cache_key_reuses_across_planners_same_trace():
+    """Two planners with identical specs/shapes share one executable."""
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=8)
+    fl = fleet_for(5, 5.0, seed=2)
+    svc.planner_for(jdob_schedule).plan([fl])
+    before = len(svc.cache)
+    other = PlannerService(PROF, EDGE)  # different service, shared default?
+    # private-vs-shared: svc has a private cache, other uses the shared one
+    assert other.cache is not svc.cache
+    p2 = svc.planner(sort_keys=("gamma",))      # same spec → same planner
+    p2.plan([fl])
+    assert len(svc.cache) == before             # no new compiles
+
+
+def test_stats_aggregation_and_merge():
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=8)
+    fl = fleet_for(4, 5.0, seed=1)
+    svc.planner_for(jdob_schedule).plan([fl])
+    svc.planner_for(jdob_plus).plan([fl])
+    agg = svc.stats()
+    per = svc.stats_by_planner()
+    assert agg.dispatches == sum(s.dispatches for s in per.values())
+    assert agg.misses == sum(s.misses for s in per.values())
+    assert agg.as_dict()["dispatches"] == agg.dispatches
