@@ -1,0 +1,79 @@
+"""CI bench regression gate: freshly-emitted benchmark JSON vs the
+committed snapshot.
+
+The planner benchmark's speedup trajectory (``BENCH_planner.json``) was
+previously unmonitored — a PR could halve the batched planner's advantage
+and nothing would fail.  This script compares a fresh run's per-case
+speedups against the committed snapshot with a tolerance band and exits
+non-zero when any case regresses by more than ``--tolerance`` (default
+30%, generous enough to ride out shared-CI noise; the bench itself
+already takes min-of-repeats).
+
+Cases are keyed by (M, scenario); cases present in only one file are
+reported but never fail the gate (benchmarks may legitimately add or
+retire sizes).  Improvements are reported, never penalized.
+
+  python benchmarks/check_regression.py \\
+      --baseline BENCH_planner.json --fresh BENCH_planner_nightly.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cases(doc: dict) -> dict[tuple, float]:
+    """(M, scenario) → speedup for every result row carrying one."""
+    out = {}
+    for r in doc.get("results", []):
+        if r.get("speedup") is not None:
+            out[(r.get("M"), r.get("scenario"))] = float(r["speedup"])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_planner.json",
+                    help="committed snapshot JSON")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly-emitted JSON to gate")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed fractional speedup regression")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = _cases(json.load(f))
+    with open(args.fresh) as f:
+        fresh = _cases(json.load(f))
+    if not base:
+        print(f"no speedup cases in {args.baseline}; nothing to gate")
+        return 0
+
+    failures = 0
+    print(f"{'case':<28} {'baseline':>9} {'fresh':>9} {'delta':>8}  verdict")
+    for key in sorted(base, key=str):
+        name = f"M={key[0]} {key[1]}"
+        if key not in fresh:
+            print(f"{name:<28} {base[key]:>8.1f}x {'—':>9}  (case missing "
+                  f"from fresh run: reported, not gated)")
+            continue
+        b, f_ = base[key], fresh[key]
+        delta = f_ / b - 1.0
+        ok = f_ >= b * (1.0 - args.tolerance)
+        verdict = "ok" if ok else f"REGRESSION > {args.tolerance:.0%}"
+        print(f"{name:<28} {b:>8.1f}x {f_:>8.1f}x {delta:>+7.1%}  {verdict}")
+        failures += not ok
+    for key in sorted(set(fresh) - set(base), key=str):
+        print(f"M={key[0]} {key[1]}: new case ({fresh[key]:.1f}x), "
+              f"not in baseline")
+    if failures:
+        print(f"{failures} case(s) regressed beyond the "
+              f"{args.tolerance:.0%} band", file=sys.stderr)
+        return 1
+    print("bench trajectory within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

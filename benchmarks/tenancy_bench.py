@@ -1,0 +1,145 @@
+"""Multi-tenant arbitration benchmark: shared-GPU scheduling quality.
+
+For 2/4/8 co-resident tenants (MobileNetV2 variants at distinct input
+resolutions → distinct task profiles, each with its own Poisson fleet and
+deadlines), compares:
+
+* **arbitrated** — the tenancy subsystem: per-tenant slack batching, one
+  shared booking ledger (Eq. 22 global), queued-batch preemption and
+  degrade-to-local admission control.
+* **naive FIFO** — per-tenant FIFO sharing: every arrival flushes
+  immediately and batches merely queue on the GPU in arrival order (no
+  arbitration, no preemption, no admission control).
+* **oracle** — sum of per-tenant clairvoyant bounds with an EXCLUSIVE GPU
+  each: a lower bound no shared-GPU schedule can beat.
+
+The acceptance gate (exit non-zero on failure) requires the arbitrated
+scheduler to beat naive FIFO on total energy at an equal-or-lower
+violation rate in at least 2 of the 3 scenarios.  Results are written as
+machine-readable JSON (``BENCH_tenancy.json``) so the trajectory is
+tracked across PRs.
+
+  PYTHONPATH=src python benchmarks/tenancy_bench.py            # T = 2/4/8
+  PYTHONPATH=src python benchmarks/tenancy_bench.py --dry-run  # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+RESOLUTIONS = (224, 192, 160, 128)
+
+
+def build_scenario(n_tenants: int, users: int, rate: float, seed: int):
+    from repro.core import (Tenant, make_edge_profile, make_fleet,
+                            mobilenet_v2_profile, poisson_arrivals)
+    tenants, traces = [], []
+    for k in range(n_tenants):
+        profile = mobilenet_v2_profile(
+            input_res=RESOLUTIONS[k % len(RESOLUTIONS)])
+        edge = make_edge_profile(profile)
+        beta = (6.0 + 2.0 * (k % 3), 18.0 + 4.0 * (k % 3))
+        fleet = make_fleet(users, profile, edge, beta=beta, seed=seed + k)
+        tenants.append(Tenant(profile, fleet, edge,
+                              name=f"mnv2@{RESOLUTIONS[k % 4]}#{k}"))
+        traces.append(poisson_arrivals(users, rate, fleet,
+                                       seed=seed + 100 + k))
+    return tenants, traces
+
+
+def run_scenario(n_tenants: int, users: int, rate: float, seed: int) -> dict:
+    from repro.core import (MultiTenantScheduler, PlannerService, naive_fifo,
+                            single_tenant_oracle)
+    tenants, traces = build_scenario(n_tenants, users, rate, seed)
+    service = PlannerService(tenants[0].profile, tenants[0].edge)
+
+    t0 = time.perf_counter()
+    mts = MultiTenantScheduler(tenants, service=service, preemption=True,
+                               admission="degrade")
+    mts.submit_traces(traces)
+    arb = mts.run()
+    t_arb = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fifo = naive_fifo(tenants, traces, service=service)
+    t_fifo = time.perf_counter() - t0
+
+    oracle = single_tenant_oracle(tenants, traces, service=service)
+    stats = service.stats()
+    n_req = arb.requests
+    return dict(
+        tenants=n_tenants, users_per_tenant=users, rate_hz=rate, seed=seed,
+        requests=n_req,
+        energy_arbitrated=arb.energy, energy_naive=fifo.energy,
+        energy_oracle=oracle,
+        violations_arbitrated=arb.violations, violations_naive=fifo.violations,
+        violation_rate_arbitrated=arb.violations / n_req,
+        violation_rate_naive=fifo.violations / n_req,
+        preemptions=arb.preemptions, bookings=arb.bookings,
+        degraded=sum(t.degraded for t in arb.tenants),
+        rejected=sum(t.rejected for t in arb.tenants),
+        flushes_arbitrated=sum(t.result.n_flushes for t in arb.tenants),
+        flushes_naive=sum(t.result.n_flushes for t in fifo.tenants),
+        wall_s_arbitrated=t_arb, wall_s_naive=t_fifo,
+        planner_dispatches=stats.dispatches, planner_compiles=stats.misses,
+        cached_shapes=service.cached_shapes,
+        beats_naive=bool(arb.energy < fifo.energy
+                         and arb.violations <= fifo.violations),
+        saving_vs_naive=1.0 - arb.energy / fifo.energy,
+        gap_vs_oracle=arb.energy / oracle - 1.0,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, nargs="+", default=[2, 4, 8])
+    ap.add_argument("--users", type=int, default=8,
+                    help="fleet size per tenant")
+    ap.add_argument("--rate", type=float, default=300.0,
+                    help="per-tenant Poisson arrival rate (requests/s)")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--json", default="BENCH_tenancy.json",
+                    help="machine-readable output path ('' disables)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny scenario set for CI (wiring + gate only)")
+    args = ap.parse_args(argv)
+
+    scenarios = [(2, 3)] if args.dry_run else [(t, args.users)
+                                              for t in args.tenants]
+    print(f"{'T':>3} {'M/t':>4} {'arbitrated':>11} {'naive FIFO':>11} "
+          f"{'oracle':>9} {'saving':>7} {'viol a/n':>9} {'preempt':>7}")
+    records = []
+    for n_tenants, users in scenarios:
+        r = run_scenario(n_tenants, users, args.rate, args.seed)
+        records.append(r)
+        print(f"{n_tenants:>3} {users:>4} {r['energy_arbitrated']:>11.4f} "
+              f"{r['energy_naive']:>11.4f} {r['energy_oracle']:>9.4f} "
+              f"{100 * r['saving_vs_naive']:>6.1f}% "
+              f"{r['violations_arbitrated']:>4}/{r['violations_naive']:<4} "
+              f"{r['preemptions']:>7}")
+    wins = sum(r["beats_naive"] for r in records)
+    need = 1 if args.dry_run else 2
+    print(f"arbitrated beats naive FIFO (energy down, violations <=) in "
+          f"{wins}/{len(records)} scenarios (gate: >= {need})")
+    if args.json:
+        doc = dict(benchmark="tenancy_bench",
+                   mode="dry-run" if args.dry_run else "full",
+                   python=platform.python_version(),
+                   platform=platform.platform(),
+                   jax_platforms=os.environ.get("JAX_PLATFORMS", ""),
+                   gate_wins=wins, gate_needed=need, results=records)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.json} ({len(records)} scenarios)")
+    if wins < need:
+        print("tenancy acceptance gate FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Multi-tenant edge GPU: several models' traffic arbitrated on one
+accelerator (the tenancy subsystem over the paper's J-DOB planner).
+
+Three MobileNetV2 variants (distinct input resolutions → distinct task
+profiles) serve independent Poisson fleets.  The arbitrated scheduler
+(slack batching per tenant + shared booking ledger + queued-batch
+preemption + degrade-to-local admission control) is compared against
+naive per-tenant FIFO sharing and the per-tenant clairvoyant oracle with
+an exclusive GPU each.
+
+PYTHONPATH=src python examples/multi_tenant.py
+"""
+from repro.core import (MultiTenantScheduler, PlannerService, Tenant,
+                        make_edge_profile, make_fleet, mobilenet_v2_profile,
+                        naive_fifo, poisson_arrivals, single_tenant_oracle)
+
+tenants, traces = [], []
+for k, res in enumerate((224, 192, 160)):
+    profile = mobilenet_v2_profile(input_res=res)
+    edge = make_edge_profile(profile)
+    fleet = make_fleet(8, profile, edge, beta=(10.0, 25.0), seed=k)
+    tenants.append(Tenant(profile, fleet, edge, name=f"mnv2@{res}"))
+    traces.append(poisson_arrivals(8, 300.0, fleet, seed=10 + k))
+
+service = PlannerService(tenants[0].profile, tenants[0].edge)
+mts = MultiTenantScheduler(tenants, service=service, preemption=True,
+                           admission="degrade")
+mts.submit_traces(traces)
+arb = mts.run()
+fifo = naive_fifo(tenants, traces, service=service)
+oracle = single_tenant_oracle(tenants, traces, service=service)
+
+print(f"{'tenant':>10s} {'energy (J)':>11s} {'flushes':>7s} {'batches':>16s}")
+for tr in arb.tenants:
+    print(f"{tr.name:>10s} {tr.energy:>11.4f} {tr.result.n_flushes:>7d} "
+          f"{str(tr.result.batch_sizes):>16s}")
+print(f"\narbitrated: {arb.energy:.4f} J  violations={arb.violations}  "
+      f"preemptions={arb.preemptions}  bookings={arb.bookings}")
+print(f"naive FIFO: {fifo.energy:.4f} J  violations={fifo.violations}")
+print(f"oracle (exclusive GPU per tenant, clairvoyant): {oracle:.4f} J")
+assert arb.energy <= fifo.energy
+assert arb.violations <= fifo.violations
+assert arb.energy >= oracle * (1 - 1e-6)
+
+stats = service.stats()
+print(f"\nshared planner family: {stats.dispatches} dispatches, "
+      f"{stats.hits} hits / {stats.misses} compiles "
+      f"({service.cached_shapes} cached shapes amortized across "
+      f"{len(tenants)} tenants)")
+print("\nTenant flushes request slots from ONE booking ledger (Eq. 22 "
+      "holds globally); a tighter-deadline flush may preempt a "
+      "queued-but-not-started batch, which is re-planned against the "
+      "updated occupancy — never dropped — and requests with no feasible "
+      "slot degrade to local computing instead of poisoning a batch.")

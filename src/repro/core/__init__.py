@@ -16,6 +16,10 @@ from .online import (FlushEvent, GpuFreeEvent, OnlineArrival, OnlineResult,
                      OnlineScheduler, all_local_energy, oracle_bound,
                      poisson_arrivals, simulate_online,
                      simulate_online_reference)
+from .tenancy import (ADMISSION_POLICIES, Booking, GpuLedger,
+                      MultiTenantResult, MultiTenantScheduler, Tenant,
+                      TenantResult, min_offload_completion, naive_fifo,
+                      single_tenant_oracle)
 
 __all__ = [
     "TaskProfile", "mobilenet_v2_profile", "profile_from_arch",
@@ -33,4 +37,7 @@ __all__ = [
     "FlushEvent", "GpuFreeEvent", "OnlineArrival", "OnlineResult",
     "OnlineScheduler", "simulate_online", "simulate_online_reference",
     "oracle_bound", "all_local_energy", "poisson_arrivals",
+    "ADMISSION_POLICIES", "Booking", "GpuLedger", "MultiTenantResult",
+    "MultiTenantScheduler", "Tenant", "TenantResult",
+    "min_offload_completion", "naive_fifo", "single_tenant_oracle",
 ]

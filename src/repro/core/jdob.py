@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import itertools
 import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
@@ -339,9 +340,14 @@ class ExecutableCache:
     level by level.  A pending compile is installed into the LRU (and
     counted as the consuming planner's miss) at first lookup."""
 
+    #: distinct thread-name prefix per cache instance, so tests (and
+    #: operators) can attribute live compile threads to their owner
+    _ids = itertools.count()
+
     def __init__(self, max_entries: int = 64):
         assert max_entries >= 1
         self.max_entries = max_entries
+        self.thread_prefix = f"jdob-compile-{next(self._ids)}"
         self._entries: collections.OrderedDict = collections.OrderedDict()
         self._pending: dict = {}
         self._lock = threading.Lock()
@@ -416,7 +422,7 @@ class ExecutableCache:
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(
                     max_workers=max(2, min(4, (os.cpu_count() or 2))),
-                    thread_name_prefix="jdob-compile")
+                    thread_name_prefix=self.thread_prefix)
             self._pending[key] = self._pool.submit(
                 self._compile, args, n_partitions, sort_key)
 
@@ -424,6 +430,20 @@ class ExecutableCache:
         with self._lock:
             self._entries.clear()
             self._pending.clear()
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the background prefetch pool (no-op if never started).
+        Pending prefetches are dropped — a later :meth:`lookup` simply
+        compiles synchronously — and the pool's worker threads exit, so a
+        dropped private cache (e.g. a closed
+        :class:`~repro.core.planner_service.PlannerService`) leaks no
+        threads.  The cache itself stays usable; a new :meth:`prefetch`
+        starts a fresh pool."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+            self._pending.clear()
+        if pool is not None:
+            pool.shutdown(wait=wait, cancel_futures=True)
 
     def resize(self, max_entries: int) -> None:
         assert max_entries >= 1

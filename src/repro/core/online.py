@@ -92,6 +92,8 @@ class FlushEvent:
     schedule: Schedule
     gpu_free: float           # absolute time the GPU frees (Eq. 22)
     violations: int           # requests past their point of no return
+    seq: int = -1             # index into the scheduler's flush timeline
+    replanned: int = 0        # preemption re-plans applied (tenancy layer)
 
 
 @dataclasses.dataclass(eq=False)
@@ -119,6 +121,7 @@ class OnlineScheduler:
                  service: PlannerService | None = None,
                  on_flush: Callable[[FlushEvent], None] | None = None,
                  on_gpu_free: Callable[[GpuFreeEvent], None] | None = None,
+                 on_replan: Callable[[FlushEvent], None] | None = None,
                  history: int | None = None):
         assert policy in POLICIES, f"unknown policy {policy!r}"
         self.profile = profile
@@ -135,6 +138,7 @@ class OnlineScheduler:
         self._planner = self.service.planner_for(inner)
         self.on_flush = on_flush
         self.on_gpu_free = on_gpu_free
+        self.on_replan = on_replan
         # point of no return offsets: minimum local latency at f_max
         self._l_min = fleet.zeta * profile.v()[-1] / fleet.f_max
         self._seq = itertools.count()
@@ -156,8 +160,18 @@ class OnlineScheduler:
     # ---- submission ----------------------------------------------------
     def submit(self, arrival: OnlineArrival) -> None:
         """Queue a future arrival (heap-ordered; equal times keep
-        submission order, matching the reference's stable sort)."""
+        submission order, matching the reference's stable sort).
+
+        Arrivals must be causal: once :meth:`step` has advanced the clock,
+        submitting an arrival earlier than ``now`` would rewind the event
+        heap past decisions already taken (flushes planned, GPU booked), so
+        it raises instead of silently corrupting the timeline."""
         assert 0 <= arrival.user < self.fleet.M
+        if arrival.arrival < self.now:
+            raise ValueError(
+                f"arrival at t={arrival.arrival:.9g}s is earlier than the "
+                f"scheduler clock t={self.now:.9g}s; the event heap cannot "
+                f"rewind — submit arrivals in causal order")
         heapq.heappush(self._arrivals,
                        (arrival.arrival, next(self._seq), arrival))
 
@@ -180,10 +194,52 @@ class OnlineScheduler:
         return min(a.abs_deadline - float(self._l_min[a.user])
                    for a in q) - 1e-6
 
+    # ---- planning ------------------------------------------------------
+    def _plan(self, sub: DeviceFleet, t_free: float) -> Schedule:
+        """Plan one (sub-fleet, t_free) batch through the shared service
+        (sequential fallback for arbitrary ``inner`` callables)."""
+        if self._planner is not None:
+            return self._planner.plan([sub], [t_free])[0]
+        return self.inner(self.profile, sub, self.edge, t_free=t_free,
+                          rho=self.rho)
+
+    def _plan_event(self, ev: FlushEvent, t_free: float) -> Schedule:
+        """Re-plan an existing flush's batch (same members, same flush
+        time) against a different residual occupancy — accounting-free."""
+        rel = np.array([a.abs_deadline - ev.time for a in ev.arrivals])
+        sub = dataclasses.replace(self.fleet.subset(ev.users), deadline=rel)
+        return self._plan(sub, t_free)
+
+    # ---- GPU booking hooks (overridden by the tenancy layer) -----------
+    def _t_free(self, now: float, sub: DeviceFleet | None = None,
+                arrivals: list[OnlineArrival] | None = None) -> float:
+        """Residual GPU occupancy (s) the flush at ``now`` plans against.
+        The base scheduler owns the GPU alone: its private booking horizon
+        is the whole story.  The tenancy layer overrides this to request a
+        slot from the shared ledger (and possibly preempt queued batches)."""
+        return max(self.gpu_free - now, 0.0)
+
+    def _book(self, now: float, s: Schedule) -> float:
+        """Book the planned occupancy; returns the absolute GPU-free time
+        the flush event reports.  All-local flushes leave the booking
+        horizon alone, but the event reports when the GPU is actually
+        free, never before the flush."""
+        gpu_free = max(self.gpu_free, now)
+        if s.offload.any():
+            gpu_free = now + s.t_free_end
+            self.gpu_free = gpu_free
+        return gpu_free
+
+    def _after_flush(self, ev: FlushEvent) -> None:
+        """Post-booking hook, runs before ``on_flush`` (tenancy: ledger
+        registration + re-planning of preempted batches)."""
+
     # ---- event processing ----------------------------------------------
     def _fire_timers(self, upto: float) -> None:
         while self._timers and self._timers[0][0] <= upto:
-            _, _, ev = heapq.heappop(self._timers)
+            t, _, ev = heapq.heappop(self._timers)
+            if ev.flush.gpu_free != t:
+                continue            # booking re-planned away: stale timer
             if self.on_gpu_free is not None:
                 self.on_gpu_free(ev)
 
@@ -195,29 +251,22 @@ class OnlineScheduler:
         late = int(np.sum(rel < self._l_min[idx] - 1e-12))
         self.violations += late
         sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
-        t_free = max(self.gpu_free - now, 0.0)
-        if self._planner is not None:
-            s = self._planner.plan([sub], [t_free])[0]
-        else:
-            s = self.inner(self.profile, sub, self.edge, t_free=t_free,
-                           rho=self.rho)
+        s = self._plan(sub, self._t_free(now, sub, q))
         # np.add.at, not fancy-index +=: a user may appear twice in a batch
         np.add.at(self.per_user_energy, idx, s.per_user_energy)
-        # all-local flushes leave the booking horizon alone, but the event
-        # reports when the GPU is actually free, never before the flush
-        gpu_free = max(self.gpu_free, now)
         if s.offload.any():
             # edge energy attributed evenly across the batch
             np.add.at(self.per_user_energy, idx[s.offload],
                       s.terms["edge"] / s.offload.sum())
-            gpu_free = now + s.t_free_end
-            self.gpu_free = gpu_free
-        ev = FlushEvent(now, q, idx, s, gpu_free, late)
+        gpu_free = self._book(now, s)
+        ev = FlushEvent(now, q, idx, s, gpu_free, late,
+                        seq=len(self._batches))
         self._batches.append(int(s.offload.sum()))
         self._flush_times.append(now)
         self.flushes.append(ev)
         if self.history is not None and len(self.flushes) > self.history:
             del self.flushes[:-self.history]
+        self._after_flush(ev)
         if self.on_flush is not None:
             self.on_flush(ev)
         if s.offload.any():
@@ -225,6 +274,63 @@ class OnlineScheduler:
                            (gpu_free, next(self._seq), GpuFreeEvent(gpu_free,
                                                                     ev)))
         return ev
+
+    def replan_flush(self, ev: FlushEvent, t_free: float,
+                     idle_gpu_free: float | None = None) -> Schedule:
+        """Re-plan an already-flushed, queued-but-not-started batch against
+        an updated residual occupancy (the tenancy layer's preemption
+        path).  The old schedule's accounting is undone and the batch
+        re-planned at its ORIGINAL flush time with the new ``t_free`` —
+        bit-identical to having planned it there in the first place: flush
+        time, membership and the violation count are unchanged; energies,
+        batch size and the booked occupancy follow the new plan.  Fires
+        ``on_replan`` (a live server re-executes the batch) and re-arms the
+        gpu-free timer.  ``idle_gpu_free`` is the absolute GPU-free time to
+        report if the new plan offloads nothing (defaults to the flush
+        time).  Returns the new schedule."""
+        old = ev.schedule
+        idx = ev.users
+        old_gpu_free = ev.gpu_free
+        np.add.at(self.per_user_energy, idx, -old.per_user_energy)
+        if old.offload.any():
+            np.add.at(self.per_user_energy, idx[old.offload],
+                      -old.terms["edge"] / old.offload.sum())
+        s = self._plan_event(ev, t_free)
+        np.add.at(self.per_user_energy, idx, s.per_user_energy)
+        if s.offload.any():
+            np.add.at(self.per_user_energy, idx[s.offload],
+                      s.terms["edge"] / s.offload.sum())
+            gpu_free = ev.time + s.t_free_end
+        else:
+            gpu_free = max(idle_gpu_free if idle_gpu_free is not None
+                           else ev.time, ev.time)
+        ev.schedule = s
+        ev.gpu_free = gpu_free
+        ev.replanned += 1
+        if 0 <= ev.seq < len(self._batches):
+            self._batches[ev.seq] = int(s.offload.sum())
+        # the old timer (if any) went stale via ev.gpu_free; re-arm unless
+        # a still-valid timer already sits on the identical instant
+        if s.offload.any() and not (old.offload.any()
+                                    and gpu_free == old_gpu_free):
+            heapq.heappush(self._timers,
+                           (gpu_free, next(self._seq),
+                            GpuFreeEvent(gpu_free, ev)))
+        if self.on_replan is not None:
+            self.on_replan(ev)
+        return s
+
+    def next_event_time(self) -> float | None:
+        """Absolute time of this scheduler's next event (arrival enqueue
+        or policy flush), or ``None`` when drained — the peek a
+        multi-tenant arbiter orders tenants by.  Mirrors :meth:`step`'s
+        decision rule exactly and never mutates state."""
+        if not self._queue:
+            return self._arrivals[0][0] if self._arrivals else None
+        t_policy = self._policy_time()
+        if self._arrivals and self._arrivals[0][0] <= t_policy:
+            return self._arrivals[0][0]
+        return max(t_policy, self._queue[-1].arrival)
 
     def step(self):
         """Process the next event; returns it (:class:`OnlineArrival` for

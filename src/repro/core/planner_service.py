@@ -30,6 +30,7 @@ each making on their own:
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Callable, Sequence
 
 from .cost_models import EdgeProfile
@@ -66,7 +67,17 @@ class PlannerService:
 
     ``max_cached_shapes=None`` (default) shares the process-wide executable
     cache; an integer gives this service a private bounded cache (the right
-    choice for a long-lived server that controls its own memory).
+    choice for a long-lived server that controls its own memory).  An
+    explicit ``cache`` overrides both — that is how :meth:`for_profile`
+    derives sibling services for OTHER task profiles (the multi-tenant
+    regime: several models on one edge GPU) that still share one compile
+    cache, so executables amortize across every tenant whose batch shapes
+    coincide.
+
+    A service owning a private cache should be :meth:`close`\\ d (or used
+    as a context manager) when retired, so its background prefetch pool's
+    threads exit; dropping the last reference also shuts the pool down via
+    a ``weakref`` finalizer.
     """
 
     def __init__(self, profile: TaskProfile, edge: EdgeProfile, *,
@@ -75,7 +86,8 @@ class PlannerService:
                  min_group_bucket: int = 16,
                  max_level_buckets: int = 2, bucket_stride: int = 4,
                  single_bucket_max: int = 64,
-                 max_cached_shapes: int | None = None):
+                 max_cached_shapes: int | None = None,
+                 cache: ExecutableCache | None = None):
         assert max_level_buckets >= 1 and bucket_stride >= 2
         self.profile = profile
         self.edge = edge
@@ -86,13 +98,53 @@ class PlannerService:
         self.max_level_buckets = max_level_buckets
         self.bucket_stride = bucket_stride
         self.single_bucket_max = single_bucket_max
-        self.cache = (shared_executable_cache() if max_cached_shapes is None
-                      else ExecutableCache(max_cached_shapes))
+        self._owns_cache = cache is None and max_cached_shapes is not None
+        if cache is not None:
+            self.cache = cache
+        elif max_cached_shapes is None:
+            self.cache = shared_executable_cache()
+        else:
+            self.cache = ExecutableCache(max_cached_shapes)
+        if self._owns_cache:
+            # last-reference cleanup: a dropped service must not leak its
+            # private cache's prefetch threads (close() is still the
+            # deterministic way; the finalizer is the safety net)
+            self._finalizer = weakref.finalize(
+                self, ExecutableCache.shutdown, self.cache, False)
         self._planners: dict[tuple, BatchedPlanner] = {}
+        #: profile-family memo shared by every service for_profile derives
+        #: (one coherent stats/cache view across tenants)
+        self._family: dict[tuple, "PlannerService"] = {
+            (id(profile), id(edge)): self}
 
     # ---- construction --------------------------------------------------
     def spec_for(self, inner: Callable) -> dict | None:
         return planner_spec(inner, self.profile)
+
+    def for_profile(self, profile: TaskProfile,
+                    edge: EdgeProfile | None = None) -> "PlannerService":
+        """The sibling service for another (profile, edge) deployment —
+        same knobs, same rho, SAME compile cache.  This is the multi-tenant
+        entry point: N models co-resident on one edge GPU derive one
+        service per task profile from a single root, so compiled
+        executables (keyed only by batch shapes + solver statics, not by
+        profile values) amortize across every tenant, and :meth:`stats`
+        reports the whole family coherently.  Memoized per (profile, edge)
+        identity; returns ``self`` for this service's own pair."""
+        edge = self.edge if edge is None else edge
+        key = (id(profile), id(edge))
+        svc = self._family.get(key)
+        if svc is None:
+            svc = PlannerService(
+                profile, edge, rho=self.rho, group_chunk=self.group_chunk,
+                min_user_bucket=self.min_user_bucket,
+                min_group_bucket=self.min_group_bucket,
+                max_level_buckets=self.max_level_buckets,
+                bucket_stride=self.bucket_stride,
+                single_bucket_max=self.single_bucket_max, cache=self.cache)
+            svc._family = self._family
+            self._family[key] = svc
+        return svc
 
     def planner(self, *, sort_keys: Sequence[str] = ("gamma",),
                 edge_dvfs: bool = True,
@@ -204,10 +256,12 @@ class PlannerService:
     # ---- observability -------------------------------------------------
     def stats(self) -> PlannerStats:
         """Aggregate compile/shape-cache counters over this service's
-        planners."""
+        planners AND every sibling :meth:`for_profile` derived (they share
+        one compile cache, so only the family view is coherent)."""
         total = PlannerStats()
-        for p in self._planners.values():
-            total = total.merge(p.stats)
+        for svc in self._family.values():
+            for p in svc._planners.values():
+                total = total.merge(p.stats)
         return total
 
     def stats_by_planner(self) -> dict[tuple, PlannerStats]:
@@ -217,3 +271,17 @@ class PlannerService:
     @property
     def cached_shapes(self) -> int:
         return len(self.cache)
+
+    # ---- lifecycle -----------------------------------------------------
+    def close(self) -> None:
+        """Shut down the private compile cache's prefetch pool (no-op for
+        services on the shared process-wide cache — that pool outlives any
+        one service by design).  Idempotent."""
+        if self._owns_cache:
+            self.cache.shutdown(wait=True)
+
+    def __enter__(self) -> "PlannerService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

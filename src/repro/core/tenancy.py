@@ -1,0 +1,523 @@
+"""Multi-tenant edge GPU: shared-GPU arbitration across task profiles.
+
+The paper models ONE task profile per edge GPU, but its own premise — "a
+substantial number of DNN inference requests generated daily by mobile
+devices" — means a real edge server multiplexes SEVERAL models on one
+accelerator.  This module is that layer: N *tenants*, each a
+(:class:`~repro.core.task_model.TaskProfile`,
+:class:`~repro.core.cost_models.DeviceFleet`, flush policy) triple backed
+by its own event-driven :class:`~repro.core.online.OnlineScheduler`, share
+one GPU through a single booking ledger:
+
+* :class:`GpuLedger` — the one source of truth for GPU occupancy.  Tenant
+  flushes no longer advance a private ``gpu_free`` horizon; they request a
+  slot, so Eq. 22 serializes occupancy GLOBALLY (a tenant's flush plans
+  against every other tenant's outstanding bookings, not just its own).
+* **Queued-batch preemption** — a booking whose GPU execution has not
+  started yet (it is queued behind earlier occupancy) can be preempted by
+  a tighter-deadline tenant flush that the occupancy would otherwise force
+  to degrade: members with deadline-infeasible offloads drop to local
+  computing, which for requests past their point of no return is a real
+  deadline miss.  Preemption fires only when every preempted batch's
+  deadlines are looser than the preemptor's, and only when the preemptor's
+  energy gain exceeds the victims' re-planning penalty (J-DOB energies are
+  monotone in ``t_free``, so both sides of that comparison are
+  well-defined).  Preempted batches are **re-planned, never dropped**:
+  each is re-solved at its original flush time against the updated
+  ``t_free`` and re-booked behind the preemptor — bit-identical accounting
+  to having planned it there in the first place
+  (:meth:`~repro.core.online.OnlineScheduler.replan_flush`).
+* **Admission control** — an arriving request with no feasible slot (local
+  computing cannot meet its deadline, and no solo offload behind the
+  ledger's current occupancy can either) is rejected or degraded to local
+  computing at the all-local fallback cost (the same per-user energy
+  :func:`~repro.core.online.all_local_energy` charges), instead of
+  poisoning a batch it cannot ride.
+
+All tenants share ONE :class:`~repro.core.planner_service.PlannerService`
+compile cache (`PlannerService.for_profile` derives a sibling service per
+task profile), so XLA executables amortize across models whose batch
+shapes coincide.
+
+With a single tenant the arbiter is bit-identical to a lone
+:class:`OnlineScheduler` — the parity test mirrors the repo's
+scheduler-vs-reference invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .baselines import jdob_plus
+from .cost_models import DeviceFleet, EdgeProfile
+from .online import FlushEvent, OnlineArrival, OnlineResult, OnlineScheduler
+from .planner_service import PlannerService
+from .task_model import TaskProfile
+
+ADMISSION_POLICIES = ("admit", "degrade", "reject")
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One co-resident workload: a task profile served to its own device
+    fleet under its own flush policy.  ``edge`` is this profile's batch
+    cost model on the SHARED accelerator (same hardware, per-profile
+    calibration)."""
+
+    profile: TaskProfile
+    fleet: DeviceFleet
+    edge: EdgeProfile
+    name: str = ""
+    policy: str = "slack"
+    window: float = 0.0
+    keep_frac: float = 0.7
+    inner: Callable = jdob_plus
+
+
+@dataclasses.dataclass(eq=False)
+class Booking:
+    """One tenant flush's slot on the shared GPU.  ``start`` is the
+    earliest instant the GPU can begin this batch (the end of the queue
+    ahead of it at booking time) — until then the batch is queued, not
+    started, and may be preempted.  ``end`` is the absolute GPU-free time
+    (Eq. 22)."""
+
+    tenant: int
+    flush: FlushEvent
+    start: float
+    end: float
+
+    @property
+    def min_deadline(self) -> float:
+        """The tightest absolute deadline in the booked batch."""
+        return min(a.abs_deadline for a in self.flush.arrivals)
+
+
+class GpuLedger:
+    """The single shared GPU-booking ledger.
+
+    Occupancy is a scalar *horizon* (the absolute time the GPU frees after
+    everything booked so far — ends are monotone because every plan's
+    Eq. 22 ``t_free_end`` starts at or after the residual occupancy it was
+    given), plus the list of live bookings preemption reasons over.
+    """
+
+    def __init__(self):
+        self.bookings: list[Booking] = []
+        self.horizon = 0.0
+        self.total_bookings = 0
+        self.total_preempted = 0
+
+    def t_free(self, now: float, exclude: Sequence[Booking] = ()) -> float:
+        """Residual occupancy (s) a flush at ``now`` plans against,
+        optionally pretending ``exclude`` were never booked (the
+        preemption what-if)."""
+        if not exclude:
+            return max(self.horizon - now, 0.0)
+        ends = [b.end for b in self.bookings if b not in exclude]
+        return max(max(ends, default=0.0) - now, 0.0)
+
+    def book(self, tenant: int, ev: FlushEvent) -> Booking:
+        """Register a flushed batch's occupancy (``ev.gpu_free`` is its
+        Eq. 22 end).  Past bookings (already free) are pruned."""
+        self.bookings = [b for b in self.bookings if b.end > ev.time]
+        b = Booking(tenant, ev, start=max(self.horizon, ev.time),
+                    end=ev.gpu_free)
+        self.bookings.append(b)
+        self.horizon = max(self.horizon, b.end)
+        self.total_bookings += 1
+        return b
+
+    def preemption_candidates(self, now: float, tenant: int,
+                              deadline: float) -> list[Booking]:
+        """Bookings a flush by ``tenant`` at ``now`` with tightest absolute
+        deadline ``deadline`` may preempt: queued-but-not-started batches
+        (``start > now``) of OTHER tenants whose every member's deadline is
+        looser."""
+        return [b for b in self.bookings
+                if b.tenant != tenant and b.start > now
+                and b.min_deadline > deadline]
+
+    def remove(self, victims: Sequence[Booking]) -> None:
+        """Drop preempted bookings and rewind the horizon to the remaining
+        occupancy (their batches re-book after re-planning)."""
+        self.bookings = [b for b in self.bookings if b not in victims]
+        self.horizon = max((b.end for b in self.bookings), default=0.0)
+        self.total_preempted += len(victims)
+
+
+class _TenantScheduler(OnlineScheduler):
+    """An :class:`OnlineScheduler` whose flushes request GPU slots from the
+    shared ledger instead of advancing a private horizon."""
+
+    def __init__(self, arbiter: "MultiTenantScheduler", tid: int,
+                 tenant: Tenant, *, service: PlannerService,
+                 history: int | None = None):
+        super().__init__(tenant.profile, tenant.fleet, tenant.edge,
+                         policy=tenant.policy, window=tenant.window,
+                         keep_frac=tenant.keep_frac, rho=arbiter.rho,
+                         inner=tenant.inner, service=service,
+                         history=history)
+        self.arbiter = arbiter
+        self.tid = tid
+        self._pending_preempt: list[Booking] | None = None
+        self._trial_plan = None
+
+    # ---- arbitration ---------------------------------------------------
+    def _plan(self, sub, t_free):
+        # consume the arbitration what-if's schedule instead of re-solving
+        # the identical (sub, t_free) — winner reconstruction was ~90% of
+        # warm planning time, so contended flushes must not pay it thrice
+        s, self._trial_plan = self._trial_plan, None
+        if s is not None:
+            return s
+        return super()._plan(sub, t_free)
+
+    def _t_free(self, now, sub=None, arrivals=None):
+        led = self.arbiter.ledger
+        self._pending_preempt = None
+        self._trial_plan = None
+        t0 = led.t_free(now)
+        if not self.arbiter.preemption or t0 <= 0.0 or sub is None:
+            return t0
+        my_deadline = min(a.abs_deadline for a in arrivals)
+        victims = led.preemption_candidates(now, self.tid, my_deadline)
+        if not victims:
+            return t0
+        t1 = led.t_free(now, exclude=victims)
+        if t1 >= t0:
+            return t0
+        # what-if: does the queued occupancy force deadline-infeasible
+        # offloads?  (J-DOB feasible sets shrink monotonically in t_free,
+        # so fewer offloads at t0 than at t1 means members were forced
+        # local by the queue ahead, not by economics.)
+        s0 = super()._plan(sub, t0)
+        s1 = super()._plan(sub, t1)
+        if s1.batch_size <= s0.batch_size:
+            self._trial_plan = s0
+            return t0
+        # cost-benefit: the preemptor's gain must exceed the victims'
+        # re-planning penalty behind its new booking
+        horizon = now + s1.t_free_end
+        penalty = 0.0
+        for b in sorted(victims, key=lambda b: b.flush.time):
+            sch = self.arbiter.schedulers[b.tenant]
+            s_new = sch._plan_event(b.flush,
+                                    max(horizon - b.flush.time, 0.0))
+            penalty += s_new.energy - b.flush.schedule.energy
+            if s_new.offload.any():
+                horizon = max(horizon, b.flush.time + s_new.t_free_end)
+        if (s0.energy - s1.energy) <= penalty:
+            self._trial_plan = s0
+            return t0
+        self._pending_preempt = victims
+        led.remove(victims)
+        self._trial_plan = s1
+        return t1
+
+    def _book(self, now, s):
+        led = self.arbiter.ledger
+        if s.offload.any():
+            return now + s.t_free_end
+        return max(led.horizon, now)
+
+    def _after_flush(self, ev):
+        led = self.arbiter.ledger
+        if ev.schedule.offload.any():
+            led.book(self.tid, ev)
+        self.gpu_free = led.horizon          # mirror for reporting only
+        victims, self._pending_preempt = self._pending_preempt, None
+        if victims:
+            self.arbiter._replan_preempted(victims)
+
+
+@dataclasses.dataclass
+class TenantResult:
+    """One tenant's outcome: its scheduler aggregates plus the admission-
+    control counters (degraded requests were served LOCALLY outside the
+    scheduler at the all-local fallback cost; rejected ones not at all)."""
+
+    name: str
+    result: OnlineResult
+    admitted: int
+    degraded: int
+    rejected: int
+    degraded_energy: np.ndarray      # (M,) fallback J per user
+
+    @property
+    def energy(self) -> float:
+        return self.result.energy + float(self.degraded_energy.sum())
+
+
+@dataclasses.dataclass
+class MultiTenantResult:
+    tenants: list[TenantResult]
+    preemptions: int                 # bookings preempted (then re-planned)
+    bookings: int                    # total slots the ledger granted
+    gpu_busy_until: float            # ledger horizon at drain
+
+    @property
+    def energy(self) -> float:
+        """Total J across tenants, including degraded-request fallbacks."""
+        return sum(t.energy for t in self.tenants)
+
+    @property
+    def violations(self) -> int:
+        """Deadline misses: scheduler-counted late requests, plus degraded
+        requests (served, but past any feasible slot) and rejections."""
+        return sum(t.result.violations + t.degraded + t.rejected
+                   for t in self.tenants)
+
+    @property
+    def requests(self) -> int:
+        return sum(t.admitted + t.degraded + t.rejected
+                   for t in self.tenants)
+
+
+def min_offload_completion(profile: TaskProfile, fleet: DeviceFleet,
+                           user: int, edge: EdgeProfile,
+                           t_free: float = 0.0) -> float:
+    """Optimistic earliest completion (s, relative to now) of a SOLO
+    offload of ``user`` behind ``t_free`` seconds of residual occupancy:
+    ``min over ñ < N of  max(t_free, γ_ñ) + φ_ñ(1)/f_e,max``.  Batching,
+    device DVFS below f_max and edge DVFS below f_e,max are all slower, so
+    a request this bound cannot fit has NO feasible offload slot."""
+    base, slope = edge.phi_coeffs(profile)
+    phi1 = (base + slope) / edge.f_max                       # (N+1,) s
+    gamma = (profile.O / fleet.rate[user]
+             + fleet.zeta[user] * profile.v() / fleet.f_max[user])
+    return float(np.min(np.maximum(t_free, gamma[:-1]) + phi1[:-1]))
+
+
+class MultiTenantScheduler:
+    """Arbitrates N tenants over one shared edge GPU (module docstring).
+
+    ``admission`` ∈ ``("admit", "degrade", "reject")``: what to do with an
+    arriving request that has no feasible slot — neither local computing
+    nor any offload behind the ledger's occupancy can meet its deadline.
+    ``"admit"`` queues it anyway (the scheduler will count the violation;
+    single-tenant parity mode), ``"degrade"`` serves it locally right away
+    at the all-local fallback cost, ``"reject"`` drops it.
+
+    Callbacks (all optional) receive the tenant index first:
+    ``on_flush(tid, ev)``, ``on_replan(tid, ev)``, ``on_gpu_free(tid,
+    ev)``, ``on_degrade(tid, arrival, energy)``.
+    """
+
+    def __init__(self, tenants: Sequence[Tenant], *, rho: float = 0.03e9,
+                 service: PlannerService | None = None,
+                 preemption: bool = True, admission: str = "admit",
+                 history: int | None = None,
+                 on_flush=None, on_replan=None, on_gpu_free=None,
+                 on_degrade=None):
+        assert len(tenants) >= 1
+        assert admission in ADMISSION_POLICIES, \
+            f"unknown admission policy {admission!r}"
+        self.tenants = list(tenants)
+        self.rho = rho
+        self.preemption = preemption
+        self.admission = admission
+        self.ledger = GpuLedger()
+        self.on_degrade = on_degrade
+        root = (service if service is not None
+                else PlannerService(tenants[0].profile, tenants[0].edge,
+                                    rho=rho))
+        assert root.rho == rho, "service rho disagrees"
+        self.service = root
+        self.schedulers: list[_TenantScheduler] = []
+        for k, t in enumerate(self.tenants):
+            sch = _TenantScheduler(
+                self, k, t, service=root.for_profile(t.profile, t.edge),
+                history=history)
+            if on_flush is not None:
+                sch.on_flush = (lambda ev, k=k: on_flush(k, ev))
+            if on_replan is not None:
+                sch.on_replan = (lambda ev, k=k: on_replan(k, ev))
+            if on_gpu_free is not None:
+                sch.on_gpu_free = (lambda ev, k=k: on_gpu_free(k, ev))
+            self.schedulers.append(sch)
+        M = [t.fleet.M for t in self.tenants]
+        self.admitted = [0] * len(M)
+        self.degraded = [0] * len(M)
+        self.rejected = [0] * len(M)
+        self.degraded_energy = [np.zeros(m) for m in M]
+        #: audit trail of preemption re-plans: (tenant, event, t_free the
+        #: batch was re-solved against, the schedule that solve produced).
+        #: The schedule is SNAPSHOTTED — a booking preempted twice mutates
+        #: the live event again, but each log entry stays checkable:
+        #: re-solving the event's (immutable) membership at the logged
+        #: t_free must reproduce the logged schedule bit for bit
+        self.replan_log: list[tuple[int, FlushEvent, float, object]] = []
+        self.now = 0.0
+
+    # ---- admission control ---------------------------------------------
+    def _no_feasible_slot(self, tid: int, arrival: OnlineArrival) -> bool:
+        """No slot can serve this request: local computing misses the
+        deadline AND no solo offload behind the ledger's occupancy (as of
+        the arrival instant) can meet it either."""
+        t = self.tenants[tid]
+        l_min = float(self.schedulers[tid]._l_min[arrival.user])
+        if arrival.rel_deadline >= l_min - 1e-12:
+            return False
+        t_free = self.ledger.t_free(arrival.arrival)
+        best = min_offload_completion(t.profile, t.fleet, arrival.user,
+                                      t.edge, t_free)
+        return best > arrival.rel_deadline
+
+    def _fallback(self, tid: int, arrival: OnlineArrival) -> None:
+        """Apply the admission policy to a no-feasible-slot request:
+        reject, or degrade-to-local at the all-local fallback cost
+        (exactly what all_local_energy charges this user)."""
+        if self.admission == "reject":
+            self.rejected[tid] += 1
+            return
+        t = self.tenants[tid]
+        rel = max(arrival.rel_deadline, 1e-12)
+        f = float(np.clip(
+            t.fleet.zeta[arrival.user] * t.profile.v()[-1] / rel,
+            t.fleet.f_min[arrival.user], t.fleet.f_max[arrival.user]))
+        e = float(t.fleet.kappa[arrival.user] * t.profile.u()[-1] * f ** 2)
+        self.degraded[tid] += 1
+        self.degraded_energy[tid][arrival.user] += e
+        if self.on_degrade is not None:
+            self.on_degrade(tid, arrival, e)
+
+    # ---- submission ------------------------------------------------------
+    def submit(self, tid: int, arrival: OnlineArrival) -> bool:
+        """Submit one arrival to tenant ``tid``.  Returns True if the
+        request was admitted to the tenant's scheduler queue; False if the
+        admission policy degraded it to local computing or rejected it.
+
+        Admission is evaluated twice: here, against the occupancy known at
+        submission, and again when the arrival EVENT is processed (see
+        :meth:`step`) — bookings made in between can turn an optimistic
+        admission hopeless, and traces submitted entirely up front carry
+        no occupancy at all at submit time."""
+        if arrival.arrival < self.now:
+            # the per-tenant guard compares against that TENANT's clock,
+            # which lags the arbiter's when the tenant is idle — but the
+            # ledger has already serialized bookings up to the GLOBAL
+            # clock, so an arrival behind it would plan acausally
+            raise ValueError(
+                f"arrival at t={arrival.arrival:.9g}s is earlier than the "
+                f"arbiter clock t={self.now:.9g}s; the shared ledger "
+                f"cannot rewind — submit arrivals in causal order")
+        if self.admission != "admit" and self._no_feasible_slot(tid,
+                                                                arrival):
+            self._fallback(tid, arrival)
+            return False
+        self.schedulers[tid].submit(arrival)
+        self.admitted[tid] += 1
+        return True
+
+    def submit_traces(self, traces: Sequence[Sequence[OnlineArrival]]
+                      ) -> None:
+        """One arrival trace per tenant."""
+        assert len(traces) == len(self.tenants)
+        for tid, trace in enumerate(traces):
+            for a in sorted(trace, key=lambda a: a.arrival):
+                self.submit(tid, a)
+
+    # ---- preemption aftermath ------------------------------------------
+    def _replan_preempted(self, victims: Sequence[Booking]) -> None:
+        """Re-plan preempted batches behind the preemptor's fresh booking,
+        in original flush order — re-planned, never dropped."""
+        for b in sorted(victims, key=lambda b: (b.flush.time, b.tenant)):
+            sch = self.schedulers[b.tenant]
+            t_free = max(self.ledger.horizon - b.flush.time, 0.0)
+            s = sch.replan_flush(b.flush, t_free,
+                                 idle_gpu_free=self.ledger.horizon)
+            self.replan_log.append((b.tenant, b.flush, t_free, s))
+            if s.offload.any():
+                self.ledger.book(b.tenant, b.flush)
+            sch.gpu_free = self.ledger.horizon
+
+    # ---- event loop -----------------------------------------------------
+    def step(self):
+        """Process the single next event across all tenants (earliest
+        event time wins; ties break toward the lowest tenant index, a
+        fixed deterministic order).  Returns ``(tid, event)`` or ``None``
+        when every tenant is drained."""
+        best_t, best_k = None, None
+        for k, sch in enumerate(self.schedulers):
+            t = sch.next_event_time()
+            if t is not None and (best_t is None or t < best_t):
+                best_t, best_k = t, k
+        if best_k is None:
+            for sch in self.schedulers:
+                sch._fire_timers(np.inf)
+            return None
+        sch = self.schedulers[best_k]
+        # deliver every tenant's pending gpu-free timers up to the global
+        # clock first, so on_gpu_free hooks fire in chronological order
+        # ACROSS tenants (a drained tenant's timers must not wait for the
+        # whole arbiter to drain)
+        for other in self.schedulers:
+            if other is not sch:
+                other._fire_timers(best_t)
+        ev = sch.step()
+        self.now = max(self.now, sch.now)
+        # event-time admission re-check: occupancy booked since submission
+        # (or a trace submitted entirely up front) can leave an admitted
+        # request without any feasible slot — catch it as it enters the
+        # queue, before it erodes a batch's deadline headroom
+        if (isinstance(ev, OnlineArrival) and self.admission != "admit"
+                and self._no_feasible_slot(best_k, ev)):
+            assert sch._queue and sch._queue[-1] is ev
+            sch._queue.pop()
+            self.admitted[best_k] -= 1
+            self._fallback(best_k, ev)
+        return best_k, ev
+
+    def run(self) -> MultiTenantResult:
+        while self.step() is not None:
+            pass
+        return self.result()
+
+    def result(self) -> MultiTenantResult:
+        return MultiTenantResult(
+            tenants=[TenantResult(
+                name=t.name or f"tenant{k}",
+                result=self.schedulers[k].result(),
+                admitted=self.admitted[k], degraded=self.degraded[k],
+                rejected=self.rejected[k],
+                degraded_energy=self.degraded_energy[k].copy())
+                for k, t in enumerate(self.tenants)],
+            preemptions=self.ledger.total_preempted,
+            bookings=self.ledger.total_bookings,
+            gpu_busy_until=self.ledger.horizon)
+
+
+def naive_fifo(tenants: Sequence[Tenant],
+               traces: Sequence[Sequence[OnlineArrival]], *,
+               rho: float = 0.03e9,
+               service: PlannerService | None = None) -> MultiTenantResult:
+    """Naive per-tenant FIFO sharing baseline: every tenant flushes each
+    arrival immediately (no policy batching across arrivals), flushes
+    serialize on the GPU in arrival order, and there is no preemption and
+    no admission control — the behaviour of N schedulers that merely queue
+    on one accelerator."""
+    fifo = [dataclasses.replace(t, policy="immediate") for t in tenants]
+    mts = MultiTenantScheduler(fifo, rho=rho, service=service,
+                               preemption=False, admission="admit")
+    mts.submit_traces(traces)
+    return mts.run()
+
+
+def single_tenant_oracle(tenants: Sequence[Tenant],
+                         traces: Sequence[Sequence[OnlineArrival]], *,
+                         rho: float = 0.03e9,
+                         service: PlannerService | None = None) -> float:
+    """Sum of per-tenant clairvoyant bounds with an EXCLUSIVE GPU each
+    (arrival times ignored, no cross-tenant contention) — a lower bound no
+    shared-GPU arbitration can beat."""
+    from .online import oracle_bound
+    total = 0.0
+    for t, trace in zip(tenants, traces):
+        svc = (service.for_profile(t.profile, t.edge)
+               if service is not None else None)
+        total += oracle_bound(list(trace), t.profile, t.fleet, t.edge,
+                              rho=rho, service=svc)
+    return total

@@ -8,6 +8,7 @@ via :func:`default_interpret`).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,15 @@ from .jdob_sweep import jdob_sweep_kernel
 
 
 def default_interpret() -> bool:
+    """Interpret-mode default: CPU/GPU containers interpret, TPU compiles.
+    ``JAX_PALLAS_INTERPRET=1`` (or ``0``) overrides either way — nightly CI
+    sets it explicitly so the compiled-path plumbing (``compat.
+    tpu_compiler_params`` and the ``dimension_semantics`` hints) is at
+    least exercised deterministically in interpret mode until real-TPU
+    validation lands (see ROADMAP)."""
+    env = os.environ.get("JAX_PALLAS_INTERPRET", "").strip().lower()
+    if env:                      # empty/unset falls through to the default
+        return env not in ("0", "false", "no")
     return jax.default_backend() != "tpu"
 
 

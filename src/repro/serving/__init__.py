@@ -1,6 +1,9 @@
 from .engine import BlockwiseExecutor, flatten_layers
-from .server import (CoInferenceServer, OnlineServeReport, Request,
-                     ServeReport)
+from .server import (CoInferenceServer, MultiTenantServeReport,
+                     MultiTenantServer, OnlineServeReport, Request,
+                     ServeReport, TenantModel, run_partitioned)
 
 __all__ = ["BlockwiseExecutor", "flatten_layers", "CoInferenceServer",
-           "OnlineServeReport", "Request", "ServeReport"]
+           "MultiTenantServeReport", "MultiTenantServer",
+           "OnlineServeReport", "Request", "ServeReport", "TenantModel",
+           "run_partitioned"]

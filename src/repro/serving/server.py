@@ -27,16 +27,17 @@ shape buckets and compiled XLA programs are reused across them):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (DeviceFleet, EdgeProfile, FlushEvent, OnlineArrival,
-                        OnlineResult, OnlineScheduler, PlannerService,
-                        Schedule, TaskProfile, jdob_schedule,
-                        optimal_grouping)
+from repro.core import (DeviceFleet, EdgeProfile, FlushEvent,
+                        MultiTenantResult, MultiTenantScheduler,
+                        OnlineArrival, OnlineResult, OnlineScheduler,
+                        PlannerService, Schedule, TaskProfile, Tenant,
+                        jdob_plus, jdob_schedule, optimal_grouping)
 from .engine import BlockwiseExecutor
 
 
@@ -74,6 +75,44 @@ class OnlineServeReport:
     gpu_busy_until: float           # absolute time the GPU frees (Eq. 22)
 
 
+def run_partitioned(executor: BlockwiseExecutor, vocab_size: int,
+                    requests: list[Request], sched: Schedule) -> np.ndarray:
+    """Execute one planned batch on a real model: local users run the whole
+    network, offloaded users run blocks 1..ñ "on device", upload the
+    boundary activation, and the edge batches the suffix.  Block index
+    mapping: J-DOB block n ∈ {1..N} is transformer layer n (embedding
+    folded into block 1, LM head into block N — matching
+    ``core.task_model.profile_from_arch``)."""
+    ex = executor
+    tokens = jnp.asarray(np.stack([r.tokens for r in requests]))
+    vision = None
+    if requests[0].vision is not None:
+        vision = jnp.asarray(np.stack([r.vision for r in requests]))
+    n_layers = len(ex.layers)
+    nt = sched.partition
+    h = ex.embed(tokens)
+    out = np.zeros((len(requests),) + h.shape[1:-1] + (vocab_size,),
+                   np.float32)
+
+    off = sched.offload
+    loc = ~off
+    if loc.any():
+        hl = ex.run_blocks(h[loc], 0, n_layers,
+                           vision=None if vision is None else vision[loc])
+        out[np.where(loc)[0]] = np.asarray(ex.head(hl))
+    if off.any():
+        # device side: blocks 1..nt  (nt layers of the transformer, capped
+        # at n_layers — block N is the head, edge-only here)
+        dev_hi = min(nt, n_layers)
+        ho = ex.run_blocks(h[off], 0, dev_hi,
+                           vision=None if vision is None else vision[off])
+        # "upload" boundary activation; edge batches the suffix
+        ho = ex.run_blocks(ho, dev_hi, n_layers,
+                           vision=None if vision is None else vision[off])
+        out[np.where(off)[0]] = np.asarray(ex.head(ho))
+    return out
+
+
 class CoInferenceServer:
     def __init__(self, cfg: ArchConfig, params, profile: TaskProfile,
                  fleet: DeviceFleet, edge: EdgeProfile,
@@ -97,41 +136,9 @@ class CoInferenceServer:
         assert profile.N == n_layers, \
             f"profile N={profile.N} vs layers={n_layers}"
 
-    # block index mapping: J-DOB block n ∈ {1..N} is transformer layer n
-    # (embedding folded into block 1, LM head into block N — matching
-    # core.task_model.profile_from_arch).
     def _run_schedule(self, requests: list[Request], sched: Schedule):
-        ex = self.executor
-        tokens = jnp.asarray(np.stack([r.tokens for r in requests]))
-        vision = None
-        if requests[0].vision is not None:
-            vision = jnp.asarray(np.stack([r.vision for r in requests]))
-        n_layers = len(ex.layers)
-        nt = sched.partition
-        h = ex.embed(tokens)
-        out = np.zeros((len(requests),) + h.shape[1:-1]
-                       + (self.cfg.vocab_size,), np.float32)
-
-        off = sched.offload
-        loc = ~off
-        if loc.any():
-            hl = ex.run_blocks(h[loc], 0, n_layers,
-                               vision=None if vision is None
-                               else vision[loc])
-            out[np.where(loc)[0]] = np.asarray(ex.head(hl))
-        if off.any():
-            # device side: blocks 1..nt  (nt layers of the transformer,
-            # capped at n_layers — block N is the head, edge-only here)
-            dev_hi = min(nt, n_layers)
-            ho = ex.run_blocks(h[off], 0, dev_hi,
-                               vision=None if vision is None
-                               else vision[off])
-            # "upload" boundary activation; edge batches the suffix
-            ho = ex.run_blocks(ho, dev_hi, n_layers,
-                               vision=None if vision is None
-                               else vision[off])
-            out[np.where(off)[0]] = np.asarray(ex.head(ho))
-        return out
+        return run_partitioned(self.executor, self.cfg.vocab_size,
+                               requests, sched)
 
     def serve(self, requests: list[Request], t_free: float = 0.0
               ) -> ServeReport:
@@ -197,3 +204,130 @@ class CoInferenceServer:
                                  flushes=sched.flushes, energy=result.energy,
                                  violations=result.violations,
                                  gpu_busy_until=sched.gpu_free)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving: N models sharing one edge GPU
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TenantModel:
+    """One tenant's model + scheduling bundle for
+    :class:`MultiTenantServer`: its architecture/weights, its J-DOB task
+    profile (one block per layer), its device fleet, its batch cost model
+    on the shared accelerator, and its flush policy."""
+
+    name: str
+    cfg: ArchConfig
+    params: Any
+    profile: TaskProfile
+    fleet: DeviceFleet
+    edge: EdgeProfile
+    policy: str = "slack"
+    window: float = 0.0
+    keep_frac: float = 0.7
+    inner: Callable = jdob_plus
+
+    def tenant(self) -> Tenant:
+        return Tenant(self.profile, self.fleet, self.edge, name=self.name,
+                      policy=self.policy, window=self.window,
+                      keep_frac=self.keep_frac, inner=self.inner)
+
+
+@dataclasses.dataclass
+class MultiTenantServeReport:
+    """Per-tenant logits (request order) + the arbiter's outcome.  A
+    request row is guaranteed written iff ``served[tid][row]`` — rejected
+    requests (admission control) keep their zero rows."""
+
+    logits: list[np.ndarray]
+    served: list[np.ndarray]        # (n_requests,) bool per tenant
+    result: MultiTenantResult
+    energy: float
+    violations: int
+    preemptions: int
+    gpu_busy_until: float
+
+
+class MultiTenantServer:
+    """N co-resident models sharing one edge GPU through the tenancy
+    subsystem (:mod:`repro.core.tenancy`).
+
+    Each tenant's flushes execute on ITS model the moment the shared
+    ledger books them; a preempted queued batch re-executes under its
+    re-planned schedule (partitions may shift — logits are bit-equal
+    either way, which the per-tenant monolithic-forward check pins);
+    admission-degraded requests run monolithically "on device".  All
+    tenants plan through one :class:`~repro.core.PlannerService` family,
+    so compiled planner shapes amortize across models."""
+
+    def __init__(self, models: Sequence[TenantModel], *,
+                 rho: float = 0.03e9,
+                 service: PlannerService | None = None,
+                 preemption: bool = True, admission: str = "admit"):
+        assert len(models) >= 1
+        self.models = list(models)
+        self.executors = [BlockwiseExecutor(m.cfg, m.params)
+                          for m in self.models]
+        for m, ex in zip(self.models, self.executors):
+            assert m.profile.N == len(ex.layers), \
+                f"{m.name}: profile N={m.profile.N} vs layers={len(ex.layers)}"
+        self.rho = rho
+        self.preemption = preemption
+        self.admission = admission
+        self.service = (service if service is not None
+                        else PlannerService(self.models[0].profile,
+                                            self.models[0].edge, rho=rho))
+
+    def serve_online(self, requests: Sequence[Sequence[Request]]
+                     ) -> MultiTenantServeReport:
+        """Serve one request stream per tenant (``Request.arrival`` times
+        interleave freely across tenants)."""
+        assert len(requests) == len(self.models)
+        # a tenant may have no traffic in the window: zero flushes, an
+        # empty logits block
+        logits = [np.zeros((len(reqs),
+                            len(reqs[0].tokens) if reqs else 0,
+                            m.cfg.vocab_size), np.float32)
+                  for m, reqs in zip(self.models, requests)]
+        served = [np.zeros(len(reqs), bool) for reqs in requests]
+
+        def execute(tid: int, ev: FlushEvent) -> None:
+            pairs = [a.payload for a in ev.arrivals]
+            rows = [row for (row, _) in pairs]
+            logits[tid][rows] = run_partitioned(
+                self.executors[tid], self.models[tid].cfg.vocab_size,
+                [r for (_, r) in pairs], ev.schedule)
+            served[tid][rows] = True
+
+        def degrade(tid: int, arrival: OnlineArrival, energy: float) -> None:
+            row, r = arrival.payload
+            out = run_partitioned(
+                self.executors[tid], self.models[tid].cfg.vocab_size, [r],
+                dataclasses.replace(_ALL_LOCAL, offload=np.zeros(1, bool)))
+            logits[tid][row] = out[0]
+            served[tid][row] = True
+
+        mts = MultiTenantScheduler(
+            [m.tenant() for m in self.models], rho=self.rho,
+            service=self.service, preemption=self.preemption,
+            admission=self.admission, on_flush=execute, on_replan=execute,
+            on_degrade=degrade)
+        for tid, reqs in enumerate(requests):
+            order = sorted(range(len(reqs)), key=lambda i: reqs[i].arrival)
+            for row in order:
+                r = reqs[row]
+                mts.submit(tid, OnlineArrival(r.user, r.arrival, r.deadline,
+                                              payload=(row, r)))
+        result = mts.run()
+        return MultiTenantServeReport(
+            logits=logits, served=served, result=result,
+            energy=result.energy, violations=result.violations,
+            preemptions=result.preemptions,
+            gpu_busy_until=result.gpu_busy_until)
+
+
+#: placeholder schedule for degraded (all-local) single-request execution —
+#: only ``offload``/``partition`` matter to :func:`run_partitioned`
+_ALL_LOCAL = Schedule(True, 0.0, 0, 0.0, np.zeros(1, bool),
+                      np.zeros(1), 0.0, {}, np.zeros(1))

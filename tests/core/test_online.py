@@ -175,6 +175,26 @@ def test_bounded_flush_history_keeps_aggregates_complete():
     _assert_same_result(r, ref)                  # aggregates complete
 
 
+def test_submit_rejects_arrivals_behind_the_clock():
+    """Once the clock has advanced, submitting an earlier arrival raises —
+    the event heap must never rewind past flush decisions already taken."""
+    fleet, arrivals = _setup(M=4, rate=50.0)
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy="immediate")
+    sched.submit_many(arrivals)
+    while sched.step() is not None:
+        pass
+    assert sched.now > 0
+    with pytest.raises(ValueError, match="causal"):
+        sched.submit(OnlineArrival(0, sched.now * 0.5,
+                                   float(fleet.deadline[0])))
+    # an arrival exactly AT the clock (and any later one) is fine
+    sched.submit(OnlineArrival(0, sched.now, float(fleet.deadline[0])))
+    sched.submit(OnlineArrival(1, sched.now + 1.0, float(fleet.deadline[1])))
+    r = sched.run()
+    assert r.n_flushes >= 3
+    assert r.flush_times == sorted(r.flush_times)   # clock stayed monotone
+
+
 def test_all_local_flush_reports_sane_gpu_free():
     """A flush that offloads nothing must not report a GPU-free time in
     the past (the booking horizon is untouched, but the event clamps to

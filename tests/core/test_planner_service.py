@@ -221,3 +221,112 @@ def test_stats_aggregation_and_merge():
     assert agg.dispatches == sum(s.dispatches for s in per.values())
     assert agg.misses == sum(s.misses for s in per.values())
     assert agg.as_dict()["dispatches"] == agg.dispatches
+
+
+# ---------------------------------------------------------------------------
+# concurrency: prefetch-pool compiles racing foreground lookups, and clean
+# pool shutdown (no leaked threads once a service is closed/dropped)
+# ---------------------------------------------------------------------------
+
+def _threads_with_prefix(prefix):
+    import threading
+    return [t for t in threading.enumerate() if t.name.startswith(prefix)]
+
+
+def test_prefetch_races_foreground_lookups_consistently():
+    """Many foreground plan() calls racing the background prefetch pool on
+    the SAME shapes must produce correct results and coherent stats (no
+    double compiles of one shape beyond the prefetch/lookup install
+    race's by-design single fallback path)."""
+    import threading
+
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=16)
+    planner = svc.planner_for(jdob_schedule)
+    fleets = [fleet_for(m, 5.0, seed=m) for m in (3, 5, 9, 17)]
+    for fl in fleets:                      # warm prefetches, don't wait
+        planner.prefetch(_bucket_of(fl.M), 1)
+    want = {fl.M: jdob_schedule(PROF, fl, EDGE).energy for fl in fleets}
+
+    errors = []
+
+    def worker(fl):
+        try:
+            for _ in range(3):
+                s = planner.plan([fl])[0]
+                assert s.energy == want[fl.M]
+        except Exception as e:             # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(fl,))
+               for fl in fleets for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    stats = svc.stats()
+    # counters are best-effort under racing threads; the cache itself must
+    # hold exactly one executable per distinct shape
+    assert stats.dispatches > 0
+    assert svc.cached_shapes == len({_bucket_of(fl.M) for fl in fleets})
+    svc.close()
+
+
+def _bucket_of(M, minimum=4):
+    b = minimum
+    while b < M:
+        b *= 2
+    return b
+
+
+def test_close_shuts_down_private_prefetch_pool():
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=8)
+    planner = svc.planner_for(jdob_schedule)
+    planner.prefetch(8, 1)
+    prefix = svc.cache.thread_prefix
+    assert _threads_with_prefix(prefix)            # pool is live
+    svc.close()
+    assert not [t for t in _threads_with_prefix(prefix) if t.is_alive()]
+    # the cache stays usable: a later lookup compiles synchronously
+    s = planner.plan([fleet_for(5, 5.0)])[0]
+    assert s.energy == jdob_schedule(PROF, fleet_for(5, 5.0), EDGE).energy
+    svc.close()                                    # idempotent
+
+
+def test_dropped_service_leaks_no_threads():
+    """Dropping the last reference to a private-cache service shuts its
+    prefetch pool down via the weakref finalizer."""
+    import gc
+    import time
+
+    svc = PlannerService(PROF, EDGE, max_cached_shapes=8)
+    planner = svc.planner_for(jdob_schedule)
+    planner.prefetch(8, 1)
+    # drain the background compile (lookup waits + installs) so the pool
+    # workers are IDLE when the service drops — otherwise the test would
+    # be timing a mid-flight XLA compile, not the finalizer
+    planner.plan([fleet_for(5, 5.0)])
+    prefix = svc.cache.thread_prefix
+    assert _threads_with_prefix(prefix)
+    del svc, planner
+    gc.collect()
+    deadline = time.monotonic() + 30.0
+    while (any(t.is_alive() for t in _threads_with_prefix(prefix))
+           and time.monotonic() < deadline):
+        time.sleep(0.05)
+    assert not [t for t in _threads_with_prefix(prefix) if t.is_alive()]
+
+
+def test_shared_cache_service_close_is_a_noop():
+    """close() must never tear down the process-wide shared pool other
+    services (and future planners) depend on."""
+    svc = PlannerService(PROF, EDGE)               # shared cache
+    planner = svc.planner_for(jdob_schedule)
+    planner.prefetch(8, 1)
+    prefix = svc.cache.thread_prefix
+    svc.close()
+    # pool untouched (it may or may not have threads yet, but shutdown was
+    # NOT called: a fresh prefetch still schedules background work)
+    planner.prefetch(16, 1)
+    assert svc.cache._pool is not None
+    assert _threads_with_prefix(prefix)

@@ -122,6 +122,90 @@ def test_online_serving_repeat_user_traffic():
     assert served == len(allreqs)
 
 
+def _tenant_model(arch, seq, M, beta, seed, name):
+    from repro.serving import TenantModel
+    cfg = ARCHS[arch].reduced()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    profile = profile_from_arch(cfg, seq=seq)
+    edge = make_edge_profile(profile)
+    fleet = make_fleet(M, profile, edge, beta=beta, seed=seed)
+    return TenantModel(name, cfg, params, profile, fleet, edge)
+
+
+def test_multi_tenant_serving_verifies_per_tenant():
+    """Two models sharing one GPU through the tenancy subsystem: each
+    tenant's flushes execute on ITS model and match its monolithic
+    forward; the ledger serializes occupancy across tenants; planners
+    share one service family."""
+    from repro.serving import BlockwiseExecutor, MultiTenantServer
+    models = [_tenant_model("glm4-9b", 16, 4, 8.0, 0, "glm"),
+              _tenant_model("qwen2-moe-a2.7b", 24, 3, 10.0, 1, "qwen")]
+    seqs = [16, 24]
+    rng = np.random.default_rng(0)
+    streams = []
+    for m, seq in zip(models, seqs):
+        t, reqs = 0.0, []
+        for u in range(m.fleet.M):
+            t += float(rng.exponential(1.0 / 300.0))
+            reqs.append(Request(
+                user=u,
+                tokens=rng.integers(0, m.cfg.vocab_size, seq,
+                                    dtype=np.int32),
+                deadline=float(m.fleet.deadline[u]), arrival=t))
+        streams.append(reqs)
+    server = MultiTenantServer(models)
+    report = server.serve_online(streams)
+    assert report.violations == 0
+    assert report.energy > 0
+    total_flushes = 0
+    for tid, (m, reqs) in enumerate(zip(models, streams)):
+        assert report.served[tid].all()
+        ex = BlockwiseExecutor(m.cfg, m.params)
+        want = np.asarray(ex.full_forward(
+            jnp.asarray(np.stack([r.tokens for r in reqs]))))
+        np.testing.assert_allclose(report.logits[tid], want,
+                                   atol=1e-4, rtol=1e-4)
+        total_flushes += report.result.tenants[tid].result.n_flushes
+    assert total_flushes >= 2
+    assert report.gpu_busy_until > 0
+    # one planner-service family planned for both tenants
+    assert server.service.stats().dispatches >= total_flushes
+
+
+def test_multi_tenant_serving_degrades_infeasible_requests_locally():
+    """A request with no feasible slot (deadline below l_min and the
+    solo-offload bound) degrades to local computing: it is still SERVED
+    (monolithic forward on its own device) and charged the fallback
+    energy, while feasible traffic proceeds normally."""
+    from repro.core import min_offload_completion
+    from repro.serving import BlockwiseExecutor, MultiTenantServer
+    m = _tenant_model("glm4-9b", 16, 3, 8.0, 0, "glm")
+    rng = np.random.default_rng(1)
+    l_min = float(m.fleet.zeta[0] * m.profile.v()[-1] / m.fleet.f_max[0])
+    off_min = min_offload_completion(m.profile, m.fleet, 0, m.edge, 0.0)
+    reqs = [Request(user=0,
+                    tokens=rng.integers(0, m.cfg.vocab_size, 16,
+                                        dtype=np.int32),
+                    deadline=0.1 * min(l_min, off_min), arrival=0.0)]
+    for u in range(1, 3):
+        reqs.append(Request(user=u,
+                            tokens=rng.integers(0, m.cfg.vocab_size, 16,
+                                                dtype=np.int32),
+                            deadline=float(m.fleet.deadline[u]),
+                            arrival=0.002 * u))
+    server = MultiTenantServer([m], admission="degrade")
+    report = server.serve_online([reqs])
+    tr = report.result.tenants[0]
+    assert tr.degraded == 1 and tr.admitted == 2
+    assert report.served[0].all()                   # degraded row included
+    assert tr.degraded_energy[0] > 0
+    assert report.violations == 1                   # degraded counts late
+    ex = BlockwiseExecutor(m.cfg, m.params)
+    want = np.asarray(ex.full_forward(
+        jnp.asarray(np.stack([r.tokens for r in reqs]))))
+    np.testing.assert_allclose(report.logits[0], want, atol=1e-4, rtol=1e-4)
+
+
 def test_profile_from_arch_consistency():
     """The J-DOB block profile matches the model: N blocks = N layers, and
     FLOPs scale with seq len."""

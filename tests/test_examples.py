@@ -43,3 +43,8 @@ def test_train_lm_loss_decreases():
 def test_online_serving():
     out = _run("examples/online_serving.py")
     assert "oracle" in out
+
+
+def test_multi_tenant():
+    out = _run("examples/multi_tenant.py")
+    assert "arbitrated" in out and "naive FIFO" in out
