@@ -1,5 +1,5 @@
 """CI bench regression gate: freshly-emitted benchmark JSON vs the
-committed snapshot.
+committed snapshots.
 
 The planner benchmark's speedup trajectory (``BENCH_planner.json``) was
 previously unmonitored — a PR could halve the batched planner's advantage
@@ -9,12 +9,23 @@ non-zero when any case regresses by more than ``--tolerance`` (default
 30%, generous enough to ride out shared-CI noise; the bench itself
 already takes min-of-repeats).
 
-Cases are keyed by (M, scenario); cases present in only one file are
-reported but never fail the gate (benchmarks may legitimately add or
-retire sizes).  Improvements are reported, never penalized.
+The tenancy benchmark's ENERGY savings (``BENCH_tenancy.json``,
+``saving_vs_naive`` per scenario) are gated the same way when
+``--tenancy-baseline``/``--tenancy-fresh`` are given: energies are
+deterministic given the seeds, so the band (``--tenancy-tolerance``,
+absolute percentage points, default 5pp) only absorbs legitimate
+re-tuning — a scheduling change that erodes the arbitration win beyond
+it fails the gate, not just a wall-clock regression.
+
+Cases are keyed by (M, scenario) / (tenants, users); cases present in
+only one file are reported but never fail the gate (benchmarks may
+legitimately add or retire sizes).  Improvements are reported, never
+penalized.
 
   python benchmarks/check_regression.py \\
-      --baseline BENCH_planner.json --fresh BENCH_planner_nightly.json
+      --baseline BENCH_planner.json --fresh BENCH_planner_nightly.json \\
+      --tenancy-baseline BENCH_tenancy.json \\
+      --tenancy-fresh BENCH_tenancy_nightly.json
 """
 from __future__ import annotations
 
@@ -32,24 +43,24 @@ def _cases(doc: dict) -> dict[tuple, float]:
     return out
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", default="BENCH_planner.json",
-                    help="committed snapshot JSON")
-    ap.add_argument("--fresh", required=True,
-                    help="freshly-emitted JSON to gate")
-    ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="max allowed fractional speedup regression")
-    args = ap.parse_args(argv)
+def _savings(doc: dict) -> dict[tuple, float]:
+    """(tenants, users) → saving_vs_naive for every tenancy record."""
+    out = {}
+    for r in doc.get("results", []):
+        if r.get("saving_vs_naive") is not None:
+            out[(r.get("tenants"), r.get("users_per_tenant"))] = \
+                float(r["saving_vs_naive"])
+    return out
 
-    with open(args.baseline) as f:
+
+def _gate_speedups(baseline: str, fresh_path: str, tolerance: float) -> int:
+    with open(baseline) as f:
         base = _cases(json.load(f))
-    with open(args.fresh) as f:
+    with open(fresh_path) as f:
         fresh = _cases(json.load(f))
     if not base:
-        print(f"no speedup cases in {args.baseline}; nothing to gate")
+        print(f"no speedup cases in {baseline}; nothing to gate")
         return 0
-
     failures = 0
     print(f"{'case':<28} {'baseline':>9} {'fresh':>9} {'delta':>8}  verdict")
     for key in sorted(base, key=str):
@@ -60,16 +71,81 @@ def main(argv=None) -> int:
             continue
         b, f_ = base[key], fresh[key]
         delta = f_ / b - 1.0
-        ok = f_ >= b * (1.0 - args.tolerance)
-        verdict = "ok" if ok else f"REGRESSION > {args.tolerance:.0%}"
+        ok = f_ >= b * (1.0 - tolerance)
+        verdict = "ok" if ok else f"REGRESSION > {tolerance:.0%}"
         print(f"{name:<28} {b:>8.1f}x {f_:>8.1f}x {delta:>+7.1%}  {verdict}")
         failures += not ok
     for key in sorted(set(fresh) - set(base), key=str):
         print(f"M={key[0]} {key[1]}: new case ({fresh[key]:.1f}x), "
               f"not in baseline")
+    return failures
+
+
+def _gate_savings(baseline: str, fresh_path: str, tolerance_pp: float) -> int:
+    with open(baseline) as f:
+        base_doc = json.load(f)
+    with open(fresh_path) as f:
+        fresh_doc = json.load(f)
+    base, fresh = _savings(base_doc), _savings(fresh_doc)
+    if not base:
+        print(f"no tenancy savings in {baseline}; nothing to gate")
+        return 0
+    failures = 0
+    print(f"\n{'tenancy case':<28} {'baseline':>9} {'fresh':>9} "
+          f"{'delta':>8}  verdict")
+    for key in sorted(base, key=str):
+        name = f"T={key[0]} M/t={key[1]}"
+        if key not in fresh:
+            print(f"{name:<28} {base[key]:>8.1%} {'—':>9}  (case missing "
+                  f"from fresh run: reported, not gated)")
+            continue
+        b, f_ = base[key], fresh[key]
+        ok = f_ >= b - tolerance_pp
+        verdict = ("ok" if ok
+                   else f"ENERGY REGRESSION > {tolerance_pp:.0%} pts")
+        print(f"{name:<28} {b:>8.1%} {f_:>8.1%} {f_ - b:>+7.1%}  {verdict}")
+        failures += not ok
+    for key in sorted(set(fresh) - set(base), key=str):
+        print(f"T={key[0]} M/t={key[1]}: new case ({fresh[key]:.1%}), "
+              f"not in baseline")
+    # the fresh run's own win-count gate must also still hold
+    if fresh_doc.get("gate_wins", 0) < fresh_doc.get("gate_needed", 0):
+        print(f"fresh tenancy run failed its own gate "
+              f"({fresh_doc['gate_wins']}/{fresh_doc['gate_needed']} wins)",
+              file=sys.stderr)
+        failures += 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_planner.json",
+                    help="committed planner snapshot JSON")
+    ap.add_argument("--fresh", default=None,
+                    help="freshly-emitted planner JSON to gate")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed fractional speedup regression")
+    ap.add_argument("--tenancy-baseline", default=None,
+                    help="committed tenancy snapshot JSON")
+    ap.add_argument("--tenancy-fresh", default=None,
+                    help="freshly-emitted tenancy JSON to gate")
+    ap.add_argument("--tenancy-tolerance", type=float, default=0.05,
+                    help="max allowed absolute drop in saving_vs_naive "
+                         "(fraction, i.e. 0.05 = 5 percentage points)")
+    args = ap.parse_args(argv)
+    if args.fresh is None and args.tenancy_fresh is None:
+        ap.error("nothing to gate: pass --fresh and/or --tenancy-fresh")
+
+    failures = 0
+    if args.fresh is not None:
+        failures += _gate_speedups(args.baseline, args.fresh, args.tolerance)
+    if args.tenancy_fresh is not None:
+        failures += _gate_savings(
+            args.tenancy_baseline or "BENCH_tenancy.json",
+            args.tenancy_fresh, args.tenancy_tolerance)
     if failures:
-        print(f"{failures} case(s) regressed beyond the "
-              f"{args.tolerance:.0%} band", file=sys.stderr)
+        print(f"{failures} case(s) regressed beyond tolerance",
+              file=sys.stderr)
         return 1
     print("bench trajectory within tolerance")
     return 0

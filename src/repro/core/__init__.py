@@ -12,14 +12,16 @@ from .planner_service import PlannerService, planner_spec
 from .bruteforce import brute_force
 from .grouping import (GroupedSchedule, optimal_grouping,
                        optimal_grouping_reference, single_group)
+from .timeline import (OCCUPANCY_MODES, GpuTimeline, Reservation,
+                       TimelineCursor, rescale_edge_dvfs)
 from .online import (FlushEvent, GpuFreeEvent, OnlineArrival, OnlineResult,
                      OnlineScheduler, all_local_energy, oracle_bound,
                      poisson_arrivals, simulate_online,
                      simulate_online_reference)
 from .tenancy import (ADMISSION_POLICIES, Booking, GpuLedger,
-                      MultiTenantResult, MultiTenantScheduler, Tenant,
-                      TenantResult, min_offload_completion, naive_fifo,
-                      single_tenant_oracle)
+                      MultiTenantResult, MultiTenantScheduler, ReplanRecord,
+                      Tenant, TenantResult, min_offload_completion,
+                      naive_fifo, single_tenant_oracle)
 
 __all__ = [
     "TaskProfile", "mobilenet_v2_profile", "profile_from_arch",
@@ -34,10 +36,12 @@ __all__ = [
     "brute_force",
     "GroupedSchedule", "optimal_grouping", "optimal_grouping_reference",
     "single_group",
+    "OCCUPANCY_MODES", "GpuTimeline", "Reservation", "TimelineCursor",
+    "rescale_edge_dvfs",
     "FlushEvent", "GpuFreeEvent", "OnlineArrival", "OnlineResult",
     "OnlineScheduler", "simulate_online", "simulate_online_reference",
     "oracle_bound", "all_local_energy", "poisson_arrivals",
     "ADMISSION_POLICIES", "Booking", "GpuLedger", "MultiTenantResult",
-    "MultiTenantScheduler", "Tenant", "TenantResult",
+    "MultiTenantScheduler", "ReplanRecord", "Tenant", "TenantResult",
     "min_offload_completion", "naive_fifo", "single_tenant_oracle",
 ]

@@ -44,6 +44,7 @@ import numpy as np
 from .cost_models import DeviceFleet
 from .jdob import BatchedPlanner, Schedule, jdob_schedule
 from .planner_service import PlannerService
+from .timeline import GpuTimeline, TimelineCursor
 
 
 @dataclasses.dataclass
@@ -62,29 +63,33 @@ class GroupedSchedule:
         return out
 
 
-def _run_dp(M: int, t_free: float, solve, level_prefetch=None
+def _run_dp(M: int, cursor: TimelineCursor, solve, level_prefetch=None
             ) -> list[tuple[int, int]]:
-    """The shared prefix DP: ``dp[j] = (energy, t_free, split i)`` for
-    users [0, j), folding ``solve(i, j, tf_i)`` with ascending-``i``
-    tie-breaks.  ``level_prefetch(j, dp)``, when given, runs before level j
-    folds so a batched backend can warm every (i, j, tf_i) solve at once.
-    Returns the chain of contiguous segments covering [0, M).  Both
-    grouping implementations run THIS function — their bit-for-bit parity
-    is structural, not coincidental."""
+    """The shared prefix DP: ``dp[j] = (energy, timeline cursor, split i)``
+    for users [0, j), folding ``solve(i, j, cursor_i.t_free)`` with
+    ascending-``i`` tie-breaks.  Occupancy threads through a
+    :class:`~repro.core.timeline.TimelineCursor` — the serialized scalar
+    view of the GPU timeline, which ``advance`` folds exactly as Eq. 22
+    did, so the DP consumes the same occupancy abstraction the online and
+    tenancy layers book against.  ``level_prefetch(j, dp)``, when given,
+    runs before level j folds so a batched backend can warm every
+    (i, j, tf_i) solve at once.  Returns the chain of contiguous segments
+    covering [0, M).  Both grouping implementations run THIS function —
+    their bit-for-bit parity is structural, not coincidental."""
     INF = np.inf
-    dp: list[tuple[float, float, int]] = [(0.0, t_free, -1)]
+    dp: list[tuple[float, TimelineCursor, int]] = [(0.0, cursor, -1)]
     for j in range(1, M + 1):
         if level_prefetch is not None:
             level_prefetch(j, dp)
-        best = (INF, t_free, 0)
+        best = (INF, cursor, 0)
         for i in range(j):
-            e_i, tf_i, _ = dp[i]
+            e_i, cur_i, _ = dp[i]
             if not np.isfinite(e_i):
                 continue
-            s = solve(i, j, tf_i)
+            s = solve(i, j, cur_i.t_free)
             cand = e_i + s.energy
             if cand < best[0]:
-                best = (cand, s.t_free_end, i)
+                best = (cand, cur_i.advance(s), i)
         dp.append(best)
     chain: list[tuple[int, int]] = []
     j = M
@@ -96,18 +101,27 @@ def _run_dp(M: int, t_free: float, solve, level_prefetch=None
     return chain
 
 
-def _collect_chain(chain, order, solve, t_free: float) -> GroupedSchedule:
-    """Walk the DP-selected chain threading t_free exactly (Eq. 22)."""
+def _collect_chain(chain, order, solve, cursor: TimelineCursor,
+                   timeline: GpuTimeline | None = None) -> GroupedSchedule:
+    """Walk the DP-selected chain threading the timeline cursor exactly
+    (Eq. 22 as the serialized special case).  When a ``timeline`` is
+    given, each offloading group's occupancy is committed as a
+    reservation (tenant −1, flush-less), so ``t_free_end`` is derived
+    from the reservations rather than a free-floating scalar."""
     groups, schedules = [], []
-    tf = t_free
     total = 0.0
     for (i, j) in chain:
-        s = solve(i, j, tf)
+        s = solve(i, j, cursor.t_free)
         groups.append(order[i:j])
         schedules.append(s)
         total += s.energy
-        tf = s.t_free_end
-    return GroupedSchedule(total, groups, schedules, tf)
+        if timeline is not None and s.offload.any():
+            timeline.reserve(-1, cursor.t_free, s.t_free_end,
+                             gpu_start=s.gpu_start, f_edge=s.f_edge)
+        cursor = cursor.advance(s)
+    t_free_end = (timeline.horizon if timeline is not None
+                  and timeline.reservations else cursor.t_free)
+    return GroupedSchedule(total, groups, schedules, t_free_end)
 
 
 def optimal_grouping(profile, fleet: DeviceFleet, edge,
@@ -115,7 +129,8 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
                      t_free: float = 0.0, rho: float = 0.03e9,
                      max_groups: int | None = None,
                      planner: BatchedPlanner | None = None,
-                     service: PlannerService | None = None
+                     service: PlannerService | None = None,
+                     timeline: GpuTimeline | None = None
                      ) -> GroupedSchedule:
     """OG over the deadline-sorted fleet.  ``inner`` picks the per-group
     solver; the J-DOB family routes through the planner service (pass a
@@ -123,7 +138,12 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     calls), other callables fall back to
     :func:`optimal_grouping_reference`.  ``max_groups`` is accepted for API
     compatibility and, as in the seed implementation, not enforced (the DP
-    picks the group count freely)."""
+    picks the group count freely).  ``timeline`` plugs the DP into a GPU
+    timeline: the starting occupancy is read from it and the winning
+    chain's group occupancies are committed as reservations (serialized
+    semantics — the DP's threading IS Eq. 22's special case)."""
+    if timeline is not None:
+        t_free = max(t_free, timeline.t_free(0.0))
     if service is None:
         service = PlannerService(profile, edge, rho=rho)
     else:
@@ -135,7 +155,8 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
         # ``inner`` is authoritative: an arbitrary callable always takes
         # the sequential path, even when a prebuilt planner was supplied
         return optimal_grouping_reference(profile, fleet, edge, inner,
-                                          t_free, rho, max_groups)
+                                          t_free, rho, max_groups,
+                                          timeline=timeline)
     if planner is None:
         planner = service.planner(**spec)
     else:
@@ -197,20 +218,23 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
         # batched dispatch
         need = []
         for i in range(j):
-            e_i, tf_i, _ = dp[i]
-            if np.isfinite(e_i) and (i, j, round(tf_i, 9)) not in cache:
-                need.append((i, j, tf_i))
+            e_i, cur_i, _ = dp[i]
+            if np.isfinite(e_i) and (i, j, round(cur_i.t_free, 9)) \
+                    not in cache:
+                need.append((i, j, cur_i.t_free))
         if need:
             solve_many(need)
 
-    chain = _run_dp(M, t_free, solve, level_prefetch)
-    return _collect_chain(chain, order, solve, t_free)
+    chain = _run_dp(M, TimelineCursor(t_free), solve, level_prefetch)
+    return _collect_chain(chain, order, solve, TimelineCursor(t_free),
+                          timeline)
 
 
 def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
                                inner: Callable = jdob_schedule,
                                t_free: float = 0.0, rho: float = 0.03e9,
-                               max_groups: int | None = None
+                               max_groups: int | None = None,
+                               timeline: GpuTimeline | None = None
                                ) -> GroupedSchedule:
     """The seed's sequential DP: one ``inner`` dispatch per (segment,
     t_free) with per-prefix t_free threading.  O(M²) dispatches — kept as
@@ -229,8 +253,11 @@ def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
                                edge, t_free=tf, rho=rho)
         return cache[key]
 
-    chain = _run_dp(M, t_free, solve)
-    return _collect_chain(chain, order, solve, t_free)
+    if timeline is not None:
+        t_free = max(t_free, timeline.t_free(0.0))
+    chain = _run_dp(M, TimelineCursor(t_free), solve)
+    return _collect_chain(chain, order, solve, TimelineCursor(t_free),
+                          timeline)
 
 
 def single_group(profile, fleet, edge, inner=jdob_schedule,

@@ -70,10 +70,23 @@ class Schedule:
     t_free_end: float             # Eq. 22: when the GPU frees up
     terms: dict                   # energy breakdown
     per_user_energy: np.ndarray   # (M,)
+    # reservation geometry (consumed by core.timeline): the edge run is
+    # gpu_busy = φ_ñ(B)/f_e seconds ending at t_free_end, and its energy
+    # is edge_psi·f_e² — all zero for an all-local plan
+    gpu_busy: float = 0.0         # s the GPU is genuinely occupied
+    edge_phi: float = 0.0         # φ_ñ(B): suffix GPU cycles (Hz·s)
+    edge_psi: float = 0.0         # ψ_ñ(B): edge energy / f_e² (J/Hz²)
 
     @property
     def batch_size(self) -> int:
         return int(self.offload.sum())
+
+    @property
+    def gpu_start(self) -> float:
+        """When the GPU genuinely begins this batch (relative, like
+        ``t_free_end``): uploads may delay it past the residual occupancy
+        the plan was given."""
+        return self.t_free_end - self.gpu_busy
 
 
 def _prep_blocks(profile: TaskProfile, edge: EdgeProfile) -> dict:
@@ -510,6 +523,7 @@ class BatchedPlanner:
             self.part_mask = jnp.asarray(pm)
         else:
             self.part_mask = None
+        self.phi_b, self.phi_s = edge.phi_coeffs(profile)
         self.psi_b, self.psi_s = edge.psi_coeffs(profile)
         self._vN = profile.v()[-1]
         self._uN = profile.u()[-1]
@@ -635,13 +649,17 @@ class BatchedPlanner:
         f_e = float(self.f_sweep_np[fi])
         eu = np.asarray(out["e_user"][g])[:M]
         # breakdown
+        B = int(off_b.sum())
         up = float((profile.O[nt] / fleet.rate * fleet.p_up)[off_b].sum())
-        edge_e = float((self.psi_b[nt] + self.psi_s[nt] * off_b.sum())
-                       * f_e ** 2)
+        edge_phi = float(self.phi_b[nt] + self.phi_s[nt] * B)
+        edge_psi = float(self.psi_b[nt] + self.psi_s[nt] * B)
+        edge_e = edge_psi * f_e ** 2
         dev = e_best - up - edge_e
         return Schedule(True, e_best, nt, f_e, off_b, f_dev_b,
                         float(np.asarray(out["t_end"][g])),
-                        dict(device=dev, uplink=up, edge=edge_e), eu)
+                        dict(device=dev, uplink=up, edge=edge_e), eu,
+                        gpu_busy=edge_phi / f_e, edge_phi=edge_phi,
+                        edge_psi=edge_psi)
 
 
 def jdob_schedule(profile: TaskProfile,

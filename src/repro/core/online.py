@@ -27,8 +27,12 @@ Two layers:
   incrementally between :meth:`step` calls — the live-server regime);
   whenever the queue changes, the policy re-arms the flush timer; a flush
   plans through the shared :class:`~repro.core.planner_service.\
-PlannerService` and books the GPU until the planned ``t_free_end``
-  (Eq. 22), emitting a gpu-free event other components can key off.
+PlannerService` and books a :class:`~repro.core.timeline.Reservation`
+  on the scheduler's :class:`~repro.core.timeline.GpuTimeline` —
+  serialized mode reproduces the scalar Eq. 22 horizon bit for bit, while
+  ``occupancy="interleaved"`` gap-fills small batches into idle windows
+  and re-selects f_e per flush against the reservation's actual slack —
+  emitting a gpu-free event other components can key off.
   ``on_flush`` / ``on_gpu_free`` callbacks let a real server execute the
   planned batch on a model the moment it is scheduled —
   :class:`repro.serving.CoInferenceServer` drives exactly this hook.
@@ -56,6 +60,7 @@ from .grouping import optimal_grouping
 from .jdob import BatchedPlanner, Schedule
 from .planner_service import PlannerService, planner_spec
 from .task_model import TaskProfile
+from .timeline import OCCUPANCY_MODES, GpuTimeline, rescale_edge_dvfs
 
 POLICIES = ("immediate", "window", "slack", "lastcall")
 
@@ -80,6 +85,10 @@ class OnlineResult:
     violations: int
     per_user_energy: np.ndarray
     flush_times: list[float]
+    #: per-flush edge frequency (Hz) actually dispatched — ``None`` for
+    #: all-local flushes; under interleaved occupancy this is the
+    #: slack-rescaled f_e, not necessarily the planner grid's choice
+    f_edges: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(eq=False)
@@ -122,8 +131,15 @@ class OnlineScheduler:
                  on_flush: Callable[[FlushEvent], None] | None = None,
                  on_gpu_free: Callable[[GpuFreeEvent], None] | None = None,
                  on_replan: Callable[[FlushEvent], None] | None = None,
-                 history: int | None = None):
+                 history: int | None = None,
+                 occupancy: str = "serialized",
+                 timeline: GpuTimeline | None = None,
+                 dvfs_slack_frac: float = 0.0,
+                 dvfs_quiescent: bool = True):
         assert policy in POLICIES, f"unknown policy {policy!r}"
+        assert occupancy in OCCUPANCY_MODES, \
+            f"unknown occupancy mode {occupancy!r}"
+        assert 0.0 <= dvfs_slack_frac <= 1.0
         self.profile = profile
         self.fleet = fleet
         self.edge = edge
@@ -141,12 +157,45 @@ class OnlineScheduler:
         self.on_replan = on_replan
         # point of no return offsets: minimum local latency at f_max
         self._l_min = fleet.zeta * profile.v()[-1] / fleet.f_max
+        # the smallest GPU busy time any offload of this profile can have
+        # (best block boundary, batch of 1, f_e,max) — idle windows
+        # narrower than this cannot host a flush, so gap probes skip them
+        _phi_base, _phi_slope = edge.phi_coeffs(profile)
+        self._min_gap = float(np.min(_phi_base[:-1] + _phi_slope[:-1])
+                              / edge.f_max)
         self._seq = itertools.count()
         self._arrivals: list = []                 # heap of pending arrivals
         self._timers: list = []                   # heap of gpu-free events
         self._queue: list[OnlineArrival] = []
         self.now = 0.0
-        self.gpu_free = 0.0                       # absolute booking horizon
+        #: the occupancy subsystem this scheduler books against — its own
+        #: private timeline by default, the arbiter's SHARED one in the
+        #: multi-tenant regime
+        self.occupancy = occupancy
+        self.timeline = (timeline if timeline is not None
+                         else GpuTimeline(mode=occupancy))
+        self.tenant_id = 0
+        #: per-flush DVFS aggressiveness while traffic is still pending:
+        #: the fraction of a TAIL slot's residual slack the edge-frequency
+        #: rescale may consume.  Stretching the tail extends the horizon
+        #: every later flush plans behind (measured net-negative under
+        #: load), so the default is 0 — tail slots stretch only when the
+        #: system is quiescent (no pending arrivals anywhere), where the
+        #: full window to the batch deadline is free.  Gap-filled slots
+        #: always use their full window: it is bounded by an existing
+        #: reservation, so the occupancy cost is already sunk.
+        self.dvfs_slack_frac = dvfs_slack_frac
+        #: whether a quiescent tail (no pending arrivals anywhere) may
+        #: stretch to its deadline for free.  Safe for one-shot traces —
+        #: nothing submitted can ever plan behind the stretch — but a
+        #: LIVE server feeding ``submit()`` between ``step()`` calls
+        #: looks quiescent between bursts, and a request arriving right
+        #: after a stretch plans behind the inflated horizon: such
+        #: deployments should pass ``dvfs_quiescent=False``
+        self.dvfs_quiescent = dvfs_quiescent
+        self._slot_limit = np.inf                 # abs end bound of the slot
+        self._slot_saved = 0.0                    # DVFS J saved this flush
+        self.gpu_free = 0.0                       # mirror: timeline horizon
         #: rich per-flush events; a live server running forever should cap
         #: this with ``history=N`` (aggregates below are always complete —
         #: they are scalars, not pinned payloads/schedules)
@@ -156,6 +205,7 @@ class OnlineScheduler:
         self.per_user_energy = np.zeros(fleet.M)
         self._batches: list[int] = []
         self._flush_times: list[float] = []
+        self._f_edges: list = []
 
     # ---- submission ----------------------------------------------------
     def submit(self, arrival: OnlineArrival) -> None:
@@ -213,26 +263,104 @@ class OnlineScheduler:
     # ---- GPU booking hooks (overridden by the tenancy layer) -----------
     def _t_free(self, now: float, sub: DeviceFleet | None = None,
                 arrivals: list[OnlineArrival] | None = None) -> float:
-        """Residual GPU occupancy (s) the flush at ``now`` plans against.
-        The base scheduler owns the GPU alone: its private booking horizon
-        is the whole story.  The tenancy layer overrides this to request a
-        slot from the shared ledger (and possibly preempt queued batches)."""
-        return max(self.gpu_free - now, 0.0)
+        """Residual GPU occupancy (s) the flush at ``now`` plans against
+        behind EVERYTHING reserved (the serialized tail).  The base
+        scheduler owns its timeline alone; the tenancy layer overrides
+        this to request a slot from the shared timeline (and possibly
+        preempt queued batches)."""
+        return self.timeline.t_free(now)
+
+    def _plan_slot(self, now: float, sub: DeviceFleet,
+                   arrivals: list[OnlineArrival]) -> Schedule:
+        """Plan the flush into its occupancy slot.  Serialized mode plans
+        behind the booking horizon — the scalar Eq. 22 path, bit for bit.
+        Interleaved mode first tries the timeline's idle windows in start
+        order (earliest feasible slot): a plan that fits entirely inside a
+        gap commits there, in front of later reservations; otherwise the
+        flush falls through to the serialized tail.  ``_slot_limit``
+        records the slot's absolute end bound for the per-flush DVFS
+        rescale."""
+        self._slot_limit = np.inf
+        self._slot_saved = 0.0
+        if self.occupancy == "interleaved":
+            t_tail = self.timeline.t_free(now)
+            for g0, g1 in self.timeline.gaps(now):
+                tf = max(g0 - now, 0.0)
+                if tf >= t_tail - 1e-15:
+                    break                     # reached the serialized tail
+                if g1 - max(g0, now) < self._min_gap:
+                    continue                  # too narrow for any offload
+                s = self._plan(sub, tf)
+                if not s.offload.any():
+                    return s                  # no GPU needed at all
+                if now + s.t_free_end <= g1 + 1e-12:
+                    self._slot_limit = g1
+                    self.timeline.gap_fills += 1
+                    return s
+        return self._plan(sub, self._t_free(now, sub, arrivals))
+
+    def _post_plan(self, now: float, arrivals: list[OnlineArrival],
+                   s: Schedule) -> Schedule:
+        """Hook between planning and accounting.  Under interleaved
+        occupancy the committed flush re-selects its edge frequency
+        against the reservation's ACTUAL slack — the window from the GPU
+        start to the earlier of the batch's tightest deadline and the
+        slot's end bound (closed form, see
+        :func:`~repro.core.timeline.rescale_edge_dvfs`).  Serialized mode
+        is the identity: Eq. 22 behaviour, bit for bit."""
+        if self.occupancy != "interleaved" or not s.offload.any():
+            return s
+        # bound by the tightest OFFLOADED member's deadline — a local
+        # member's completion never depends on the GPU run, and the
+        # reservation records the same offloaded bound (its ``deadline``
+        # field), so the stretched end stays inside what the timeline
+        # promises
+        deadline = min(a.abs_deadline
+                       for a, off in zip(arrivals, s.offload) if off)
+        limit = min(deadline, self._slot_limit)
+        window = limit - (now + s.gpu_start)
+        if not np.isfinite(self._slot_limit) and (
+                self._pending_work() or not self.dvfs_quiescent):
+            # tail slot with traffic still pending: stretching extends the
+            # horizon every later flush plans behind, so consume only the
+            # configured fraction of the slack (default: none).  A
+            # quiescent tail — nothing left anywhere that could plan
+            # behind this reservation — stretches to the deadline for
+            # free, and a gap-filled slot's window is bounded by an
+            # existing reservation (sunk cost) and is used in full.
+            window = s.gpu_busy + self.dvfs_slack_frac * (window
+                                                          - s.gpu_busy)
+        s, saved = rescale_edge_dvfs(s, window=window, f_min=self.edge.f_min)
+        if saved > 0.0:
+            self.timeline.dvfs_rescales += 1
+            self.timeline.dvfs_energy_saved += saved
+            self._slot_saved = saved        # booked onto the reservation
+        return s
+
+    def _pending_work(self) -> bool:
+        """Is any traffic still pending that could flush behind the
+        reservation being committed?  The base scheduler owns the GPU
+        alone, so only its own heaps matter; the tenancy layer asks the
+        whole arbiter."""
+        return bool(self._arrivals or self._queue)
 
     def _book(self, now: float, s: Schedule) -> float:
-        """Book the planned occupancy; returns the absolute GPU-free time
-        the flush event reports.  All-local flushes leave the booking
-        horizon alone, but the event reports when the GPU is actually
-        free, never before the flush."""
-        gpu_free = max(self.gpu_free, now)
+        """The absolute GPU-free time the flush event reports: the
+        reservation's own Eq. 22 end for an offloading flush; all-local
+        flushes leave occupancy alone, but the event reports when the GPU
+        is actually free, never before the flush."""
         if s.offload.any():
-            gpu_free = now + s.t_free_end
-            self.gpu_free = gpu_free
-        return gpu_free
+            return now + s.t_free_end
+        return max(self.timeline.horizon, now)
 
     def _after_flush(self, ev: FlushEvent) -> None:
-        """Post-booking hook, runs before ``on_flush`` (tenancy: ledger
-        registration + re-planning of preempted batches)."""
+        """Post-booking hook, runs before ``on_flush``: registers the
+        flush's reservation on the timeline (tenancy extends this with
+        re-planning of preempted batches + queue scrubbing)."""
+        if ev.schedule.offload.any():
+            self.timeline.book(self.tenant_id, ev,
+                               dvfs_saved=self._slot_saved)
+        self.gpu_free = self.timeline.horizon
 
     # ---- event processing ----------------------------------------------
     def _fire_timers(self, upto: float) -> None:
@@ -251,7 +379,7 @@ class OnlineScheduler:
         late = int(np.sum(rel < self._l_min[idx] - 1e-12))
         self.violations += late
         sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
-        s = self._plan(sub, self._t_free(now, sub, q))
+        s = self._post_plan(now, q, self._plan_slot(now, sub, q))
         # np.add.at, not fancy-index +=: a user may appear twice in a batch
         np.add.at(self.per_user_energy, idx, s.per_user_energy)
         if s.offload.any():
@@ -263,6 +391,7 @@ class OnlineScheduler:
                         seq=len(self._batches))
         self._batches.append(int(s.offload.sum()))
         self._flush_times.append(now)
+        self._f_edges.append(float(s.f_edge) if s.offload.any() else None)
         self.flushes.append(ev)
         if self.history is not None and len(self.flushes) > self.history:
             del self.flushes[:-self.history]
@@ -276,7 +405,8 @@ class OnlineScheduler:
         return ev
 
     def replan_flush(self, ev: FlushEvent, t_free: float,
-                     idle_gpu_free: float | None = None) -> Schedule:
+                     idle_gpu_free: float | None = None,
+                     schedule: Schedule | None = None) -> Schedule:
         """Re-plan an already-flushed, queued-but-not-started batch against
         an updated residual occupancy (the tenancy layer's preemption
         path).  The old schedule's accounting is undone and the batch
@@ -287,7 +417,11 @@ class OnlineScheduler:
         ``on_replan`` (a live server re-executes the batch) and re-arms the
         gpu-free timer.  ``idle_gpu_free`` is the absolute GPU-free time to
         report if the new plan offloads nothing (defaults to the flush
-        time).  Returns the new schedule."""
+        time).  ``schedule`` short-circuits the re-solve with a plan the
+        caller already holds — the arbiter's preemption what-if caches its
+        victim trial solves, and the caller guarantees the cached plan
+        equals a fresh ``_plan_event(ev, t_free)`` bit for bit (the
+        audit-trail test pins this).  Returns the new schedule."""
         old = ev.schedule
         idx = ev.users
         old_gpu_free = ev.gpu_free
@@ -295,7 +429,7 @@ class OnlineScheduler:
         if old.offload.any():
             np.add.at(self.per_user_energy, idx[old.offload],
                       -old.terms["edge"] / old.offload.sum())
-        s = self._plan_event(ev, t_free)
+        s = schedule if schedule is not None else self._plan_event(ev, t_free)
         np.add.at(self.per_user_energy, idx, s.per_user_energy)
         if s.offload.any():
             np.add.at(self.per_user_energy, idx[s.offload],
@@ -309,6 +443,9 @@ class OnlineScheduler:
         ev.replanned += 1
         if 0 <= ev.seq < len(self._batches):
             self._batches[ev.seq] = int(s.offload.sum())
+        if 0 <= ev.seq < len(self._f_edges):
+            self._f_edges[ev.seq] = (float(s.f_edge) if s.offload.any()
+                                     else None)
         # the old timer (if any) went stale via ev.gpu_free; re-arm unless
         # a still-valid timer already sits on the identical instant
         if s.offload.any() and not (old.offload.any()
@@ -366,7 +503,7 @@ class OnlineScheduler:
         return OnlineResult(float(self.per_user_energy.sum()),
                             len(self._batches), list(self._batches),
                             self.violations, self.per_user_energy.copy(),
-                            list(self._flush_times))
+                            list(self._flush_times), list(self._f_edges))
 
 
 def simulate_online(arrivals: list[OnlineArrival],
@@ -375,17 +512,20 @@ def simulate_online(arrivals: list[OnlineArrival],
                     window: float = 0.0, keep_frac: float = 0.7,
                     rho: float = 0.03e9,
                     inner: Callable = jdob_plus,
-                    service: PlannerService | None = None) -> OnlineResult:
+                    service: PlannerService | None = None,
+                    occupancy: str = "serialized") -> OnlineResult:
     """One-shot simulation: submit a whole trace, run to completion.  A
-    thin driver over :class:`OnlineScheduler`; bit-identical to
-    :func:`simulate_online_reference` for every policy on traces with at
-    most one arrival per user per flush.  (With duplicate users inside ONE
-    flush the scheduler's accounting is the correct one — ``np.add.at``
-    accumulates both requests' energies where the seed loop's fancy-index
-    ``+=`` silently dropped duplicates.)"""
+    thin driver over :class:`OnlineScheduler`; under serialized occupancy
+    (the default) bit-identical to :func:`simulate_online_reference` for
+    every policy on traces with at most one arrival per user per flush.
+    (With duplicate users inside ONE flush the scheduler's accounting is
+    the correct one — ``np.add.at`` accumulates both requests' energies
+    where the seed loop's fancy-index ``+=`` silently dropped
+    duplicates.)"""
     sched = OnlineScheduler(profile, fleet, edge, policy=policy,
                             window=window, keep_frac=keep_frac, rho=rho,
-                            inner=inner, service=service)
+                            inner=inner, service=service,
+                            occupancy=occupancy)
     sched.submit_many(sorted(arrivals, key=lambda a: a.arrival))
     return sched.run()
 
@@ -406,6 +546,7 @@ def simulate_online_reference(arrivals: list[OnlineArrival],
     queue: list[OnlineArrival] = []
     batches: list[int] = []
     flush_times: list[float] = []
+    f_edges: list = []
     violations = 0
     i = 0
 
@@ -431,6 +572,7 @@ def simulate_online_reference(arrivals: list[OnlineArrival],
             gpu_free = now + s.t_free_end
         batches.append(int(s.offload.sum()))
         flush_times.append(now)
+        f_edges.append(float(s.f_edge) if s.offload.any() else None)
         queue.clear()
 
     while i < len(arrivals) or queue:
@@ -456,7 +598,7 @@ def simulate_online_reference(arrivals: list[OnlineArrival],
             flush(max(t_flush, queue[-1].arrival))
 
     return OnlineResult(float(per_user.sum()), len(batches), batches,
-                        violations, per_user, flush_times)
+                        violations, per_user, flush_times, f_edges)
 
 
 def _present_fleet(arrivals: list[OnlineArrival], fleet: DeviceFleet

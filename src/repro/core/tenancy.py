@@ -7,12 +7,18 @@ accelerator.  This module is that layer: N *tenants*, each a
 (:class:`~repro.core.task_model.TaskProfile`,
 :class:`~repro.core.cost_models.DeviceFleet`, flush policy) triple backed
 by its own event-driven :class:`~repro.core.online.OnlineScheduler`, share
-one GPU through a single booking ledger:
+one GPU through a single occupancy timeline:
 
-* :class:`GpuLedger` — the one source of truth for GPU occupancy.  Tenant
-  flushes no longer advance a private ``gpu_free`` horizon; they request a
-  slot, so Eq. 22 serializes occupancy GLOBALLY (a tenant's flush plans
-  against every other tenant's outstanding bookings, not just its own).
+* :class:`~repro.core.timeline.GpuTimeline` — the one source of truth for
+  GPU occupancy (the PR-3 ``GpuLedger`` name survives as an alias).
+  Tenant flushes no longer advance a private ``gpu_free`` horizon; they
+  request a slot, so occupancy serializes GLOBALLY (a tenant's flush plans
+  against every other tenant's outstanding reservations, not just its
+  own).  ``occupancy="serialized"`` (default) is the scalar Eq. 22
+  horizon, bit-identical to PR 3; ``occupancy="interleaved"`` additionally
+  gap-fills small batches into the idle windows upload-delayed
+  reservations leave open and re-selects each flush's edge frequency
+  against its reservation's actual slack (per-flush DVFS).
 * **Queued-batch preemption** — a booking whose GPU execution has not
   started yet (it is queued behind earlier occupancy) can be preempted by
   a tighter-deadline tenant flush that the occupancy would otherwise force
@@ -55,8 +61,14 @@ from .cost_models import DeviceFleet, EdgeProfile
 from .online import FlushEvent, OnlineArrival, OnlineResult, OnlineScheduler
 from .planner_service import PlannerService
 from .task_model import TaskProfile
+from .timeline import OCCUPANCY_MODES, GpuTimeline, Reservation
 
 ADMISSION_POLICIES = ("admit", "degrade", "reject")
+
+#: the tenancy booking list is the timeline subsystem now; the PR-3 names
+#: survive as aliases (same classes, serialized mode is bit-identical)
+GpuLedger = GpuTimeline
+Booking = Reservation
 
 
 @dataclasses.dataclass
@@ -77,80 +89,31 @@ class Tenant:
 
 
 @dataclasses.dataclass(eq=False)
-class Booking:
-    """One tenant flush's slot on the shared GPU.  ``start`` is the
-    earliest instant the GPU can begin this batch (the end of the queue
-    ahead of it at booking time) — until then the batch is queued, not
-    started, and may be preempted.  ``end`` is the absolute GPU-free time
-    (Eq. 22)."""
+class ReplanRecord:
+    """One audit-trail entry of a preemption re-plan.  ``schedule`` is
+    SNAPSHOTTED — a booking preempted twice mutates the live event again,
+    but each record stays checkable: re-solving the event's (immutable)
+    membership at the logged ``t_free`` must reproduce the logged
+    schedule bit for bit.  ``energy_delta`` is the victim's penalty
+    (new − old energy): summed per tenant it is the preemption tax the
+    fairness metric reports."""
 
-    tenant: int
-    flush: FlushEvent
-    start: float
-    end: float
+    victim: int                   # tenant whose batch was re-planned
+    preemptor: int                # tenant whose flush forced it
+    event: FlushEvent
+    t_free: float                 # residual occupancy of the re-solve
+    schedule: object              # the re-planned Schedule (snapshot)
+    energy_delta: float           # J inflicted on the victim
 
-    @property
-    def min_deadline(self) -> float:
-        """The tightest absolute deadline in the booked batch."""
-        return min(a.abs_deadline for a in self.flush.arrivals)
-
-
-class GpuLedger:
-    """The single shared GPU-booking ledger.
-
-    Occupancy is a scalar *horizon* (the absolute time the GPU frees after
-    everything booked so far — ends are monotone because every plan's
-    Eq. 22 ``t_free_end`` starts at or after the residual occupancy it was
-    given), plus the list of live bookings preemption reasons over.
-    """
-
-    def __init__(self):
-        self.bookings: list[Booking] = []
-        self.horizon = 0.0
-        self.total_bookings = 0
-        self.total_preempted = 0
-
-    def t_free(self, now: float, exclude: Sequence[Booking] = ()) -> float:
-        """Residual occupancy (s) a flush at ``now`` plans against,
-        optionally pretending ``exclude`` were never booked (the
-        preemption what-if)."""
-        if not exclude:
-            return max(self.horizon - now, 0.0)
-        ends = [b.end for b in self.bookings if b not in exclude]
-        return max(max(ends, default=0.0) - now, 0.0)
-
-    def book(self, tenant: int, ev: FlushEvent) -> Booking:
-        """Register a flushed batch's occupancy (``ev.gpu_free`` is its
-        Eq. 22 end).  Past bookings (already free) are pruned."""
-        self.bookings = [b for b in self.bookings if b.end > ev.time]
-        b = Booking(tenant, ev, start=max(self.horizon, ev.time),
-                    end=ev.gpu_free)
-        self.bookings.append(b)
-        self.horizon = max(self.horizon, b.end)
-        self.total_bookings += 1
-        return b
-
-    def preemption_candidates(self, now: float, tenant: int,
-                              deadline: float) -> list[Booking]:
-        """Bookings a flush by ``tenant`` at ``now`` with tightest absolute
-        deadline ``deadline`` may preempt: queued-but-not-started batches
-        (``start > now``) of OTHER tenants whose every member's deadline is
-        looser."""
-        return [b for b in self.bookings
-                if b.tenant != tenant and b.start > now
-                and b.min_deadline > deadline]
-
-    def remove(self, victims: Sequence[Booking]) -> None:
-        """Drop preempted bookings and rewind the horizon to the remaining
-        occupancy (their batches re-book after re-planning)."""
-        self.bookings = [b for b in self.bookings if b not in victims]
-        self.horizon = max((b.end for b in self.bookings), default=0.0)
-        self.total_preempted += len(victims)
+    def __iter__(self):
+        # PR-3 log entries were (tenant, event, t_free, schedule) tuples;
+        # keep that unpacking working for downstream consumers
+        return iter((self.victim, self.event, self.t_free, self.schedule))
 
 
 class _TenantScheduler(OnlineScheduler):
     """An :class:`OnlineScheduler` whose flushes request GPU slots from the
-    shared ledger instead of advancing a private horizon."""
+    shared timeline instead of booking a private one."""
 
     def __init__(self, arbiter: "MultiTenantScheduler", tid: int,
                  tenant: Tenant, *, service: PlannerService,
@@ -159,34 +122,47 @@ class _TenantScheduler(OnlineScheduler):
                          policy=tenant.policy, window=tenant.window,
                          keep_frac=tenant.keep_frac, rho=arbiter.rho,
                          inner=tenant.inner, service=service,
-                         history=history)
+                         history=history, occupancy=arbiter.occupancy,
+                         timeline=arbiter.timeline,
+                         dvfs_slack_frac=arbiter.dvfs_slack_frac,
+                         dvfs_quiescent=arbiter.dvfs_quiescent)
         self.arbiter = arbiter
-        self.tid = tid
-        self._pending_preempt: list[Booking] | None = None
-        self._trial_plan = None
+        self.tid = self.tenant_id = tid
+        self._pending_preempt: list[Reservation] | None = None
+        #: the arbitration what-if's winning (t_free, schedule) — consumed
+        #: by the matching ``_plan`` call instead of re-solving
+        self._trial_plan: tuple[float, object] | None = None
+        #: ROADMAP follow-up (a): the what-if's victim re-plans, keyed by
+        #: reservation identity → (t_free, schedule); ``_replan_preempted``
+        #: reuses them on commit instead of solving every victim twice
+        self._victim_trials: dict[int, tuple[float, object]] = {}
 
     # ---- arbitration ---------------------------------------------------
     def _plan(self, sub, t_free):
         # consume the arbitration what-if's schedule instead of re-solving
         # the identical (sub, t_free) — winner reconstruction was ~90% of
-        # warm planning time, so contended flushes must not pay it thrice
-        s, self._trial_plan = self._trial_plan, None
-        if s is not None:
-            return s
+        # warm planning time, so contended flushes must not pay it thrice.
+        # Keyed by t_free: interleaved gap probes plan the same sub at
+        # DIFFERENT residuals and must not swallow the tail's trial.
+        trial = self._trial_plan
+        if trial is not None and trial[0] == t_free:
+            self._trial_plan = None
+            return trial[1]
         return super()._plan(sub, t_free)
 
     def _t_free(self, now, sub=None, arrivals=None):
-        led = self.arbiter.ledger
+        tl = self.arbiter.timeline
         self._pending_preempt = None
         self._trial_plan = None
-        t0 = led.t_free(now)
+        self._victim_trials = {}
+        t0 = tl.t_free(now)
         if not self.arbiter.preemption or t0 <= 0.0 or sub is None:
             return t0
         my_deadline = min(a.abs_deadline for a in arrivals)
-        victims = led.preemption_candidates(now, self.tid, my_deadline)
+        victims = tl.preemption_candidates(now, self.tid, my_deadline)
         if not victims:
             return t0
-        t1 = led.t_free(now, exclude=victims)
+        t1 = tl.t_free(now, exclude=victims)
         if t1 >= t0:
             return t0
         # what-if: does the queued occupancy force deadline-infeasible
@@ -196,41 +172,62 @@ class _TenantScheduler(OnlineScheduler):
         s0 = super()._plan(sub, t0)
         s1 = super()._plan(sub, t1)
         if s1.batch_size <= s0.batch_size:
-            self._trial_plan = s0
+            self._trial_plan = (t0, s0)
             return t0
         # cost-benefit: the preemptor's gain must exceed the victims'
-        # re-planning penalty behind its new booking
+        # re-planning penalty behind its new booking.  The horizon walk
+        # mirrors ``_replan_preempted``'s commit EXACTLY (same start —
+        # s1.t_free_end ≥ t1 covers the surviving bookings — same victim
+        # order, same folds), so the trial schedules cached here are
+        # verbatim the commit's re-plans
         horizon = now + s1.t_free_end
         penalty = 0.0
-        for b in sorted(victims, key=lambda b: b.flush.time):
+        trials: dict[int, tuple[float, object]] = {}
+        for b in sorted(victims, key=lambda b: (b.flush.time, b.tenant)):
             sch = self.arbiter.schedulers[b.tenant]
-            s_new = sch._plan_event(b.flush,
-                                    max(horizon - b.flush.time, 0.0))
+            tf_b = max(horizon - b.flush.time, 0.0)
+            s_new = sch._plan_event(b.flush, tf_b)
+            trials[id(b)] = (tf_b, s_new)
             penalty += s_new.energy - b.flush.schedule.energy
             if s_new.offload.any():
                 horizon = max(horizon, b.flush.time + s_new.t_free_end)
         if (s0.energy - s1.energy) <= penalty:
-            self._trial_plan = s0
+            self._trial_plan = (t0, s0)
             return t0
         self._pending_preempt = victims
-        led.remove(victims)
-        self._trial_plan = s1
+        self._victim_trials = trials
+        tl.remove(victims)
+        self._trial_plan = (t1, s1)
         return t1
 
-    def _book(self, now, s):
-        led = self.arbiter.ledger
-        if s.offload.any():
-            return now + s.t_free_end
-        return max(led.horizon, now)
+    def _pending_work(self):
+        # quiescence is GLOBAL on a shared GPU: any tenant's pending
+        # arrival could still flush behind the reservation being committed
+        return any(sch._arrivals or sch._queue
+                   for sch in self.arbiter.schedulers)
+
+    def _post_plan(self, now, arrivals, s):
+        if self._pending_preempt:
+            # this flush preempted: the cost-benefit gate priced the
+            # victims' re-plan penalties at THIS plan's un-stretched end,
+            # and the what-if trial cache is keyed to that horizon — any
+            # stretch (even a dvfs_slack_frac-damped one) would stale
+            # both, so the preemptor always keeps its planned f_e
+            return s
+        return super()._post_plan(now, arrivals, s)
 
     def _after_flush(self, ev):
-        led = self.arbiter.ledger
-        if ev.schedule.offload.any():
-            led.book(self.tid, ev)
-        self.gpu_free = led.horizon          # mirror for reporting only
+        super()._after_flush(ev)       # timeline booking + horizon mirror
+        self._trial_plan = None
         victims, self._pending_preempt = self._pending_preempt, None
         if victims:
-            self.arbiter._replan_preempted(victims)
+            self.arbiter._replan_preempted(victims, preemptor=self.tid)
+        if ev.schedule.offload.any() or victims:
+            # ROADMAP follow-up (b): the booking that just landed (or the
+            # re-booked victims) can strand arrivals already QUEUED at
+            # other tenants — re-evaluate their admission now, not only
+            # at their own submit/arrival events
+            self.arbiter._scrub_queues(ev.time)
 
 
 @dataclasses.dataclass
@@ -245,6 +242,12 @@ class TenantResult:
     degraded: int
     rejected: int
     degraded_energy: np.ndarray      # (M,) fallback J per user
+    scrubbed: int = 0                # degraded/rejected out of a live queue
+    #: ROADMAP follow-up (d) — the preemption tax: energy delta this
+    #: tenant's preemptions inflicted on others vs what it suffered from
+    #: theirs (J; both sum the victims' re-plan penalties in replan_log)
+    preempt_tax_inflicted: float = 0.0
+    preempt_tax_suffered: float = 0.0
 
     @property
     def energy(self) -> float:
@@ -255,8 +258,14 @@ class TenantResult:
 class MultiTenantResult:
     tenants: list[TenantResult]
     preemptions: int                 # bookings preempted (then re-planned)
-    bookings: int                    # total slots the ledger granted
-    gpu_busy_until: float            # ledger horizon at drain
+    bookings: int                    # total slots the timeline granted
+    gpu_busy_until: float            # timeline horizon at drain
+    occupancy: str = "serialized"
+    gap_fills: int = 0               # flushes placed into idle windows
+    dvfs_rescales: int = 0           # per-flush edge-DVFS stretches applied
+    dvfs_energy_saved: float = 0.0   # J recovered by those stretches
+    replan_trial_hits: int = 0       # victim re-plans served from the
+    replan_trial_misses: int = 0     # what-if cache vs re-solved
 
     @property
     def energy(self) -> float:
@@ -309,17 +318,24 @@ class MultiTenantScheduler:
     def __init__(self, tenants: Sequence[Tenant], *, rho: float = 0.03e9,
                  service: PlannerService | None = None,
                  preemption: bool = True, admission: str = "admit",
-                 history: int | None = None,
+                 history: int | None = None, occupancy: str = "serialized",
+                 dvfs_slack_frac: float = 0.0, dvfs_quiescent: bool = True,
                  on_flush=None, on_replan=None, on_gpu_free=None,
                  on_degrade=None):
         assert len(tenants) >= 1
         assert admission in ADMISSION_POLICIES, \
             f"unknown admission policy {admission!r}"
+        assert occupancy in OCCUPANCY_MODES, \
+            f"unknown occupancy mode {occupancy!r}"
         self.tenants = list(tenants)
         self.rho = rho
         self.preemption = preemption
         self.admission = admission
-        self.ledger = GpuLedger()
+        self.occupancy = occupancy
+        self.dvfs_slack_frac = dvfs_slack_frac
+        self.dvfs_quiescent = dvfs_quiescent
+        self.timeline = GpuTimeline(mode=occupancy)
+        self.ledger = self.timeline          # PR-3 name, same object
         self.on_degrade = on_degrade
         root = (service if service is not None
                 else PlannerService(tenants[0].profile, tenants[0].edge,
@@ -342,39 +358,65 @@ class MultiTenantScheduler:
         self.admitted = [0] * len(M)
         self.degraded = [0] * len(M)
         self.rejected = [0] * len(M)
+        self.scrubbed = [0] * len(M)
         self.degraded_energy = [np.zeros(m) for m in M]
-        #: audit trail of preemption re-plans: (tenant, event, t_free the
-        #: batch was re-solved against, the schedule that solve produced).
-        #: The schedule is SNAPSHOTTED — a booking preempted twice mutates
-        #: the live event again, but each log entry stays checkable:
-        #: re-solving the event's (immutable) membership at the logged
-        #: t_free must reproduce the logged schedule bit for bit
-        self.replan_log: list[tuple[int, FlushEvent, float, object]] = []
+        #: audit trail of preemption re-plans (see :class:`ReplanRecord`)
+        self.replan_log: list[ReplanRecord] = []
+        #: per-tenant preemption tax (J): energy delta inflicted on other
+        #: tenants' batches vs suffered from theirs — follow-up (d)
+        self.preempt_tax_inflicted = [0.0] * len(M)
+        self.preempt_tax_suffered = [0.0] * len(M)
+        #: what-if trial-schedule reuse counters — follow-up (a)
+        self.replan_trial_hits = 0
+        self.replan_trial_misses = 0
         self.now = 0.0
 
     # ---- admission control ---------------------------------------------
-    def _no_feasible_slot(self, tid: int, arrival: OnlineArrival) -> bool:
-        """No slot can serve this request: local computing misses the
-        deadline AND no solo offload behind the ledger's occupancy (as of
-        the arrival instant) can meet it either."""
-        t = self.tenants[tid]
-        l_min = float(self.schedulers[tid]._l_min[arrival.user])
-        if arrival.rel_deadline >= l_min - 1e-12:
-            return False
-        t_free = self.ledger.t_free(arrival.arrival)
-        best = min_offload_completion(t.profile, t.fleet, arrival.user,
-                                      t.edge, t_free)
-        return best > arrival.rel_deadline
+    def _occupancy_at(self, t: float, tid: int) -> float:
+        """The optimistic residual occupancy (s) an admission check for
+        tenant ``tid`` uses at instant ``t``: the serialized tail, or —
+        under interleaved occupancy — the earliest idle window WIDE
+        enough for any of this profile's dispatches, since a solo offload
+        may gap-fill in front of queued reservations (but not into a
+        window narrower than its minimum GPU busy time)."""
+        if self.occupancy == "interleaved":
+            min_w = self.schedulers[tid]._min_gap
+            return max(self.timeline.earliest_idle(t, min_width=min_w) - t,
+                       0.0)
+        return self.timeline.t_free(t)
 
-    def _fallback(self, tid: int, arrival: OnlineArrival) -> None:
+    def _no_feasible_slot(self, tid: int, arrival: OnlineArrival,
+                          now: float | None = None) -> bool:
+        """No slot can serve this request as of ``now`` (default: its
+        arrival instant): local computing misses the deadline AND no solo
+        offload behind the timeline's occupancy can meet it either."""
+        t = self.tenants[tid]
+        now = arrival.arrival if now is None else now
+        budget = arrival.abs_deadline - now
+        l_min = float(self.schedulers[tid]._l_min[arrival.user])
+        if budget >= l_min - 1e-12:
+            return False
+        best = min_offload_completion(t.profile, t.fleet, arrival.user,
+                                      t.edge, self._occupancy_at(now, tid))
+        return best > budget
+
+    def _fallback(self, tid: int, arrival: OnlineArrival,
+                  now: float | None = None) -> None:
         """Apply the admission policy to a no-feasible-slot request:
         reject, or degrade-to-local at the all-local fallback cost
-        (exactly what all_local_energy charges this user)."""
+        (exactly what all_local_energy charges this user when the local
+        run starts at its arrival).  ``now`` is when the local run
+        actually begins — a queue-scrubbed arrival has already burned
+        part of its budget waiting, so its fallback DVFS must be derived
+        from the REMAINING budget, not the arrival-time one (f clips at
+        f_max; the missed deadline is already counted: every degraded
+        request is a violation in :class:`MultiTenantResult`)."""
         if self.admission == "reject":
             self.rejected[tid] += 1
             return
         t = self.tenants[tid]
-        rel = max(arrival.rel_deadline, 1e-12)
+        now = arrival.arrival if now is None else now
+        rel = max(arrival.abs_deadline - now, 1e-12)
         f = float(np.clip(
             t.fleet.zeta[arrival.user] * t.profile.v()[-1] / rel,
             t.fleet.f_min[arrival.user], t.fleet.f_max[arrival.user]))
@@ -421,18 +463,63 @@ class MultiTenantScheduler:
                 self.submit(tid, a)
 
     # ---- preemption aftermath ------------------------------------------
-    def _replan_preempted(self, victims: Sequence[Booking]) -> None:
+    def _replan_preempted(self, victims: Sequence[Reservation],
+                          preemptor: int) -> None:
         """Re-plan preempted batches behind the preemptor's fresh booking,
-        in original flush order — re-planned, never dropped."""
+        in original flush order — re-planned, never dropped.  Victim
+        solves are reused from the preemptor's what-if trial cache when
+        the residual occupancy matches (it does whenever the commit walk
+        mirrors the estimate walk — counted in ``replan_trial_hits``), so
+        arbitration no longer re-plans every victim twice."""
+        trials = self.schedulers[preemptor]._victim_trials
         for b in sorted(victims, key=lambda b: (b.flush.time, b.tenant)):
             sch = self.schedulers[b.tenant]
-            t_free = max(self.ledger.horizon - b.flush.time, 0.0)
+            t_free = max(self.timeline.horizon - b.flush.time, 0.0)
+            cached = trials.get(id(b))
+            plan = (cached[1] if cached is not None and cached[0] == t_free
+                    else None)
+            if plan is not None:
+                self.replan_trial_hits += 1
+            else:
+                self.replan_trial_misses += 1
+            old_energy = b.flush.schedule.energy
             s = sch.replan_flush(b.flush, t_free,
-                                 idle_gpu_free=self.ledger.horizon)
-            self.replan_log.append((b.tenant, b.flush, t_free, s))
+                                 idle_gpu_free=self.timeline.horizon,
+                                 schedule=plan)
+            delta = s.energy - old_energy
+            self.replan_log.append(ReplanRecord(
+                victim=b.tenant, preemptor=preemptor, event=b.flush,
+                t_free=t_free, schedule=s, energy_delta=delta))
+            self.preempt_tax_suffered[b.tenant] += delta
+            self.preempt_tax_inflicted[preemptor] += delta
             if s.offload.any():
-                self.ledger.book(b.tenant, b.flush)
-            sch.gpu_free = self.ledger.horizon
+                self.timeline.book(b.tenant, b.flush)
+            sch.gpu_free = self.timeline.horizon
+        trials.clear()
+
+    # ---- queue scrubbing (follow-up b) ----------------------------------
+    def _scrub_queues(self, now: float) -> None:
+        """Re-evaluate admission for arrivals already QUEUED when a later
+        booking lands: occupancy granted since they entered their queue
+        can leave them without any feasible slot, and catching that at
+        the next flush would let them erode the batch's deadline headroom
+        first.  Each stranded arrival is handed to the admission fallback
+        (degrade/reject) and dropped from its queue."""
+        if self.admission == "admit":
+            return
+        for tid, sch in enumerate(self.schedulers):
+            if not sch._queue:
+                continue
+            keep = []
+            for a in sch._queue:
+                if self._no_feasible_slot(tid, a, now=now):
+                    self.admitted[tid] -= 1
+                    self.scrubbed[tid] += 1
+                    self._fallback(tid, a, now=now)
+                else:
+                    keep.append(a)
+            if len(keep) != len(sch._queue):
+                sch._queue[:] = keep
 
     # ---- event loop -----------------------------------------------------
     def step(self):
@@ -483,11 +570,20 @@ class MultiTenantScheduler:
                 result=self.schedulers[k].result(),
                 admitted=self.admitted[k], degraded=self.degraded[k],
                 rejected=self.rejected[k],
-                degraded_energy=self.degraded_energy[k].copy())
+                degraded_energy=self.degraded_energy[k].copy(),
+                scrubbed=self.scrubbed[k],
+                preempt_tax_inflicted=self.preempt_tax_inflicted[k],
+                preempt_tax_suffered=self.preempt_tax_suffered[k])
                 for k, t in enumerate(self.tenants)],
-            preemptions=self.ledger.total_preempted,
-            bookings=self.ledger.total_bookings,
-            gpu_busy_until=self.ledger.horizon)
+            preemptions=self.timeline.total_preempted,
+            bookings=self.timeline.total_bookings,
+            gpu_busy_until=self.timeline.horizon,
+            occupancy=self.occupancy,
+            gap_fills=self.timeline.gap_fills,
+            dvfs_rescales=self.timeline.dvfs_rescales,
+            dvfs_energy_saved=self.timeline.dvfs_energy_saved,
+            replan_trial_hits=self.replan_trial_hits,
+            replan_trial_misses=self.replan_trial_misses)
 
 
 def naive_fifo(tenants: Sequence[Tenant],

@@ -1,0 +1,315 @@
+"""GPU occupancy timeline: reservations instead of a scalar Eq. 22 horizon.
+
+Every layer of the repo used to model GPU occupancy as one scalar
+``t_free`` threaded through Eq. 22 — the grouping DP, the event-driven
+:class:`~repro.core.online.OnlineScheduler`, the tenancy ledger and the
+serving path all assumed the accelerator serializes batches FIFO.  Real
+edge GPUs are richer: a batch whose devices are still computing/uploading
+leaves the accelerator idle until the boundary activations land, small
+batches can run inside those idle windows, and the clock can be re-chosen
+per dispatch.  This module owns that occupancy shape:
+
+* :class:`Reservation` — one booked batch: the queue slot (``start``), the
+  instant the GPU genuinely begins (``gpu_start`` — uploads may delay it
+  past the previous reservation's end), the Eq. 22 end, the dispatch
+  frequency ``f_edge`` and the batch's tightest absolute deadline.
+* :class:`GpuTimeline` — the single source of truth for occupancy, in two
+  modes:
+
+  - ``serialized`` (default) — the paper's abstraction: occupancy is the
+    scalar horizon (max reservation end), flushes plan behind it, and
+    behaviour is **bit-identical** to the scalar ``t_free`` path / the old
+    ``GpuLedger`` (parity-tested for all four flush policies, single- and
+    multi-tenant).  Eq. 22 survives here as the serialized special case.
+  - ``interleaved`` — reservations are true busy intervals
+    ``[gpu_start, end]``; :meth:`gaps` exposes the idle windows between
+    them so a flush can plan into the **earliest feasible slot**
+    (gap-filling: small batches slot in front of larger queued
+    reservations they fit under), and each committed flush re-selects its
+    edge frequency against the reservation's actual slack
+    (:func:`rescale_edge_dvfs` — closed-form from the affine
+    :class:`~repro.core.cost_models.EdgeProfile`).
+
+* :class:`TimelineCursor` — the scalar view the OG grouping DP threads
+  through its prefix states: ``advance(schedule)`` folds one group's
+  occupancy exactly the way Eq. 22 did, so the DP consumes the same
+  abstraction the online/tenancy layers book against.
+
+Per-flush edge DVFS (the closed form): once a plan commits, the device
+frequencies {f_m} are fixed, so the GPU start ``g* = max(t_free, uploads)``
+is fixed and the only f_e constraint left is the reservation window — the
+batch must end by ``min(tightest deadline, next reservation's start)``.
+Edge energy ψ_ñ(B)·f_e² is strictly increasing in f_e, so the optimum is
+the slowest frequency that still fills the window::
+
+    f_e* = clip(φ_ñ(B) / (window_end − g*),  f_e,min,  f_e,planned)
+
+This is headroom the paper's joint grid cannot express: Alg. 2 couples
+f_e to the *device* slack (Eq. 19 re-optimizes {f_m} for every candidate
+f_e), while here the devices are already committed, so stretching the edge
+run into residual slack (grid quantization, f_min-clipped devices, or a
+queue-dominated start) reduces edge energy without touching any other
+term.  When slack is tight the closed form falls back to the planned
+setting, and in serialized mode it never runs — bit-identical to Eq. 22.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+OCCUPANCY_MODES = ("serialized", "interleaved")
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass(eq=False)
+class Reservation:
+    """One batch's slot on the GPU.
+
+    ``start`` is the queue slot (the end of the queue ahead at booking
+    time — until then the batch is queued, not started, and may be
+    preempted under serialized semantics).  ``gpu_start`` is the instant
+    the accelerator genuinely begins the batch (``end − busy``; device
+    compute + uplink can hold it past ``start``, leaving an idle window
+    interleaved mode fills).  ``end`` is the absolute GPU-free time
+    (Eq. 22).  ``flush`` is the owning
+    :class:`~repro.core.online.FlushEvent` (``None`` for flush-less
+    reservations, e.g. offline OG groups)."""
+
+    tenant: int
+    flush: object                   # FlushEvent | None (no import cycle)
+    start: float
+    end: float
+    gpu_start: float
+    f_edge: float = math.nan        # Hz chosen for this dispatch
+    #: the occupancy bound: tightest absolute deadline among the members
+    #: whose completion depends on this GPU run (the OFFLOADED ones) —
+    #: the per-flush DVFS stretch and the never-past-deadline invariant
+    #: are both measured against it
+    deadline: float = _INF
+    #: edge energy (J) the per-flush DVFS rescale credited this
+    #: reservation with — rolled back if the reservation is preempted
+    #: (the re-planned schedule is a fresh solve, not a stretched one)
+    dvfs_saved: float = 0.0
+
+    @property
+    def busy(self) -> float:
+        """Seconds the accelerator is genuinely occupied."""
+        return self.end - self.gpu_start
+
+    @property
+    def min_deadline(self) -> float:
+        """The tightest absolute deadline over the WHOLE booked batch
+        (local members included) — the conservative bound preemption
+        candidacy filters on."""
+        if self.flush is not None:
+            return min(a.abs_deadline for a in self.flush.arrivals)
+        return self.deadline
+
+
+@dataclasses.dataclass
+class TimelineCursor:
+    """Scalar occupancy view threaded through the OG prefix DP.
+
+    ``t_free`` is the residual occupancy (seconds) the next segment solve
+    plans against; :meth:`advance` folds one schedule's occupancy exactly
+    as Eq. 22 did (``t_free_end`` is relative to the same origin), so the
+    DP's threading is the serialized special case of the timeline — bit
+    for bit."""
+
+    t_free: float
+
+    def advance(self, schedule) -> "TimelineCursor":
+        return TimelineCursor(schedule.t_free_end)
+
+
+class GpuTimeline:
+    """The one source of truth for GPU occupancy (module docstring).
+
+    Serialized mode reproduces the old ``GpuLedger`` exactly: ``horizon``
+    is the scalar Eq. 22 booking horizon, ``t_free`` the residual a flush
+    plans against, ``preemption_candidates`` the queued-but-not-started
+    bookings of other tenants.  Interleaved mode additionally exposes the
+    idle windows (:meth:`gaps`, :meth:`earliest_idle`) the true
+    ``gpu_start`` geometry opens up; preemption candidacy stays
+    queue-slot based in both modes (see
+    :meth:`preemption_candidates` for why).
+    """
+
+    def __init__(self, mode: str = "serialized"):
+        assert mode in OCCUPANCY_MODES, f"unknown occupancy mode {mode!r}"
+        self.mode = mode
+        self.reservations: list[Reservation] = []
+        self.horizon = 0.0
+        self.total_bookings = 0
+        self.total_preempted = 0
+        #: interleaved-mode observability: flushes placed into idle
+        #: windows, per-flush DVFS rescales applied, and the edge energy
+        #: (J) those rescales recovered
+        self.gap_fills = 0
+        self.dvfs_rescales = 0
+        self.dvfs_energy_saved = 0.0
+
+    # ---- ledger-compatible surface (serialized semantics) ---------------
+    @property
+    def bookings(self) -> list[Reservation]:
+        """Alias kept from the ``GpuLedger`` era (same list object)."""
+        return self.reservations
+
+    def t_free(self, now: float, exclude: Sequence[Reservation] = ()
+               ) -> float:
+        """Residual occupancy (s) a flush at ``now`` plans against behind
+        EVERYTHING booked, optionally pretending ``exclude`` were never
+        booked (the preemption what-if)."""
+        if not exclude:
+            return max(self.horizon - now, 0.0)
+        ends = [r.end for r in self.reservations if r not in exclude]
+        return max(max(ends, default=0.0) - now, 0.0)
+
+    def book(self, tenant: int, ev, dvfs_saved: float = 0.0
+             ) -> Reservation:
+        """Register a flushed batch's occupancy (``ev.gpu_free`` is its
+        Eq. 22 end; the schedule's geometry, when present, pins the true
+        ``gpu_start``).  Past reservations (already free) are pruned."""
+        s = ev.schedule
+        busy = float(getattr(s, "gpu_busy", 0.0) or 0.0)
+        end = ev.gpu_free
+        gpu_start = (end - busy) if busy > 0.0 else end
+        start = max(self.horizon, ev.time)
+        if end <= start:
+            # gap-filled in front of existing occupancy (never the case
+            # under serialized booking): the slot begins when the GPU does
+            start = gpu_start
+        # the occupancy bound is the tightest OFFLOADED member's deadline
+        # (local members never wait on the GPU); stub schedules without
+        # geometry fall back to the whole batch
+        off = getattr(s, "offload", None)
+        if off is not None and ev.arrivals and busy > 0.0:
+            deadline = min((a.abs_deadline
+                            for a, o in zip(ev.arrivals, off) if o),
+                           default=_INF)
+        else:
+            deadline = (min(a.abs_deadline for a in ev.arrivals)
+                        if ev.arrivals else _INF)
+        r = self.reserve(
+            tenant, start, end,
+            gpu_start=gpu_start if busy > 0.0 else start,
+            f_edge=float(getattr(s, "f_edge", math.nan)),
+            deadline=deadline, flush=ev, prune_before=ev.time)
+        r.dvfs_saved = dvfs_saved
+        return r
+
+    def reserve(self, tenant: int, start: float, end: float, *,
+                gpu_start: float | None = None, f_edge: float = math.nan,
+                deadline: float = _INF, flush=None,
+                prune_before: float | None = None) -> Reservation:
+        """Low-level insertion (flush-less callers: the OG grouping DP
+        committing a chain of group occupancies)."""
+        if prune_before is not None:
+            self.reservations = [r for r in self.reservations
+                                 if r.end > prune_before]
+        r = Reservation(tenant, flush, start, end,
+                        start if gpu_start is None else gpu_start,
+                        f_edge, deadline)
+        self.reservations.append(r)
+        self.horizon = max(self.horizon, r.end)
+        self.total_bookings += 1
+        return r
+
+    def preemption_candidates(self, now: float, tenant: int,
+                              deadline: float) -> list[Reservation]:
+        """Reservations a flush by ``tenant`` at ``now`` with tightest
+        absolute deadline ``deadline`` may preempt: queued-but-not-started
+        batches (queue slot ``start > now``) of OTHER tenants whose every
+        member's deadline is looser.  Candidacy is judged on the queue
+        slot in BOTH modes — preempting a batch whose slot has opened but
+        whose uploads are still in flight measured net-negative (the
+        devices' work is sunk), and keeping one rule keeps interleaved
+        arbitration a strict superset of the serialized behaviour."""
+        return [r for r in self.reservations
+                if r.tenant != tenant and r.start > now
+                and r.min_deadline > deadline]
+
+    def remove(self, victims: Sequence[Reservation]) -> None:
+        """Drop preempted reservations and rewind the horizon to the
+        remaining occupancy (their batches re-book after re-planning).
+        Any per-flush DVFS saving credited to a victim is rolled back —
+        the re-planned schedule is a fresh solve, so the discarded
+        stretch never materializes in the final accounting."""
+        self.reservations = [r for r in self.reservations
+                             if r not in victims]
+        self.horizon = max((r.end for r in self.reservations), default=0.0)
+        self.total_preempted += len(victims)
+        for r in victims:
+            if r.dvfs_saved > 0.0:
+                self.dvfs_rescales -= 1
+                self.dvfs_energy_saved -= r.dvfs_saved
+
+    # ---- interleaved occupancy shape -----------------------------------
+    def gaps(self, now: float) -> list[tuple[float, float]]:
+        """Idle windows ``[start, end)`` at or after ``now``, ascending by
+        start; the final entry is always the open tail
+        ``(max(busy end, now), inf)`` — planning there is exactly the
+        serialized behaviour.  Busy intervals are the TRUE occupancy
+        ``[gpu_start, end]``, so a reservation still waiting on uploads
+        contributes an idle window in front of itself."""
+        live = sorted((r for r in self.reservations if r.end > now),
+                      key=lambda r: (r.gpu_start, r.end))
+        out: list[tuple[float, float]] = []
+        cur = now
+        for r in live:
+            if r.gpu_start > cur + 1e-12:
+                out.append((cur, r.gpu_start))
+            cur = max(cur, r.end)
+        out.append((max(cur, now), _INF))
+        return out
+
+    def earliest_idle(self, now: float, min_width: float = 0.0) -> float:
+        """The earliest instant at or after ``now`` the GPU is idle for at
+        least ``min_width`` seconds — the optimistic start bound
+        interleaved admission control uses (a window too narrow for any
+        dispatch must not make the GPU look free).  The tail window is
+        unbounded, so a result always exists."""
+        for g0, g1 in self.gaps(now):
+            if g1 - g0 >= min_width:
+                return g0
+        return max(self.horizon, now)
+
+    def cursor(self, at: float = 0.0) -> TimelineCursor:
+        """A DP cursor over this timeline's residual occupancy at ``at``."""
+        return TimelineCursor(self.t_free(at))
+
+
+def rescale_edge_dvfs(schedule, *, window: float, f_min: float):
+    """Per-flush edge-frequency selection against the reservation's actual
+    slack (module docstring): with device frequencies committed, run the
+    batch at the slowest f_e that still ends inside ``window`` seconds
+    measured from the GPU start.  Returns ``(schedule, energy_saved)`` —
+    the planned setting untouched (``saved == 0``) when the batch is
+    all-local, the window is already tight, or the closed form would not
+    go below the planned frequency.  The rescaled schedule keeps the GPU
+    start bit-identical (``t_free_end − gpu_busy`` is invariant), so the
+    reservation geometry every other layer books against stays coherent."""
+    if schedule.edge_phi <= 0.0 or not schedule.offload.any():
+        return schedule, 0.0
+    busy = schedule.gpu_busy
+    if not window > busy:                     # tight (or nan) window
+        return schedule, 0.0
+    f_new = schedule.edge_phi / window if np.isfinite(window) else f_min
+    f_new = max(f_new, f_min)
+    if f_new >= schedule.f_edge:
+        return schedule, 0.0
+    edge_new = schedule.edge_psi * f_new ** 2
+    saved = schedule.terms["edge"] - edge_new
+    if saved <= 0.0:
+        return schedule, 0.0
+    new_busy = schedule.edge_phi / f_new
+    rescaled = dataclasses.replace(
+        schedule, f_edge=f_new, gpu_busy=new_busy,
+        t_free_end=schedule.t_free_end - busy + new_busy,
+        energy=schedule.energy - saved,
+        terms={**schedule.terms, "edge": edge_new})
+    return rescaled, saved

@@ -69,20 +69,29 @@ def _serve_offline(server, fleet, profile, edge, reqs, args) -> dict:
 def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
     t0 = time.perf_counter()
     report = server.serve_online(reqs, policy=args.policy,
-                                 window=args.window)
+                                 window=args.window,
+                                 occupancy=args.occupancy)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
           f"online policy={args.policy}  rate={args.rate}/s  "
+          f"occupancy={args.occupancy}  "
           f"(planned+served in {serve_s:.2f}s, event-driven)")
     for ev in report.flushes:
+        f_e = (f"{ev.schedule.f_edge / 1e9:.2f} GHz"
+               if ev.schedule.offload.any() else "local")
         print(f"  t={ev.time * 1e3:8.2f} ms  flush users={list(ev.users)}  "
               f"ñ={ev.schedule.partition}  batch={ev.schedule.batch_size}  "
+              f"f_e={f_e}  "
               f"energy={ev.schedule.energy:.4f} J  "
               f"gpu_free={ev.gpu_free * 1e3:.2f} ms")
     print(f"total energy: {report.energy:.4f} J (LC: {lc.energy:.4f} J)  "
           f"violations={report.violations}  "
           f"gpu busy until {report.gpu_busy_until * 1e3:.2f} ms")
+    if args.occupancy == "interleaved":
+        print(f"timeline: {report.gap_fills} gap-fill(s), "
+              f"{report.dvfs_rescales} per-flush DVFS rescale(s) saving "
+              f"{report.dvfs_energy_saved:.4f} J")
     err = _verify(report.logits, server.executor, reqs)
     print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
     assert err < 1e-3
@@ -126,21 +135,28 @@ def _serve_tenants(args) -> dict:
                         for m in range(args.users)])
 
     server = MultiTenantServer(models, preemption=not args.no_preemption,
-                               admission=args.admission)
+                               admission=args.admission,
+                               occupancy=args.occupancy)
     t0 = time.perf_counter()
     report = server.serve_online(streams)
     serve_s = time.perf_counter() - t0
     print(f"arch={args.arch}  tenants={args.tenants}  M={args.users}/tenant  "
           f"policy={args.policy}  admission={args.admission}  "
+          f"occupancy={args.occupancy}  "
           f"(planned+served in {serve_s:.2f}s, shared-GPU arbitration)")
     max_err = 0.0
     for tid, (m, reqs, tr) in enumerate(zip(models, streams,
                                             report.result.tenants)):
         mask = report.served[tid]
+        f_es = [f"{f / 1e9:.2f}" if f is not None else "loc"
+                for f in tr.result.f_edges]
         print(f"  {tr.name}: seq={len(reqs[0].tokens)}  "
               f"energy={tr.energy:.4f} J  flushes={tr.result.n_flushes}  "
-              f"batches={tr.result.batch_sizes}  late={tr.result.violations}"
-              f"  degraded={tr.degraded}  rejected={tr.rejected}")
+              f"batches={tr.result.batch_sizes}  f_e/GHz={f_es}  "
+              f"late={tr.result.violations}"
+              f"  degraded={tr.degraded}  rejected={tr.rejected}  "
+              f"tax +{tr.preempt_tax_inflicted:.4f}/-"
+              f"{tr.preempt_tax_suffered:.4f} J")
         if mask.any():
             ex = server.executors[tid]
             want = np.asarray(ex.full_forward(
@@ -152,6 +168,13 @@ def _serve_tenants(args) -> dict:
           f"violations={report.violations}  "
           f"preemptions={report.preemptions}  "
           f"gpu busy until {report.gpu_busy_until * 1e3:.2f} ms")
+    if args.occupancy == "interleaved":
+        res = report.result
+        print(f"timeline: {res.gap_fills} gap-fill(s), "
+              f"{res.dvfs_rescales} per-flush DVFS rescale(s) saving "
+              f"{res.dvfs_energy_saved:.4f} J  "
+              f"(what-if trial reuse {res.replan_trial_hits}/"
+              f"{res.replan_trial_hits + res.replan_trial_misses})")
     print(f"co-inference vs monolithic max |Δlogit| = {max_err:.2e} "
           f"(per tenant, served rows)")
     assert max_err < 1e-3
@@ -184,6 +207,12 @@ def main(argv=None) -> dict:
                     choices=["admit", "degrade", "reject"])
     ap.add_argument("--no-preemption", action="store_true",
                     help="disable queued-batch preemption (tenants>1)")
+    ap.add_argument("--occupancy", default="serialized",
+                    choices=["serialized", "interleaved"],
+                    help="GPU timeline mode: serialized = the paper's "
+                         "scalar Eq. 22 horizon; interleaved = gap-fill "
+                         "small batches into idle windows + per-flush "
+                         "edge DVFS against reservation slack")
     args = ap.parse_args(argv)
 
     if args.tenants > 1:
@@ -209,6 +238,12 @@ def main(argv=None) -> dict:
 
     if args.online:
         return _serve_online(server, fleet, profile, edge, reqs, args)
+    if args.occupancy != "serialized":
+        # the one-shot OG path threads the serialized DP cursor only
+        # (ROADMAP timeline follow-up d) — don't let the flag silently
+        # imply interleaved numbers
+        print("NOTE: --occupancy interleaved applies to --online/--tenants "
+              "serving; offline OG serving is serialized-only")
     return _serve_offline(server, fleet, profile, edge, reqs, args)
 
 

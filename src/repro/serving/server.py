@@ -73,6 +73,14 @@ class OnlineServeReport:
     energy: float
     violations: int
     gpu_busy_until: float           # absolute time the GPU frees (Eq. 22)
+    #: per-flush edge frequency actually dispatched (Hz; None for
+    #: all-local flushes) — under ``occupancy="interleaved"`` this is the
+    #: slack-rescaled f_e, not necessarily the planner grid's choice
+    f_edges: list = dataclasses.field(default_factory=list)
+    occupancy: str = "serialized"
+    gap_fills: int = 0
+    dvfs_rescales: int = 0
+    dvfs_energy_saved: float = 0.0
 
 
 def run_partitioned(executor: BlockwiseExecutor, vocab_size: int,
@@ -164,24 +172,30 @@ class CoInferenceServer:
             t_free_end=grouped.t_free_end)
 
     def scheduler(self, *, policy: str = "slack", window: float = 0.0,
-                  keep_frac: float = 0.7,
+                  keep_frac: float = 0.7, occupancy: str = "serialized",
                   on_flush=None, on_gpu_free=None) -> OnlineScheduler:
         """An event-driven scheduler wired to this server's fleet and
-        planner service (compiled shapes shared with ``serve``)."""
+        planner service (compiled shapes shared with ``serve``).
+        ``occupancy`` picks the GPU timeline mode: ``"serialized"`` is the
+        paper's scalar Eq. 22 horizon; ``"interleaved"`` gap-fills small
+        batches into idle windows and re-selects f_e per flush."""
         return OnlineScheduler(self.profile, self.fleet, self.edge,
                                policy=policy, window=window,
                                keep_frac=keep_frac, rho=self.rho,
                                inner=self.inner, service=self.service,
+                               occupancy=occupancy,
                                on_flush=on_flush, on_gpu_free=on_gpu_free)
 
     def serve_online(self, requests: list[Request], *,
                      policy: str = "slack", window: float = 0.0,
-                     keep_frac: float = 0.7) -> OnlineServeReport:
+                     keep_frac: float = 0.7,
+                     occupancy: str = "serialized") -> OnlineServeReport:
         """Serve requests arriving over time (``Request.arrival``).
 
         Each policy flush executes its planned batch on the model the
         moment the scheduler books it — devices run blocks 1..ñ, the edge
-        batches the suffix — with GPU occupancy threaded between flushes.
+        batches the suffix — with GPU occupancy threaded between flushes
+        through the scheduler's :class:`~repro.core.GpuTimeline`.
         Unlike :meth:`serve`, a user may appear in several flushes (repeat
         traffic) and requests need not cover the fleet."""
         S = len(requests[0].tokens)
@@ -195,7 +209,8 @@ class CoInferenceServer:
                                               ev.schedule)
 
         sched = self.scheduler(policy=policy, window=window,
-                               keep_frac=keep_frac, on_flush=execute)
+                               keep_frac=keep_frac, occupancy=occupancy,
+                               on_flush=execute)
         for row, r in enumerate(requests):
             sched.submit(OnlineArrival(r.user, r.arrival, r.deadline,
                                        payload=(row, r)))
@@ -203,7 +218,13 @@ class CoInferenceServer:
         return OnlineServeReport(logits=logits, result=result,
                                  flushes=sched.flushes, energy=result.energy,
                                  violations=result.violations,
-                                 gpu_busy_until=sched.gpu_free)
+                                 gpu_busy_until=sched.gpu_free,
+                                 f_edges=result.f_edges,
+                                 occupancy=occupancy,
+                                 gap_fills=sched.timeline.gap_fills,
+                                 dvfs_rescales=sched.timeline.dvfs_rescales,
+                                 dvfs_energy_saved=(
+                                     sched.timeline.dvfs_energy_saved))
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +285,8 @@ class MultiTenantServer:
     def __init__(self, models: Sequence[TenantModel], *,
                  rho: float = 0.03e9,
                  service: PlannerService | None = None,
-                 preemption: bool = True, admission: str = "admit"):
+                 preemption: bool = True, admission: str = "admit",
+                 occupancy: str = "serialized"):
         assert len(models) >= 1
         self.models = list(models)
         self.executors = [BlockwiseExecutor(m.cfg, m.params)
@@ -275,6 +297,7 @@ class MultiTenantServer:
         self.rho = rho
         self.preemption = preemption
         self.admission = admission
+        self.occupancy = occupancy
         self.service = (service if service is not None
                         else PlannerService(self.models[0].profile,
                                             self.models[0].edge, rho=rho))
@@ -311,8 +334,8 @@ class MultiTenantServer:
         mts = MultiTenantScheduler(
             [m.tenant() for m in self.models], rho=self.rho,
             service=self.service, preemption=self.preemption,
-            admission=self.admission, on_flush=execute, on_replan=execute,
-            on_degrade=degrade)
+            admission=self.admission, occupancy=self.occupancy,
+            on_flush=execute, on_replan=execute, on_degrade=degrade)
         for tid, reqs in enumerate(requests):
             order = sorted(range(len(reqs)), key=lambda i: reqs[i].arrival)
             for row in order:

@@ -298,6 +298,126 @@ def test_preemption_improves_energy_over_no_preemption():
     assert with_p.violations <= without.violations
 
 
+def test_preemption_what_if_trials_are_reused_on_commit():
+    """ROADMAP follow-up (a): the cost-benefit what-if already re-plans
+    every victim; committing the preemption must reuse those trial
+    schedules instead of solving each victim twice.  The commit walk
+    mirrors the estimate walk, so every re-plan is a cache hit — and the
+    bit-identical-accounting audit (previous test) proves the cached
+    plans equal fresh solves."""
+    mts, r, _, _ = _preemption_scenario()
+    assert r.preemptions >= 1
+    assert r.replan_trial_hits == r.preemptions == len(mts.replan_log)
+    assert r.replan_trial_misses == 0
+
+
+def test_preemption_tax_fairness_metric():
+    """ROADMAP follow-up (d): the replan audit trail yields the per-tenant
+    preemption tax — energy inflicted on others vs suffered from them —
+    and the two sides of the ledger balance exactly."""
+    mts, r, _, _ = _preemption_scenario()
+    assert r.preemptions >= 1
+    A, B = r.tenants                       # B (tight deadline) preempts A
+    assert B.preempt_tax_inflicted == pytest.approx(
+        A.preempt_tax_suffered)
+    assert A.preempt_tax_inflicted == 0.0 and B.preempt_tax_suffered == 0.0
+    total_delta = sum(rec.energy_delta for rec in mts.replan_log)
+    assert A.preempt_tax_suffered == pytest.approx(total_delta)
+    for rec in mts.replan_log:
+        assert rec.preemptor == 1 and rec.victim == 0
+        # the PR-3 tuple unpacking still works
+        tid, ev, t_free, logged = rec
+        assert (tid, ev, t_free, logged) == (rec.victim, rec.event,
+                                             rec.t_free, rec.schedule)
+
+
+# ---------------------------------------------------------------------------
+# queue scrubbing on booking (ROADMAP follow-up b)
+# ---------------------------------------------------------------------------
+
+def test_booking_scrubs_stranded_queued_arrivals():
+    """An arrival admitted against an idle timeline and still QUEUED when
+    another tenant's booking lands is re-evaluated at booking time: with
+    no feasible slot left it degrades immediately instead of eroding its
+    batch's deadline headroom at the eventual flush."""
+    # tenant 0 (checked first on ties): slow devices, offload-rescuable
+    # tight request parked in a long-window queue
+    fleetB = make_fleet(4, PROF, EDGE, beta=30.0, alpha=5.0, seed=0)
+    l_min = float(fleetB.zeta[0] * PROF.v()[-1] / fleetB.f_max[0])
+    off_min = min_offload_completion(PROF, fleetB, 0, EDGE, t_free=0.0)
+    assert off_min < l_min
+    rel = 0.5 * (off_min + l_min)
+    B = Tenant(PROF, fleetB, EDGE, name="B", policy="window", window=1.0)
+    # tenant 1: a loose burst that books the GPU far beyond `rel`
+    fleetA = make_fleet(8, PROF, EDGE, beta=40.0, seed=1)
+    A = Tenant(PROF, fleetA, EDGE, name="A", policy="immediate")
+    mts = MultiTenantScheduler([B, A], admission="degrade")
+    assert mts.submit(0, OnlineArrival(0, 0.0, rel)) is True    # idle: ok
+    for m in range(8):
+        mts.submit(1, OnlineArrival(m, 0.0, float(fleetA.deadline[m])))
+    r = mts.run()
+    trB = r.tenants[0]
+    # the booking's scrub caught it — it never waited for B's window flush
+    assert trB.scrubbed == 1 and trB.degraded == 1
+    assert trB.admitted == 0
+    assert trB.result.n_flushes == 0
+    assert trB.degraded_energy[0] > 0
+    # without scrubbing ("admit"), the stranded request flushes late
+    mts2 = MultiTenantScheduler([B, A], admission="admit")
+    mts2.submit(0, OnlineArrival(0, 0.0, rel))
+    for m in range(8):
+        mts2.submit(1, OnlineArrival(m, 0.0, float(fleetA.deadline[m])))
+    r2 = mts2.run()
+    assert r2.tenants[0].result.violations >= 1
+
+
+def test_scrubbed_fallback_charges_remaining_budget_not_arrival_budget():
+    """A scrubbed arrival already burned queue time: its degrade-to-local
+    DVFS derives from the budget REMAINING at scrub time (clipped at
+    f_max), not the arrival-instant budget — charging the latter would
+    understate the energy of every scrub-heavy run."""
+    fleetB = make_fleet(4, PROF, EDGE, beta=30.0, alpha=5.0, seed=0)
+    l_min = float(fleetB.zeta[0] * PROF.v()[-1] / fleetB.f_max[0])
+    off_min = min_offload_completion(PROF, fleetB, 0, EDGE, t_free=0.0)
+    rel = 0.5 * (off_min + l_min)
+    B = Tenant(PROF, fleetB, EDGE, name="B", policy="window", window=1.0)
+    fleetA = make_fleet(8, PROF, EDGE, beta=40.0, seed=1)
+    A = Tenant(PROF, fleetA, EDGE, name="A", policy="immediate")
+    mts = MultiTenantScheduler([B, A], admission="degrade")
+    t_burst = rel * 0.25                  # burns a quarter of the budget
+    assert mts.submit(0, OnlineArrival(0, 0.0, rel)) is True
+    for m in range(8):
+        mts.submit(1, OnlineArrival(m, t_burst,
+                                    float(fleetA.deadline[m])))
+    r = mts.run()
+    trB = r.tenants[0]
+    assert trB.scrubbed == 1
+    remaining = max(rel - t_burst, 1e-12)
+    f = float(np.clip(fleetB.zeta[0] * PROF.v()[-1] / remaining,
+                      fleetB.f_min[0], fleetB.f_max[0]))
+    want = float(fleetB.kappa[0] * PROF.u()[-1] * f ** 2)
+    assert trB.degraded_energy[0] == pytest.approx(want)
+    assert r.violations >= 1              # every degrade counts as a miss
+
+
+def test_scrub_spares_arrivals_that_remain_feasible():
+    """Scrubbing must only shed arrivals the new occupancy actually
+    strands — a loose-deadline queued arrival survives bookings."""
+    fleetB = make_fleet(4, PROF, EDGE, beta=30.0, seed=0)
+    B = Tenant(PROF, fleetB, EDGE, name="B", policy="window", window=0.05)
+    fleetA = make_fleet(4, PROF, EDGE, beta=30.0, seed=1)
+    A = Tenant(PROF, fleetA, EDGE, name="A", policy="immediate")
+    mts = MultiTenantScheduler([B, A], admission="degrade")
+    mts.submit(0, OnlineArrival(0, 0.0, float(fleetB.deadline[0])))
+    for m in range(4):
+        mts.submit(1, OnlineArrival(m, 0.0, float(fleetA.deadline[m])))
+    r = mts.run()
+    trB = r.tenants[0]
+    assert trB.scrubbed == 0 and trB.degraded == 0
+    assert trB.result.n_flushes == 1
+    assert r.violations == 0
+
+
 # ---------------------------------------------------------------------------
 # admission control
 # ---------------------------------------------------------------------------

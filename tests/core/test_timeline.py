@@ -1,0 +1,351 @@
+"""GPU timeline subsystem: serialized-mode bitwise parity with the scalar
+Eq. 22 path (single- and multi-tenant, all four flush policies),
+gap-filling into idle windows, per-flush edge DVFS against reservation
+slack, and the grouping DP's timeline cursor."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (GpuTimeline, MultiTenantScheduler, OnlineArrival,
+                        OnlineScheduler, Reservation, Tenant, TimelineCursor,
+                        make_edge_profile, make_fleet, mobilenet_v2_profile,
+                        optimal_grouping, poisson_arrivals,
+                        rescale_edge_dvfs, simulate_online,
+                        simulate_online_reference)
+from repro.core.jdob import Schedule
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+PROF2 = mobilenet_v2_profile(input_res=160)
+EDGE2 = make_edge_profile(PROF2)
+
+POLICIES = ("immediate", "window", "slack", "lastcall")
+
+
+def _setup(M=8, beta=20.0, rate=100.0, seed=0, **kw):
+    fleet = make_fleet(M, PROF, EDGE, beta=beta, seed=seed, **kw)
+    return fleet, poisson_arrivals(M, rate, fleet, seed=seed)
+
+
+def _assert_same_result(a, b):
+    assert a.energy == b.energy
+    assert a.n_flushes == b.n_flushes
+    assert a.batch_sizes == b.batch_sizes
+    assert a.violations == b.violations
+    assert a.flush_times == b.flush_times
+    assert a.f_edges == b.f_edges
+    np.testing.assert_array_equal(a.per_user_energy, b.per_user_energy)
+
+
+# ---------------------------------------------------------------------------
+# serialized mode: bit-identical to the scalar Eq. 22 path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_serialized_timeline_bit_identical_to_reference(policy):
+    """An OnlineScheduler backed by an explicit serialized GpuTimeline
+    reproduces the seed flush-loop simulator bit for bit — Eq. 22 survives
+    as the timeline's serialized special case."""
+    fleet, arrivals = _setup()
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy=policy, window=0.02,
+                            occupancy="serialized",
+                            timeline=GpuTimeline(mode="serialized"))
+    sched.submit_many(arrivals)
+    r = sched.run()
+    ref = simulate_online_reference(arrivals, PROF, fleet, EDGE,
+                                    policy=policy, window=0.02)
+    _assert_same_result(r, ref)
+    # the booked reservations ARE the flush events' occupancy
+    offl = [ev for ev in sched.flushes if ev.schedule.offload.any()]
+    assert sched.timeline.total_bookings == len(offl)
+    assert sched.gpu_free == sched.timeline.horizon
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_serialized_multi_tenant_bit_identical_to_scalar_path(policy):
+    """MultiTenantScheduler with an explicit serialized timeline (N = 1)
+    equals a lone OnlineScheduler — the GpuLedger parity invariant,
+    inherited by the timeline."""
+    fleet, arrivals = _setup(seed=3, rate=300.0)
+    t = Tenant(PROF, fleet, EDGE, policy=policy, window=0.02)
+    mts = MultiTenantScheduler([t], occupancy="serialized",
+                               preemption=True, admission="degrade")
+    mts.submit_traces([arrivals])
+    r = mts.run()
+    ref = OnlineScheduler(PROF, fleet, EDGE, policy=policy, window=0.02)
+    ref.submit_many(arrivals)
+    _assert_same_result(r.tenants[0].result, ref.run())
+    assert r.occupancy == "serialized"
+    assert r.gap_fills == 0 and r.dvfs_rescales == 0
+
+
+def test_ledger_alias_is_the_timeline():
+    from repro.core import Booking, GpuLedger
+    assert GpuLedger is GpuTimeline
+    assert Booking is Reservation
+    mts = MultiTenantScheduler([Tenant(PROF, _setup()[0], EDGE)])
+    assert mts.ledger is mts.timeline
+
+
+# ---------------------------------------------------------------------------
+# occupancy shape: reservations, gaps, earliest idle
+# ---------------------------------------------------------------------------
+
+def test_gaps_expose_idle_windows_between_reservations():
+    tl = GpuTimeline(mode="interleaved")
+    # uploads hold the GPU start past the booking instant: busy [0.10, 0.20]
+    tl.reserve(0, 0.0, 0.20, gpu_start=0.10)
+    tl.reserve(0, 0.20, 0.50, gpu_start=0.35)        # busy [0.35, 0.50]
+    gaps = tl.gaps(0.0)
+    assert gaps[:-1] == [(0.0, 0.10), (0.20, 0.35)]
+    assert gaps[-1][0] == 0.50 and np.isinf(gaps[-1][1])
+    assert tl.earliest_idle(0.0) == 0.0
+    assert tl.earliest_idle(0.12) == 0.20
+    assert tl.earliest_idle(0.60) == 0.60
+    # windows too narrow for a dispatch must not look idle
+    assert tl.earliest_idle(0.0, min_width=0.12) == 0.20
+    assert tl.earliest_idle(0.0, min_width=0.20) == 0.50
+    # serialized residual still measures the tail
+    assert tl.t_free(0.0) == pytest.approx(0.50)
+    assert tl.horizon == 0.50
+
+
+def test_remove_rewinds_horizon_and_counts_preemptions():
+    tl = GpuTimeline()
+    r1 = tl.reserve(0, 0.0, 0.2)
+    r2 = tl.reserve(1, 0.2, 0.5)
+    tl.remove([r2])
+    assert tl.horizon == 0.2
+    assert tl.total_preempted == 1
+    assert tl.reservations == [r1]
+    assert tl.t_free(0.1, exclude=[r1]) == 0.0
+
+
+def test_remove_rolls_back_dvfs_credit_of_preempted_reservations():
+    """A preempted reservation's DVFS stretch never materializes (the
+    victim re-plans fresh), so removal must roll its credit back out of
+    the timeline counters."""
+    tl = GpuTimeline(mode="interleaved")
+    r1 = tl.reserve(0, 0.0, 0.1)
+    r1.dvfs_saved = 0.05
+    r2 = tl.reserve(1, 0.1, 0.2)          # never rescaled
+    tl.dvfs_rescales, tl.dvfs_energy_saved = 1, 0.05
+    tl.remove([r2])
+    assert tl.dvfs_rescales == 1 and tl.dvfs_energy_saved == 0.05
+    tl.remove([r1])
+    assert tl.dvfs_rescales == 0 and tl.dvfs_energy_saved == 0.0
+
+
+def test_cursor_advance_mirrors_eq22():
+    cur = TimelineCursor(0.25)
+    s = dataclasses.replace(_dummy_schedule(), t_free_end=0.4)
+    assert cur.advance(s).t_free == 0.4
+    assert GpuTimeline().cursor(0.0).t_free == 0.0
+
+
+def _dummy_schedule(**kw):
+    base = dict(feasible=True, energy=1.0, partition=3, f_edge=1.0e9,
+                offload=np.array([True]), f_device=np.ones(1),
+                t_free_end=0.1, terms=dict(device=0.5, uplink=0.1,
+                                           edge=0.4),
+                per_user_energy=np.array([0.6]),
+                gpu_busy=0.02, edge_phi=0.02e9, edge_psi=0.4 / 1e18)
+    base.update(kw)
+    return Schedule(**base)
+
+
+# ---------------------------------------------------------------------------
+# per-flush edge DVFS: the closed form
+# ---------------------------------------------------------------------------
+
+def test_rescale_stretches_into_slack_and_saves_energy():
+    s = _dummy_schedule()
+    # window twice the busy time: f halves, edge energy quarters
+    s2, saved = rescale_edge_dvfs(s, window=0.04, f_min=0.1e9)
+    assert s2.f_edge == pytest.approx(0.5e9)
+    assert s2.gpu_busy == pytest.approx(0.04)
+    assert s2.terms["edge"] == pytest.approx(0.1)
+    assert saved == pytest.approx(0.3)
+    assert s2.energy == pytest.approx(s.energy - saved)
+    # the GPU start is invariant — only the run stretches
+    assert s2.gpu_start == pytest.approx(s.gpu_start)
+    assert s2.t_free_end == pytest.approx(s.gpu_start + 0.04)
+
+
+def test_rescale_falls_back_when_slack_is_tight():
+    s = _dummy_schedule()
+    for window in (0.02, 0.015, 0.0, float("nan")):
+        s2, saved = rescale_edge_dvfs(s, window=window, f_min=0.1e9)
+        assert s2 is s and saved == 0.0
+    # all-local schedules never rescale
+    loc = _dummy_schedule(offload=np.array([False]), gpu_busy=0.0,
+                          edge_phi=0.0, edge_psi=0.0)
+    s2, saved = rescale_edge_dvfs(loc, window=1.0, f_min=0.1e9)
+    assert s2 is loc and saved == 0.0
+
+
+def test_rescale_clamps_at_f_min():
+    s = _dummy_schedule()
+    s2, saved = rescale_edge_dvfs(s, window=1e9, f_min=0.25e9)
+    assert s2.f_edge == 0.25e9
+    assert saved > 0
+
+
+# ---------------------------------------------------------------------------
+# gap-filling: small batches interleave into idle windows
+# ---------------------------------------------------------------------------
+
+def test_interleaved_flush_gap_fills_in_front_of_delayed_reservation():
+    """A reservation whose uploads are still in flight leaves the GPU idle;
+    an interleaved flush that fits slots in FRONT of it instead of queuing
+    behind the horizon."""
+    fleet, _ = _setup(M=4, beta=30.0)
+    tl = GpuTimeline(mode="interleaved")
+    # a foreign reservation [0.5s, 0.6s) whose uploads hold the GPU idle
+    # until 0.5s — plenty of room for a small batch before it
+    tl.reserve(1, 0.0, 0.6, gpu_start=0.5, deadline=10.0)
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy="immediate",
+                            occupancy="interleaved", timeline=tl)
+    sched.submit(OnlineArrival(0, 0.0, float(fleet.deadline[0])))
+    r = sched.run()
+    assert tl.gap_fills == 1
+    ev = sched.flushes[0]
+    assert ev.schedule.offload.any()
+    assert ev.gpu_free <= 0.5 + 1e-12          # fits inside the idle window
+    # the serialized scheduler queues behind the horizon instead
+    tl2 = GpuTimeline(mode="serialized")
+    tl2.reserve(1, 0.0, 0.6, gpu_start=0.5, deadline=10.0)
+    ser = OnlineScheduler(PROF, fleet, EDGE, policy="immediate",
+                          occupancy="serialized", timeline=tl2)
+    ser.submit(OnlineArrival(0, 0.0, float(fleet.deadline[0])))
+    r_ser = ser.run()
+    assert ser.flushes[0].gpu_free > 0.6 or \
+        not ser.flushes[0].schedule.offload.any()
+    assert r.energy <= r_ser.energy + 1e-12
+
+
+def test_interleaved_multi_tenant_gap_fill_saves_energy():
+    """Heterogeneous fleets (slow phones delay big batches' GPU starts)
+    under contention: interleaved occupancy gap-fills and never does worse
+    than serialized at equal violations — the BENCH_timeline invariant."""
+    tenants, traces = [], []
+    for k, (prof, edge) in enumerate(((PROF, EDGE), (PROF2, EDGE2))):
+        fleet = make_fleet(8, prof, edge, beta=(8.0, 22.0), seed=k,
+                           alpha=(0.5, 3.0))
+        tenants.append(Tenant(prof, fleet, edge, name=f"t{k}",
+                              policy="immediate"))
+        traces.append(poisson_arrivals(8, 600.0, fleet, seed=100 + k))
+    results = {}
+    for occ in ("serialized", "interleaved"):
+        mts = MultiTenantScheduler(tenants, occupancy=occ, preemption=True,
+                                   admission="degrade")
+        mts.submit_traces([list(tr) for tr in traces])
+        results[occ] = mts.run()
+    ser, inter = results["serialized"], results["interleaved"]
+    assert inter.gap_fills >= 1
+    assert inter.violations <= ser.violations
+    assert inter.energy <= ser.energy + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# property tests: interleaving never violates a reservation's deadline
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(M=st.integers(2, 9), rate=st.floats(50.0, 2000.0),
+       beta=st.floats(4.0, 40.0), seed=st.integers(0, 999),
+       policy=st.sampled_from(["slack", "window", "immediate"]))
+def test_property_interleaved_respects_deadlines_and_flush_parity(
+        M, rate, beta, seed, policy):
+    """Flush decisions are policy-driven, so interleaved occupancy keeps
+    the exact flush timeline and violation count of serialized mode; every
+    reservation (gap-filled or DVFS-stretched) still ends by its batch's
+    tightest deadline, at a frequency inside [f_e,min, f_e,max]."""
+    fleet = make_fleet(M, PROF, EDGE, beta=beta, seed=seed,
+                       alpha=(0.5, 3.0))
+    arrivals = poisson_arrivals(M, rate, fleet, seed=seed)
+    ser = simulate_online(arrivals, PROF, fleet, EDGE, policy=policy,
+                          window=0.01)
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy=policy, window=0.01,
+                            occupancy="interleaved")
+    sched.submit_many(arrivals)
+    inter = sched.run()
+    assert inter.flush_times == ser.flush_times
+    assert inter.violations == ser.violations
+    assert inter.energy == float(inter.per_user_energy.sum())
+    for r in sched.timeline.reservations:
+        # the occupancy bound: tightest deadline among OFFLOADED members
+        # (a local member's completion never waits on the GPU)
+        assert r.end <= r.deadline + 1e-9
+        assert EDGE.f_min - 1e-6 <= r.f_edge <= EDGE.f_max + 1e-6
+        assert r.gpu_start <= r.end
+    for ev in sched.flushes:
+        s = ev.schedule
+        if s.offload.any():
+            deadline = min(a.abs_deadline for a, off
+                           in zip(ev.arrivals, s.offload) if off)
+            assert ev.gpu_free <= deadline + 1e-9
+
+
+def test_dvfs_quiescent_false_disables_tail_stretch():
+    """A live incremental-submit server looks quiescent between bursts, so
+    the free tail stretch is opt-out: with ``dvfs_quiescent=False`` (and
+    no gap-fills) interleaved occupancy is bit-identical to serialized."""
+    fleet, arrivals = _setup(M=6, rate=800.0, seed=4)
+    ser = simulate_online(arrivals, PROF, fleet, EDGE, policy="slack")
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy="slack",
+                            occupancy="interleaved", dvfs_quiescent=False)
+    sched.submit_many(arrivals)
+    inter = sched.run()
+    if sched.timeline.gap_fills == 0:
+        _assert_same_result(inter, ser)
+    assert sched.timeline.dvfs_rescales == 0
+
+
+# ---------------------------------------------------------------------------
+# grouping: the DP threads the timeline cursor
+# ---------------------------------------------------------------------------
+
+def test_optimal_grouping_commits_reservations_to_timeline():
+    fleet, _ = _setup(M=6, beta=(4.0, 18.0), seed=5)
+    plain = optimal_grouping(PROF, fleet, EDGE)
+    tl = GpuTimeline()
+    booked = optimal_grouping(PROF, fleet, EDGE, timeline=tl)
+    assert booked.energy == plain.energy
+    assert booked.t_free_end == plain.t_free_end
+    offl = [s for s in booked.schedules if s.offload.any()]
+    assert len(tl.reservations) == len(offl)
+    assert tl.horizon == booked.t_free_end
+    # reservations thread Eq. 22: contiguous, ordered, geometry-consistent
+    ends = [r.end for r in tl.reservations]
+    assert ends == sorted(ends)
+    for r, s in zip(tl.reservations, offl):
+        assert r.end - r.gpu_start == pytest.approx(s.gpu_busy)
+
+
+def test_optimal_grouping_reads_starting_occupancy_from_timeline():
+    fleet, _ = _setup(M=5, beta=(4.0, 18.0), seed=2)
+    tl = GpuTimeline()
+    tl.reserve(0, 0.0, 0.015)
+    from_tl = optimal_grouping(PROF, fleet, EDGE, timeline=tl)
+    explicit = optimal_grouping(PROF, fleet, EDGE, t_free=0.015)
+    assert from_tl.energy == explicit.energy
+    groups_a = [list(g) for g in from_tl.groups]
+    groups_b = [list(g) for g in explicit.groups]
+    assert groups_a == groups_b
+
+
+def test_schedule_reservation_geometry_is_consistent():
+    """The planner's Schedule carries the reservation geometry the
+    timeline books: busy = φ/f_e, edge energy = ψ·f_e², start+busy=end."""
+    fleet, _ = _setup(M=4, beta=15.0)
+    from repro.core import jdob_schedule
+    s = jdob_schedule(PROF, fleet, EDGE)
+    assert s.offload.any()
+    assert s.gpu_busy == pytest.approx(s.edge_phi / s.f_edge)
+    assert s.terms["edge"] == pytest.approx(s.edge_psi * s.f_edge ** 2)
+    assert s.gpu_start == pytest.approx(s.t_free_end - s.gpu_busy)
+    assert s.gpu_busy > 0 and s.edge_phi > 0 and s.edge_psi > 0

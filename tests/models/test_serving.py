@@ -105,6 +105,35 @@ def test_online_serving_matches_monolithic_and_reuses_service():
     assert server.service.stats().dispatches > 0
 
 
+def test_online_serving_interleaved_occupancy_matches_monolithic():
+    """``occupancy="interleaved"`` routes flushes through the GPU timeline
+    (gap-filling + per-flush DVFS): execution is unchanged — logits stay
+    bit-identical to the monolithic forward — and the dispatched per-flush
+    f_e is surfaced in the report."""
+    cfg, params, server, reqs = _setup_server(M=6, beta=8.0, seed=2)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for r in reqs:
+        t += float(rng.exponential(1.0 / 500.0))
+        r.arrival = t
+    report = server.serve_online(reqs, policy="slack",
+                                 occupancy="interleaved")
+    ex = BlockwiseExecutor(cfg, params)
+    tokens = jnp.asarray(np.stack([r.tokens for r in reqs]))
+    want = np.asarray(ex.full_forward(tokens))
+    np.testing.assert_allclose(report.logits, want, atol=1e-4, rtol=1e-4)
+    assert report.occupancy == "interleaved"
+    assert report.violations == 0
+    assert len(report.f_edges) == len(report.flushes)
+    edge = server.edge
+    for f, ev in zip(report.f_edges, report.flushes):
+        if ev.schedule.offload.any():
+            assert edge.f_min - 1e-6 <= f <= edge.f_max + 1e-6
+            assert f == ev.schedule.f_edge
+        else:
+            assert f is None
+
+
 def test_online_serving_repeat_user_traffic():
     """A user may request twice (separate arrivals): both answered, energy
     accumulated — the one-shot serve() path cannot express this."""
