@@ -9,23 +9,33 @@ non-zero when any case regresses by more than ``--tolerance`` (default
 30%, generous enough to ride out shared-CI noise; the bench itself
 already takes min-of-repeats).
 
-The tenancy benchmark's ENERGY savings (``BENCH_tenancy.json``,
-``saving_vs_naive`` per scenario) are gated the same way when
-``--tenancy-baseline``/``--tenancy-fresh`` are given: energies are
-deterministic given the seeds, so the band (``--tenancy-tolerance``,
-absolute percentage points, default 5pp) only absorbs legitimate
-re-tuning — a scheduling change that erodes the arbitration win beyond
-it fails the gate, not just a wall-clock regression.
+The ENERGY savings of the scheduling benchmarks are gated the same way
+when their baseline/fresh pairs are given: energies are deterministic
+given the seeds, so the band (absolute percentage points, default 5pp)
+only absorbs legitimate re-tuning — a scheduling change that erodes a
+win beyond it fails the gate, not just a wall-clock regression:
 
-Cases are keyed by (M, scenario) / (tenants, users); cases present in
-only one file are reported but never fail the gate (benchmarks may
-legitimately add or retire sizes).  Improvements are reported, never
-penalized.
+* ``BENCH_tenancy.json`` — ``saving_vs_naive`` per (tenants, users)
+  scenario (``--tenancy-baseline``/``--tenancy-fresh``);
+* ``BENCH_timeline.json`` — ``saving_vs_serialized`` per (tenants, users)
+  occupancy scenario (``--timeline-baseline``/``--timeline-fresh``);
+* ``BENCH_channel.json`` — ``saving_vs_nominal`` per named
+  contention/fading scenario (``--channel-baseline``/``--channel-fresh``).
+
+Cases are keyed by (M, scenario) / (tenants, users) / scenario name;
+cases present in only one file are reported but never fail the gate
+(benchmarks may legitimately add or retire sizes).  Improvements are
+reported, never penalized.  Each fresh doc's own win-count gate
+(``gate_wins >= gate_needed``) must also still hold.
 
   python benchmarks/check_regression.py \\
       --baseline BENCH_planner.json --fresh BENCH_planner_nightly.json \\
       --tenancy-baseline BENCH_tenancy.json \\
-      --tenancy-fresh BENCH_tenancy_nightly.json
+      --tenancy-fresh BENCH_tenancy_nightly.json \\
+      --timeline-baseline BENCH_timeline.json \\
+      --timeline-fresh BENCH_timeline_nightly.json \\
+      --channel-baseline BENCH_channel.json \\
+      --channel-fresh BENCH_channel_nightly.json
 """
 from __future__ import annotations
 
@@ -43,13 +53,27 @@ def _cases(doc: dict) -> dict[tuple, float]:
     return out
 
 
-def _savings(doc: dict) -> dict[tuple, float]:
-    """(tenants, users) → saving_vs_naive for every tenancy record."""
+#: per-benchmark gating spec: the saving field and the case-key fields
+SAVINGS_SPECS = {
+    "tenancy": dict(field="saving_vs_naive",
+                    keys=("tenants", "users_per_tenant"),
+                    label=lambda k: f"T={k[0]} M/t={k[1]}"),
+    "timeline": dict(field="saving_vs_serialized",
+                     keys=("tenants", "users_per_tenant"),
+                     label=lambda k: f"T={k[0]} M/t={k[1]}"),
+    "channel": dict(field="saving_vs_nominal",
+                    keys=("scenario",),
+                    label=lambda k: str(k[0])),
+}
+
+
+def _savings(doc: dict, spec: dict) -> dict[tuple, float]:
+    """case key → saving for every record carrying the spec's field."""
     out = {}
     for r in doc.get("results", []):
-        if r.get("saving_vs_naive") is not None:
-            out[(r.get("tenants"), r.get("users_per_tenant"))] = \
-                float(r["saving_vs_naive"])
+        if r.get(spec["field"]) is not None:
+            out[tuple(r.get(k) for k in spec["keys"])] = \
+                float(r[spec["field"]])
     return out
 
 
@@ -81,20 +105,22 @@ def _gate_speedups(baseline: str, fresh_path: str, tolerance: float) -> int:
     return failures
 
 
-def _gate_savings(baseline: str, fresh_path: str, tolerance_pp: float) -> int:
+def _gate_savings(kind: str, baseline: str, fresh_path: str,
+                  tolerance_pp: float) -> int:
+    spec = SAVINGS_SPECS[kind]
     with open(baseline) as f:
         base_doc = json.load(f)
     with open(fresh_path) as f:
         fresh_doc = json.load(f)
-    base, fresh = _savings(base_doc), _savings(fresh_doc)
+    base, fresh = _savings(base_doc, spec), _savings(fresh_doc, spec)
     if not base:
-        print(f"no tenancy savings in {baseline}; nothing to gate")
+        print(f"no {kind} savings in {baseline}; nothing to gate")
         return 0
     failures = 0
-    print(f"\n{'tenancy case':<28} {'baseline':>9} {'fresh':>9} "
+    print(f"\n{kind + ' case':<28} {'baseline':>9} {'fresh':>9} "
           f"{'delta':>8}  verdict")
     for key in sorted(base, key=str):
-        name = f"T={key[0]} M/t={key[1]}"
+        name = spec["label"](key)
         if key not in fresh:
             print(f"{name:<28} {base[key]:>8.1%} {'—':>9}  (case missing "
                   f"from fresh run: reported, not gated)")
@@ -106,11 +132,11 @@ def _gate_savings(baseline: str, fresh_path: str, tolerance_pp: float) -> int:
         print(f"{name:<28} {b:>8.1%} {f_:>8.1%} {f_ - b:>+7.1%}  {verdict}")
         failures += not ok
     for key in sorted(set(fresh) - set(base), key=str):
-        print(f"T={key[0]} M/t={key[1]}: new case ({fresh[key]:.1%}), "
+        print(f"{spec['label'](key)}: new case ({fresh[key]:.1%}), "
               f"not in baseline")
     # the fresh run's own win-count gate must also still hold
     if fresh_doc.get("gate_wins", 0) < fresh_doc.get("gate_needed", 0):
-        print(f"fresh tenancy run failed its own gate "
+        print(f"fresh {kind} run failed its own gate "
               f"({fresh_doc['gate_wins']}/{fresh_doc['gate_needed']} wins)",
               file=sys.stderr)
         failures += 1
@@ -132,17 +158,40 @@ def main(argv=None) -> int:
     ap.add_argument("--tenancy-tolerance", type=float, default=0.05,
                     help="max allowed absolute drop in saving_vs_naive "
                          "(fraction, i.e. 0.05 = 5 percentage points)")
+    ap.add_argument("--timeline-baseline", default=None,
+                    help="committed timeline (occupancy) snapshot JSON")
+    ap.add_argument("--timeline-fresh", default=None,
+                    help="freshly-emitted timeline JSON to gate")
+    ap.add_argument("--timeline-tolerance", type=float, default=0.05,
+                    help="max allowed absolute drop in "
+                         "saving_vs_serialized")
+    ap.add_argument("--channel-baseline", default=None,
+                    help="committed channel snapshot JSON")
+    ap.add_argument("--channel-fresh", default=None,
+                    help="freshly-emitted channel JSON to gate")
+    ap.add_argument("--channel-tolerance", type=float, default=0.05,
+                    help="max allowed absolute drop in saving_vs_nominal")
     args = ap.parse_args(argv)
-    if args.fresh is None and args.tenancy_fresh is None:
-        ap.error("nothing to gate: pass --fresh and/or --tenancy-fresh")
+    if (args.fresh is None and args.tenancy_fresh is None
+            and args.timeline_fresh is None and args.channel_fresh is None):
+        ap.error("nothing to gate: pass --fresh, --tenancy-fresh, "
+                 "--timeline-fresh and/or --channel-fresh")
 
     failures = 0
     if args.fresh is not None:
         failures += _gate_speedups(args.baseline, args.fresh, args.tolerance)
     if args.tenancy_fresh is not None:
         failures += _gate_savings(
-            args.tenancy_baseline or "BENCH_tenancy.json",
+            "tenancy", args.tenancy_baseline or "BENCH_tenancy.json",
             args.tenancy_fresh, args.tenancy_tolerance)
+    if args.timeline_fresh is not None:
+        failures += _gate_savings(
+            "timeline", args.timeline_baseline or "BENCH_timeline.json",
+            args.timeline_fresh, args.timeline_tolerance)
+    if args.channel_fresh is not None:
+        failures += _gate_savings(
+            "channel", args.channel_baseline or "BENCH_channel.json",
+            args.channel_fresh, args.channel_tolerance)
     if failures:
         print(f"{failures} case(s) regressed beyond tolerance",
               file=sys.stderr)

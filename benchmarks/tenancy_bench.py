@@ -28,6 +28,17 @@ Eq. 22 horizon) and ``interleaved`` (gap-filling + per-flush edge DVFS)
 occupancy.  Its gate requires interleaved to save energy at
 equal-or-fewer violations in at least 2 of the 3 scenarios.
 
+A third scenario set exercises the **wireless channel subsystem**
+(``BENCH_channel.json``): shared-uplink contention (equal and
+bandwidth-weighted splits) and Markov good/bad fading, comparing J-DOB
+with channel-aware planning (flush plans price the contended-rate
+snapshot) against planning at nominal solo rates — both realized on the
+SAME channel, so the nominal runs pay through the actualization pass
+(realized upload energy, forced edge speed-ups, bounded re-plans,
+realized deadline slips).  Its gate requires channel-aware planning to
+save energy at equal-or-fewer violations in at least 2 of the 3
+contention/fading scenarios.
+
   PYTHONPATH=src python benchmarks/tenancy_bench.py            # T = 2/4/8
   PYTHONPATH=src python benchmarks/tenancy_bench.py --dry-run  # CI smoke
 """
@@ -44,7 +55,8 @@ RESOLUTIONS = (224, 192, 160, 128)
 
 
 def build_scenario(n_tenants: int, users: int, rate: float, seed: int,
-                   alpha=1.0):
+                   alpha=1.0, beta_scale: float = 1.0,
+                   bw_spread: float = 1.0):
     from repro.core import (Tenant, make_edge_profile, make_fleet,
                             mobilenet_v2_profile, poisson_arrivals)
     tenants, traces = [], []
@@ -52,9 +64,14 @@ def build_scenario(n_tenants: int, users: int, rate: float, seed: int,
         profile = mobilenet_v2_profile(
             input_res=RESOLUTIONS[k % len(RESOLUTIONS)])
         edge = make_edge_profile(profile)
-        beta = (6.0 + 2.0 * (k % 3), 18.0 + 4.0 * (k % 3))
+        beta = (beta_scale * (6.0 + 2.0 * (k % 3)),
+                beta_scale * (18.0 + 4.0 * (k % 3)))
+        # per-tenant uplink bandwidth asymmetry (bw_spread > 1): tenant 0
+        # keeps the Table-I 10 MHz, the last gets bw_spread x that — the
+        # regime where a weighted shared uplink differs from equal slots
+        bw = 10e6 * (1.0 + (bw_spread - 1.0) * k / max(1, n_tenants - 1))
         fleet = make_fleet(users, profile, edge, beta=beta, seed=seed + k,
-                           alpha=alpha)
+                           alpha=alpha, bandwidth_hz=bw)
         tenants.append(Tenant(profile, fleet, edge,
                               name=f"mnv2@{RESOLUTIONS[k % 4]}#{k}"))
         traces.append(poisson_arrivals(users, rate, fleet,
@@ -154,6 +171,77 @@ def run_timeline_scenario(n_tenants: int, users: int, rate: float,
     )
 
 
+#: the contention/fading scenario axis (BENCH_channel.json): J-DOB with
+#: channel-aware planning vs planning at nominal (solo Shannon) rates,
+#: both realized on the SAME wireless channel
+CHANNEL_SCENARIOS = (
+    dict(name="shared-equal-T2", kind="shared", share="equal",
+         tenants=2, rate_scale=1.0),
+    # per-tenant bandwidth asymmetry (tenant 3 subscribes 2x tenant 0's
+    # bandwidth): the weighted split hands the wide-band devices more of
+    # the contended medium, which only a channel-aware plan can price
+    dict(name="shared-weighted-T4", kind="shared", share="weighted",
+         tenants=4, rate_scale=1.0, bw_spread=2.0),
+    # tighter deadlines (beta_scale): a fade the nominal planner ignores
+    # must be absorbed by device/edge speed-ups, not by slack
+    dict(name="fading-T2", kind="trace", bad_gain=0.2,
+         tenants=2, rate_scale=0.5, beta_scale=0.5),
+)
+
+
+def run_channel_scenario(spec: dict, users: int, rate: float,
+                         seed: int) -> dict:
+    """Channel-aware planning vs nominal-rate planning under the SAME
+    realized channel.  Both runs see identical tenants, traces and channel
+    dynamics; only the rates the PLANNER prices differ — the aware run
+    snapshots the contended/faded rate, the nominal run keeps the solo
+    Shannon scalars and pays through the actualization pass (realized
+    upload energy, forced edge speed-ups, bounded re-plans, realized
+    deadline slips)."""
+    from repro.core import (MultiTenantScheduler, PlannerService,
+                            make_channel)
+    n_tenants = spec["tenants"]
+    rate = rate * spec.get("rate_scale", 1.0)
+    tenants, traces = build_scenario(n_tenants, users, rate, seed,
+                                     beta_scale=spec.get("beta_scale", 1.0),
+                                     bw_spread=spec.get("bw_spread", 1.0))
+    service = PlannerService(tenants[0].profile, tenants[0].edge)
+    out, walls = {}, {}
+    for mode in ("aware", "nominal"):
+        channel = make_channel(spec["kind"], share=spec.get("share", "equal"),
+                               bad_gain=spec.get("bad_gain", 0.25),
+                               seed=seed)
+        t0 = time.perf_counter()
+        mts = MultiTenantScheduler(tenants, service=service, preemption=True,
+                                   admission="degrade", channel=channel,
+                                   channel_aware=(mode == "aware"))
+        mts.submit_traces([list(tr) for tr in traces])
+        out[mode] = mts.run()
+        walls[mode] = time.perf_counter() - t0
+    aware, nominal = out["aware"], out["nominal"]
+    return dict(
+        scenario=spec["name"], kind=spec["kind"],
+        share=spec.get("share"), tenants=n_tenants,
+        users_per_tenant=users, rate_hz=rate, seed=seed,
+        requests=aware.requests,
+        energy_aware=aware.energy, energy_nominal=nominal.energy,
+        violations_aware=aware.violations,
+        violations_nominal=nominal.violations,
+        upload_error_aware=aware.upload_error,
+        upload_error_nominal=nominal.upload_error,
+        channel_replans_aware=aware.channel_replans,
+        channel_replans_nominal=nominal.channel_replans,
+        realized_late_aware=aware.realized_late,
+        realized_late_nominal=nominal.realized_late,
+        degraded_aware=sum(t.degraded for t in aware.tenants),
+        degraded_nominal=sum(t.degraded for t in nominal.tenants),
+        wall_s_aware=walls["aware"], wall_s_nominal=walls["nominal"],
+        beats_nominal=bool(aware.energy < nominal.energy
+                           and aware.violations <= nominal.violations),
+        saving_vs_nominal=1.0 - aware.energy / nominal.energy,
+    )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tenants", type=int, nargs="+", default=[2, 4, 8])
@@ -171,6 +259,14 @@ def main(argv=None) -> int:
                     help="per-tenant arrival rate for the timeline "
                          "scenarios (denser than the arbitration set: "
                          "idle-window interleaving needs contention)")
+    ap.add_argument("--channel-json", default="BENCH_channel.json",
+                    help="channel-aware vs nominal-rate planning "
+                         "comparison output ('' disables the channel "
+                         "scenario set entirely)")
+    ap.add_argument("--channel-rate", type=float, default=900.0,
+                    help="per-tenant arrival rate for the channel "
+                         "scenarios (dense: shared-uplink contention "
+                         "needs overlapping uploads)")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny scenario set for CI (wiring + gate only)")
     args = ap.parse_args(argv)
@@ -182,6 +278,8 @@ def main(argv=None) -> int:
             args.json = "BENCH_tenancy_dryrun.json"
         if args.timeline_json == ap.get_default("timeline_json"):
             args.timeline_json = "BENCH_timeline_dryrun.json"
+        if args.channel_json == ap.get_default("channel_json"):
+            args.channel_json = "BENCH_channel_dryrun.json"
 
     scenarios = [(2, 3)] if args.dry_run else [(t, args.users)
                                               for t in args.tenants]
@@ -250,9 +348,47 @@ def main(argv=None) -> int:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.timeline_json} ({len(t_records)} scenarios)")
 
-    failed = wins < need or t_wins < t_need
+    # ---- channel scenario axis (wireless uplink subsystem) --------------
+    c_wins = c_need = 0
+    if args.channel_json:
+        c_records = []
+        c_users = 3 if args.dry_run else args.users
+        specs = CHANNEL_SCENARIOS[:1] if args.dry_run else CHANNEL_SCENARIOS
+        print(f"\n{'scenario':<20} {'aware':>10} {'nominal':>10} "
+              f"{'saving':>7} {'viol a/n':>9} {'err a/n (ms)':>14} "
+              f"{'replans':>7}")
+        for spec in specs:
+            r = run_channel_scenario(spec, c_users, args.channel_rate,
+                                     args.seed)
+            c_records.append(r)
+            print(f"{r['scenario']:<20} {r['energy_aware']:>10.4f} "
+                  f"{r['energy_nominal']:>10.4f} "
+                  f"{100 * r['saving_vs_nominal']:>6.2f}% "
+                  f"{r['violations_aware']:>4}/{r['violations_nominal']:<4} "
+                  f"{r['upload_error_aware'] * 1e3:>6.1f}/"
+                  f"{r['upload_error_nominal'] * 1e3:<6.1f} "
+                  f"{r['channel_replans_nominal']:>7}")
+        c_wins = sum(r["beats_nominal"] for r in c_records)
+        # dry-run exercises the wiring only
+        c_need = 0 if args.dry_run else 2
+        print(f"channel-aware beats nominal-rate planning (energy down, "
+              f"violations <=) in {c_wins}/{len(c_records)} scenarios "
+              f"(gate: >= {c_need})")
+        doc = dict(benchmark="channel_bench",
+                   mode="dry-run" if args.dry_run else "full",
+                   python=platform.python_version(),
+                   platform=platform.platform(),
+                   jax_platforms=os.environ.get("JAX_PLATFORMS", ""),
+                   gate_wins=c_wins, gate_needed=c_need,
+                   results=c_records)
+        with open(args.channel_json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.channel_json} ({len(c_records)} scenarios)")
+
+    failed = wins < need or t_wins < t_need or c_wins < c_need
     if failed:
-        print("tenancy/timeline acceptance gate FAILED", file=sys.stderr)
+        print("tenancy/timeline/channel acceptance gate FAILED",
+              file=sys.stderr)
         return 1
     return 0
 

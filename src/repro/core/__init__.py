@@ -1,5 +1,8 @@
 """The paper's contribution: J-DOB scheduling for multiuser co-inference."""
 from .task_model import TaskProfile, mobilenet_v2_profile, profile_from_arch
+from .channel import (CHANNEL_KINDS, ChannelModel, SharedUplink,
+                      StaticChannel, TraceChannel, UploadSession, UploadSpan,
+                      make_channel, markov_fading_gains)
 from .cost_models import (DeviceFleet, EdgeProfile, make_edge_profile,
                           make_tpu_v5e_edge_profile, make_fleet)
 from .jdob import (BatchedPlanner, ExecutableCache, PlannerStats, Schedule,
@@ -13,10 +16,10 @@ from .bruteforce import brute_force
 from .grouping import (GroupedSchedule, optimal_grouping,
                        optimal_grouping_reference, single_group)
 from .timeline import (OCCUPANCY_MODES, GpuTimeline, Reservation,
-                       TimelineCursor, rescale_edge_dvfs)
+                       TimelineCursor, rescale_edge_dvfs, respeed_edge_dvfs)
 from .online import (FlushEvent, GpuFreeEvent, OnlineArrival, OnlineResult,
-                     OnlineScheduler, all_local_energy, oracle_bound,
-                     poisson_arrivals, simulate_online,
+                     OnlineScheduler, UploadEvent, all_local_energy,
+                     oracle_bound, poisson_arrivals, simulate_online,
                      simulate_online_reference)
 from .tenancy import (ADMISSION_POLICIES, Booking, GpuLedger,
                       MultiTenantResult, MultiTenantScheduler, ReplanRecord,
@@ -25,6 +28,9 @@ from .tenancy import (ADMISSION_POLICIES, Booking, GpuLedger,
 
 __all__ = [
     "TaskProfile", "mobilenet_v2_profile", "profile_from_arch",
+    "CHANNEL_KINDS", "ChannelModel", "SharedUplink", "StaticChannel",
+    "TraceChannel", "UploadSession", "UploadSpan", "make_channel",
+    "markov_fading_gains",
     "DeviceFleet", "EdgeProfile", "make_edge_profile",
     "make_tpu_v5e_edge_profile", "make_fleet",
     "BatchedPlanner", "ExecutableCache", "PlannerStats", "Schedule",
@@ -37,9 +43,10 @@ __all__ = [
     "GroupedSchedule", "optimal_grouping", "optimal_grouping_reference",
     "single_group",
     "OCCUPANCY_MODES", "GpuTimeline", "Reservation", "TimelineCursor",
-    "rescale_edge_dvfs",
+    "rescale_edge_dvfs", "respeed_edge_dvfs",
     "FlushEvent", "GpuFreeEvent", "OnlineArrival", "OnlineResult",
-    "OnlineScheduler", "simulate_online", "simulate_online_reference",
+    "OnlineScheduler", "UploadEvent", "simulate_online",
+    "simulate_online_reference",
     "oracle_bound", "all_local_energy", "poisson_arrivals",
     "ADMISSION_POLICIES", "Booking", "GpuLedger", "MultiTenantResult",
     "MultiTenantScheduler", "ReplanRecord", "Tenant", "TenantResult",

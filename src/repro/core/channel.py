@@ -1,0 +1,322 @@
+"""Wireless uplink channel subsystem (paper Eqs. 3-4 as a first-class layer).
+
+The paper prices offloading through a per-device uplink rate R_m
+(``l_u = O_ñ / R_m``, ``e_u = l_u · p_u`` — Eqs. 3-4), which the repo used
+to freeze at fleet-construction time as one Shannon-formula scalar.  Every
+scenario the repo now serves — multi-tenant Poisson traffic, interleaved
+occupancy, preemption — is exactly the regime where M devices upload
+*concurrently over a shared medium* and rates are anything but constant
+(DVFO ties edge-cloud DVFS to observed network conditions; Shi et al.'s
+multiuser co-inference setting makes the shared uplink the defining
+constraint).  This module owns uplink capacity the way
+:class:`~repro.core.timeline.GpuTimeline` owns GPU occupancy:
+
+* :class:`StaticChannel` — today's per-device scalars (the default).  The
+  effective rate IS the solo rate and realized uploads land exactly where
+  Eqs. 3-4 predicted, so every consumer is **bit-identical** to the
+  pre-channel path (parity-tested end to end).
+* :class:`SharedUplink` — concurrently-uploading devices split the medium:
+  ``share="equal"`` gives each of k concurrent uploads 1/k of it (TDMA),
+  ``share="weighted"`` splits proportionally to each device's solo rate
+  (∝ its bandwidth_hz at equal SNR — per-tenant bandwidth asymmetry).
+  Planning snapshots a *contended* rate (everyone in the batch plus the
+  uploads already in flight assumed concurrent); realization simulates the
+  true progressive sharing — uploads start staggered at each device's
+  compute finish and free their share as they complete.
+* :class:`TraceChannel` — piecewise-constant per-device rate multipliers
+  over time (fading); :func:`markov_fading_gains` generates the classic
+  Gilbert-Elliott good/bad traces.  Planning snapshots the gain at plan
+  time; realization integrates the trace over the upload.
+
+Consumers (see ARCHITECTURE.md "The channel layer"):
+
+* ``DeviceFleet.rate`` stays the *solo* (uncontended) view and the channel
+  serves every other one: planners receive
+  :meth:`ChannelModel.effective_rates` snapshots via the per-user rate
+  array the jitted grid already takes, and
+  :meth:`ChannelModel.realize` turns a flush's planned uploads into
+  realized finish times the online scheduler derives the actual
+  ``gpu_start`` from (with a bounded replan / ``rescale_edge_dvfs``
+  actualization pass when realized rates diverge from planned ones).
+* The channel is **stateful** like the timeline: realized uploads stay on
+  the books as :class:`UploadSpan`\\ s and contend with later flushes —
+  across tenants, when the arbiter shares one channel — until they
+  complete.  Committed spans keep their booked finish times (they are
+  already accounted downstream); new uploads see them as fixed load.
+  :meth:`retract` undoes a session when its flush is re-planned
+  (preemption, quiescent-tail un-stretch).
+
+Keys identify devices across fleets: ``(tenant_id, user_index)`` tuples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+CHANNEL_KINDS = ("static", "shared", "trace")
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(eq=False)
+class UploadSpan:
+    """One realized upload on the channel's books: who, when, how much."""
+
+    key: tuple                  # (tenant, user)
+    start: float                # s, absolute (device compute finish)
+    finish: float               # s, absolute (realized completion)
+    nbytes: float
+    weight: float               # share weight while active
+
+
+class UploadSession:
+    """Handle over one flush's realized uploads (retractable as a unit)."""
+
+    def __init__(self, spans: list[UploadSpan]):
+        self.spans = spans
+
+    @property
+    def finish(self) -> float:
+        return max((s.finish for s in self.spans), default=float("-inf"))
+
+
+class ChannelModel:
+    """Base uplink model: the two questions every consumer asks.
+
+    ``static`` channels promise ``effective == solo`` and
+    ``realized == planned`` exactly, so schedulers skip the contended-rate
+    snapshot (bit-identical fast path) while still recording upload spans.
+    """
+
+    static = False
+    name = "channel"
+
+    def effective_rates(self, solo: np.ndarray, now: float,
+                        keys=None) -> np.ndarray:
+        """Per-device contended-rate snapshot (bytes/s) a plan at ``now``
+        should price Eqs. 3-4 with, for a batch of candidate uploaders
+        with solo rates ``solo`` — everything in the batch plus the
+        uploads already in flight assumed concurrent."""
+        raise NotImplementedError
+
+    def realize(self, solo: np.ndarray, starts: np.ndarray, nbytes: float,
+                keys=None) -> tuple[np.ndarray, UploadSession]:
+        """Commit a flush's uploads (``nbytes`` each, starting at each
+        device's ``starts``) and return ``(absolute finish times,
+        session)``.  The session stays on the channel's books — later
+        flushes contend with it — until retracted or complete."""
+        raise NotImplementedError
+
+    def retract(self, session: UploadSession | None) -> None:
+        """Undo a realized session (its flush was re-planned)."""
+
+    def reset(self) -> None:
+        """Drop all state (fresh run)."""
+
+
+class StaticChannel(ChannelModel):
+    """Constant per-device rates — the seed's Eqs. 3-4, bit for bit."""
+
+    static = True
+    name = "static"
+
+    def effective_rates(self, solo, now, keys=None):
+        return np.asarray(solo, np.float64)
+
+    def realize(self, solo, starts, nbytes, keys=None):
+        solo = np.asarray(solo, np.float64)
+        fin = np.asarray(starts, np.float64) + float(nbytes) / solo
+        return fin, UploadSession([])
+
+
+class SharedUplink(ChannelModel):
+    """Concurrent uploads split one shared medium (module docstring).
+
+    ``share="equal"``: each of the k concurrently-active uploads gets 1/k
+    of the medium (its solo rate scaled by 1/k — TDMA-style slots).
+    ``share="weighted"``: shares are proportional to each device's solo
+    rate, i.e. its subscribed bandwidth at equal SNR — a device with twice
+    the bandwidth keeps twice the slots under contention.
+    """
+
+    def __init__(self, share: str = "equal"):
+        assert share in ("equal", "weighted"), f"unknown share {share!r}"
+        self.share = share
+        self.name = f"shared-{share}"
+        self._spans: list[UploadSpan] = []
+
+    def _weights(self, solo: np.ndarray) -> np.ndarray:
+        """Absolute share weights — identical devices must weigh the same
+        in EVERY batch (weights are compared across realize() calls via
+        the committed spans, so a per-batch normalization would hand the
+        same device different medium shares depending on who it happened
+        to be realized with)."""
+        solo = np.asarray(solo, np.float64)
+        if self.share == "equal":
+            return np.ones_like(solo)
+        return solo / 1e6          # bytes/s -> MB/s: a stable global unit
+
+    def inflight(self, now: float) -> list[UploadSpan]:
+        return [s for s in self._spans if s.start <= now < s.finish]
+
+    def effective_rates(self, solo, now, keys=None):
+        solo = np.asarray(solo, np.float64)
+        w = self._weights(solo)
+        w_busy = sum(s.weight for s in self.inflight(now))
+        total = w_busy + float(w.sum())
+        if total <= _EPS:
+            return solo.copy()
+        return solo * (w / total)
+
+    def realize(self, solo, starts, nbytes, keys=None):
+        solo = np.asarray(solo, np.float64)
+        starts = np.asarray(starts, np.float64)
+        n = len(solo)
+        keys = list(keys) if keys is not None else [None] * n
+        nb = float(nbytes)
+        w = self._weights(solo)
+        t0 = float(starts.min()) if n else 0.0
+        # spans finished before any new upload begins can never contend
+        self._spans = [s for s in self._spans if s.finish > t0]
+        if nb <= _EPS:
+            fin = starts.copy()
+            return fin, UploadSession([])
+        rem = np.full(n, nb)
+        fin = np.full(n, np.nan)
+        # committed spans are fixed intervals: collect their breakpoints
+        brk = sorted({float(s) for s in starts}
+                     | {s.start for s in self._spans}
+                     | {s.finish for s in self._spans})
+        t = t0
+        while np.isnan(fin).any():
+            act = (starts <= t + _EPS) & np.isnan(fin)
+            if not act.any():
+                t = float(starts[np.isnan(fin)].min())
+                continue
+            w_busy = sum(s.weight for s in self._spans
+                         if s.start <= t + _EPS and s.finish > t + _EPS)
+            total = w_busy + float(w[act].sum())
+            rate = solo[act] * (w[act] / total)
+            dt_done = float((rem[act] / rate).min())
+            nxt = min((b for b in brk if b > t + _EPS), default=np.inf)
+            dt = min(dt_done, nxt - t)
+            rem[act] -= rate * dt
+            t += dt
+            done = act & (rem <= nb * 1e-12 + _EPS)
+            fin[done] = t
+        spans = [UploadSpan(keys[i], float(starts[i]), float(fin[i]), nb,
+                            float(w[i])) for i in range(n)]
+        self._spans.extend(spans)
+        return fin, UploadSession(spans)
+
+    def retract(self, session):
+        if session is None:
+            return
+        drop = set(map(id, session.spans))
+        self._spans = [s for s in self._spans if id(s) not in drop]
+
+    def reset(self):
+        self._spans = []
+
+
+class TraceChannel(ChannelModel):
+    """Time-varying rates from piecewise-constant gain traces.
+
+    ``times`` are ascending breakpoints starting at 0; ``gains`` is a
+    ``(n_traces, len(times))`` multiplier table (rate = solo · gain).
+    Devices map to trace rows deterministically from their key (so
+    arbitrary (tenant, user) pairs need no registration); past the last
+    breakpoint the final gain holds.  Contention-free by design — compose
+    with :class:`SharedUplink` semantics is future work."""
+
+    static = False
+    name = "trace"
+
+    def __init__(self, times: np.ndarray, gains: np.ndarray):
+        times = np.asarray(times, np.float64)
+        gains = np.atleast_2d(np.asarray(gains, np.float64))
+        assert times.ndim == 1 and gains.shape[1] == len(times)
+        assert times[0] == 0.0 and (np.diff(times) > 0).all()
+        assert (gains > 0).all(), "gains must be positive (rate > 0)"
+        self.times = times
+        self.gains = gains
+
+    def _row(self, key) -> int:
+        if key is None:
+            return 0
+        if isinstance(key, tuple):
+            acc = 0
+            for part in key:
+                acc = acc * 8191 + int(part)
+            return acc % len(self.gains)
+        return int(key) % len(self.gains)
+
+    def gain(self, key, t: float) -> float:
+        i = int(np.searchsorted(self.times, t, side="right")) - 1
+        return float(self.gains[self._row(key), max(i, 0)])
+
+    def effective_rates(self, solo, now, keys=None):
+        solo = np.asarray(solo, np.float64)
+        keys = list(keys) if keys is not None else [None] * len(solo)
+        return solo * np.array([self.gain(k, now) for k in keys])
+
+    def _finish(self, key, solo: float, start: float, nbytes: float) -> float:
+        """Integrate solo·gain(t) from ``start`` until ``nbytes`` land."""
+        row = self.gains[self._row(key)]
+        rem = float(nbytes)
+        t = float(start)
+        i = max(int(np.searchsorted(self.times, t, side="right")) - 1, 0)
+        while i + 1 < len(self.times):
+            rate = solo * row[i]
+            seg = self.times[i + 1] - t
+            if rate * seg >= rem - _EPS:
+                return t + rem / rate
+            rem -= rate * seg
+            t = float(self.times[i + 1])
+            i += 1
+        return t + rem / (solo * row[-1])
+
+    def realize(self, solo, starts, nbytes, keys=None):
+        solo = np.asarray(solo, np.float64)
+        starts = np.asarray(starts, np.float64)
+        keys = list(keys) if keys is not None else [None] * len(solo)
+        fin = np.array([self._finish(k, float(r), float(s), float(nbytes))
+                        for k, r, s in zip(keys, solo, starts)])
+        return fin, UploadSession([])
+
+
+def markov_fading_gains(n_traces: int, horizon: float, dt: float = 0.005, *,
+                        p_stay_good: float = 0.9, p_stay_bad: float = 0.7,
+                        bad_gain: float = 0.25, good_gain: float = 1.0,
+                        seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Gilbert-Elliott good/bad fading: ``(times, gains)`` for
+    :class:`TraceChannel`.  Each trace is a two-state Markov chain sampled
+    every ``dt`` seconds over ``horizon``; good ↦ ``good_gain``, bad ↦
+    ``bad_gain``.  Deterministic given ``seed``."""
+    assert horizon > 0 and dt > 0
+    rng = np.random.default_rng(seed)
+    k = int(np.ceil(horizon / dt)) + 1
+    times = np.arange(k) * dt
+    good = np.ones((n_traces, k), bool)
+    u = rng.random((n_traces, k))
+    for j in range(1, k):
+        stay = np.where(good[:, j - 1], p_stay_good, p_stay_bad)
+        flip = u[:, j] >= stay
+        good[:, j] = np.where(flip, ~good[:, j - 1], good[:, j - 1])
+    gains = np.where(good, good_gain, bad_gain)
+    return times, gains
+
+
+def make_channel(kind: str, *, share: str = "equal", n_traces: int = 8,
+                 horizon: float = 10.0, dt: float = 0.005,
+                 bad_gain: float = 0.25, seed: int = 0) -> ChannelModel:
+    """Factory behind the ``--channel {static,shared,trace}`` flags."""
+    assert kind in CHANNEL_KINDS, f"unknown channel kind {kind!r}"
+    if kind == "static":
+        return StaticChannel()
+    if kind == "shared":
+        return SharedUplink(share=share)
+    times, gains = markov_fading_gains(n_traces, horizon, dt,
+                                       bad_gain=bad_gain, seed=seed)
+    return TraceChannel(times, gains)

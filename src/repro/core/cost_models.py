@@ -76,23 +76,45 @@ class EdgeProfile:
 
 @dataclasses.dataclass(frozen=True)
 class DeviceFleet:
-    """M mobile devices (arrays of shape (M,))."""
+    """M mobile devices (arrays of shape (M,)).
+
+    ``rate`` is the SOLO (uncontended) uplink view — what Eqs. 3-4 price
+    when this device uploads alone on a clear channel.  Every other view
+    is served by the attached :mod:`~repro.core.channel` model (``None``
+    means static semantics, bit-identical to the pre-channel path): the
+    planners consume :meth:`rates_at` snapshots and the online scheduler
+    derives realized upload finishes from ``channel.realize``.
+    """
 
     zeta: np.ndarray      # cycles per FLOP
     kappa: np.ndarray     # J/(cycle·Hz²)  (effective switched capacitance)
     f_min: np.ndarray     # Hz
     f_max: np.ndarray     # Hz
-    rate: np.ndarray      # uplink bytes/s
+    rate: np.ndarray      # SOLO uplink bytes/s (the channel's nominal view)
     p_up: np.ndarray      # uplink W
     deadline: np.ndarray  # T_m^(d), seconds
+    #: uplink capacity owner (repro.core.channel); None = static scalars
+    channel: object | None = dataclasses.field(default=None, compare=False)
 
     @property
     def M(self) -> int:
         return len(self.zeta)
 
     def subset(self, idx) -> "DeviceFleet":
-        return DeviceFleet(*(getattr(self, f.name)[idx]
-                             for f in dataclasses.fields(self)))
+        arrays = {f.name: getattr(self, f.name)[idx]
+                  for f in dataclasses.fields(self) if f.name != "channel"}
+        return dataclasses.replace(self, **arrays)
+
+    def rates_at(self, now: float, users=None, tenant: int = 0) -> np.ndarray:
+        """The channel's effective-rate snapshot for ``users`` (default:
+        everyone) at instant ``now`` — equal to the solo ``rate`` view
+        when no channel is attached (or a static one is)."""
+        users = np.arange(self.M) if users is None else np.asarray(users)
+        solo = self.rate[users]
+        if self.channel is None or self.channel.static:
+            return solo
+        keys = [(tenant, int(u)) for u in users]
+        return self.channel.effective_rates(solo, now, keys=keys)
 
     def local_latency(self, profile: TaskProfile, f=None) -> np.ndarray:
         f = self.f_max if f is None else f
@@ -185,6 +207,7 @@ def make_fleet(M: int,
                p_up: float = 1.0,
                f_min: float = 1.5e9,
                f_max: float = 2.6e9,
+               channel=None,
                seed: int | None = None) -> DeviceFleet:
     """Build the Table-I fleet, calibrated against the edge profile.
 
@@ -196,7 +219,9 @@ def make_fleet(M: int,
     (lo, hi) range sampled per user, or an (M,) array — heterogeneous
     fleets (slow/efficient phones next to fast/hungry ones) exercise the
     per-user ζ_m/κ_m paths of Eqs. 17-21 that identical devices leave
-    degenerate.
+    degenerate.  ``channel`` attaches a :mod:`~repro.core.channel` model
+    (shared-uplink contention / fading traces); the ``rate`` field stays
+    the solo Shannon view the channel contends from.
     """
     rng = np.random.default_rng(seed)
 
@@ -227,4 +252,4 @@ def make_fleet(M: int,
     return DeviceFleet(zeta=zeta, kappa=kappa,
                        f_min=f_min * ones, f_max=f_max * ones,
                        rate=rate * ones, p_up=p_up * ones,
-                       deadline=deadlines)
+                       deadline=deadlines, channel=channel)

@@ -44,6 +44,15 @@ PlannerService` and books a :class:`~repro.core.timeline.Reservation`
 The offline **oracle bound** runs OG+J-DOB over all requests with arrival
 times ignored (clairvoyant, free to batch anything) — a lower bound no
 online policy can beat.
+
+**The channel** (:mod:`repro.core.channel`) threads through every flush:
+plans price Eqs. 3-4 at the channel's contended-rate snapshot (the jitted
+grid is unchanged — rates were already a per-user input array), the
+flush's uploads are then *realized* on the channel and the actual
+``gpu_start`` derived from the realized finish times, with a bounded
+replan / edge-DVFS actualization pass when they diverge from the plan
+(:meth:`OnlineScheduler._actualize`).  Without a channel — or with the
+static one — every step collapses to the pre-channel path bit for bit.
 """
 from __future__ import annotations
 
@@ -55,12 +64,14 @@ from typing import Callable
 import numpy as np
 
 from .baselines import jdob_plus, local_computing
+from .channel import ChannelModel
 from .cost_models import DeviceFleet, EdgeProfile
 from .grouping import optimal_grouping
 from .jdob import BatchedPlanner, Schedule
 from .planner_service import PlannerService, planner_spec
 from .task_model import TaskProfile
-from .timeline import OCCUPANCY_MODES, GpuTimeline, rescale_edge_dvfs
+from .timeline import (OCCUPANCY_MODES, GpuTimeline, rescale_edge_dvfs,
+                       respeed_edge_dvfs)
 
 POLICIES = ("immediate", "window", "slack", "lastcall")
 
@@ -89,6 +100,17 @@ class OnlineResult:
     #: all-local flushes; under interleaved occupancy this is the
     #: slack-rescaled f_e, not necessarily the planner grid's choice
     f_edges: list = dataclasses.field(default_factory=list)
+    #: channel observability (all zero without a channel / with the
+    #: static one): summed |realized − planned| upload completion (s),
+    #: bounded actualization re-plans taken when realized rates diverged,
+    #: and offloaded requests whose REALIZED batch end slipped past their
+    #: deadline (on top of the flush-time ``violations`` count)
+    upload_error: float = 0.0
+    channel_replans: int = 0
+    realized_late: int = 0
+    #: gap probes skipped because the per-batch busy-time lower bound
+    #: could not fit the idle window (ROADMAP timeline follow-up (b))
+    pruned_probes: int = 0
 
 
 @dataclasses.dataclass(eq=False)
@@ -103,6 +125,17 @@ class FlushEvent:
     violations: int           # requests past their point of no return
     seq: int = -1             # index into the scheduler's flush timeline
     replanned: int = 0        # preemption re-plans applied (tenancy layer)
+    #: the per-user effective-rate snapshot the plan priced Eqs. 3-4 with
+    #: (None = the fleet's solo view) — re-plans of this batch reuse it so
+    #: trial-cache solves stay bit-identical to fresh ones
+    plan_rates: np.ndarray | None = None
+    #: planned vs channel-realized completion of the batch's LAST upload
+    #: (absolute s; NaN without a channel)
+    upload_planned: float = float("nan")
+    upload_actual: float = float("nan")
+    #: the channel session holding this flush's realized upload spans
+    upload_session: object = None
+    channel_replans: int = 0  # actualization re-plans this flush took
 
 
 @dataclasses.dataclass(eq=False)
@@ -111,6 +144,19 @@ class GpuFreeEvent:
 
     time: float
     flush: FlushEvent
+
+
+@dataclasses.dataclass(eq=False)
+class UploadEvent:
+    """The channel realized the LAST upload of ``flush``'s batch — the
+    instant the accelerator can genuinely start it.  ``planned`` is where
+    Eqs. 3-4 at the plan's rates expected that upload to land; the
+    scheduler's actualization pass has already reconciled the divergence
+    by the time this event fires."""
+
+    time: float               # realized completion (absolute s)
+    flush: FlushEvent
+    planned: float
 
 
 class OnlineScheduler:
@@ -131,9 +177,13 @@ class OnlineScheduler:
                  on_flush: Callable[[FlushEvent], None] | None = None,
                  on_gpu_free: Callable[[GpuFreeEvent], None] | None = None,
                  on_replan: Callable[[FlushEvent], None] | None = None,
+                 on_upload: Callable[[UploadEvent], None] | None = None,
                  history: int | None = None,
                  occupancy: str = "serialized",
                  timeline: GpuTimeline | None = None,
+                 channel: ChannelModel | None = None,
+                 channel_aware: bool = True,
+                 channel_replan_limit: int = 1,
                  dvfs_slack_frac: float = 0.0,
                  dvfs_quiescent: bool = True):
         assert policy in POLICIES, f"unknown policy {policy!r}"
@@ -155,6 +205,18 @@ class OnlineScheduler:
         self.on_flush = on_flush
         self.on_gpu_free = on_gpu_free
         self.on_replan = on_replan
+        self.on_upload = on_upload
+        #: the uplink capacity owner (repro.core.channel): explicit arg
+        #: wins, else the fleet's attached channel, else None — the seed's
+        #: frozen-scalar semantics with zero channel bookkeeping
+        self.channel = channel if channel is not None else fleet.channel
+        #: plan against the channel's contended-rate snapshot (True) or at
+        #: the nominal solo rates (False — the baseline the channel bench
+        #: measures channel-aware planning against)
+        self.channel_aware = channel_aware
+        #: bounded actualization: how many re-plans one flush may take
+        #: when realized rates diverge beyond what edge DVFS can absorb
+        self.channel_replan_limit = channel_replan_limit
         # point of no return offsets: minimum local latency at f_max
         self._l_min = fleet.zeta * profile.v()[-1] / fleet.f_max
         # the smallest GPU busy time any offload of this profile can have
@@ -163,6 +225,9 @@ class OnlineScheduler:
         _phi_base, _phi_slope = edge.phi_coeffs(profile)
         self._min_gap = float(np.min(_phi_base[:-1] + _phi_slope[:-1])
                               / edge.f_max)
+        # per-partition single-sample busy time at f_e,max — the φ part of
+        # the per-batch busy-time lower bound gap-probe pruning uses
+        self._phi1 = (_phi_base[:-1] + _phi_slope[:-1]) / edge.f_max
         self._seq = itertools.count()
         self._arrivals: list = []                 # heap of pending arrivals
         self._timers: list = []                   # heap of gpu-free events
@@ -195,6 +260,15 @@ class OnlineScheduler:
         self.dvfs_quiescent = dvfs_quiescent
         self._slot_limit = np.inf                 # abs end bound of the slot
         self._slot_saved = 0.0                    # DVFS J saved this flush
+        self._slot_tf = 0.0                       # residual the plan used
+        self._slot_stretch_orig = None            # pre-quiescent-stretch s
+        self._flush_upload = None                 # (planned, actual) abs s
+        self._flush_session = None                # channel UploadSession
+        self._flush_rates = None                  # effective-rate snapshot
+        self.upload_error = 0.0
+        self.channel_replans = 0
+        self.realized_late = 0
+        self.probe_prunes = 0
         self.gpu_free = 0.0                       # mirror: timeline horizon
         #: rich per-flush events; a live server running forever should cap
         #: this with ``history=N`` (aggregates below are always complete —
@@ -222,8 +296,31 @@ class OnlineScheduler:
                 f"arrival at t={arrival.arrival:.9g}s is earlier than the "
                 f"scheduler clock t={self.now:.9g}s; the event heap cannot "
                 f"rewind — submit arrivals in causal order")
+        self._unstretch_tail(arrival.arrival)
         heapq.heappush(self._arrivals,
                        (arrival.arrival, next(self._seq), arrival))
+
+    def _unstretch_tail(self, t: float) -> None:
+        """ROADMAP timeline follow-up (a): a quiescent-tail DVFS stretch
+        was free only because nothing could plan behind it — the arrival
+        being submitted breaks that premise, so every stretched
+        reservation of THIS scheduler whose GPU run has not started by
+        ``t`` is restored to its unstretched f_e (geometry via
+        :meth:`GpuTimeline.unstretch`, accounting via
+        :meth:`replan_flush` with the snapshotted pre-stretch schedule).
+        One-shot traces are untouched: they submit everything before the
+        clock moves, when no reservation exists yet."""
+        tl = self.timeline
+        if tl.mode != "interleaved":
+            return
+        for r in list(tl.reservations):
+            if (r.tenant == self.tenant_id and r.flush is not None
+                    and r.stretched_from is not None and r.gpu_start > t):
+                orig = r.stretched_from
+                tl.unstretch(r, end=r.flush.time + orig.t_free_end,
+                             f_edge=orig.f_edge)
+                self.replan_flush(r.flush, 0.0, schedule=orig)
+                self.gpu_free = tl.horizon
 
     def submit_many(self, arrivals) -> None:
         for a in arrivals:
@@ -255,9 +352,14 @@ class OnlineScheduler:
 
     def _plan_event(self, ev: FlushEvent, t_free: float) -> Schedule:
         """Re-plan an existing flush's batch (same members, same flush
-        time) against a different residual occupancy — accounting-free."""
+        time) against a different residual occupancy — accounting-free.
+        Re-plans price Eqs. 3-4 at the SAME effective-rate snapshot the
+        original plan used (``ev.plan_rates``), so a cached trial solve
+        and a fresh one stay bit-identical."""
         rel = np.array([a.abs_deadline - ev.time for a in ev.arrivals])
         sub = dataclasses.replace(self.fleet.subset(ev.users), deadline=rel)
+        if ev.plan_rates is not None:
+            sub = dataclasses.replace(sub, rate=ev.plan_rates)
         return self._plan(sub, t_free)
 
     # ---- GPU booking hooks (overridden by the tenancy layer) -----------
@@ -282,6 +384,7 @@ class OnlineScheduler:
         rescale."""
         self._slot_limit = np.inf
         self._slot_saved = 0.0
+        self._slot_stretch_orig = None
         if self.occupancy == "interleaved":
             t_tail = self.timeline.t_free(now)
             for g0, g1 in self.timeline.gaps(now):
@@ -290,14 +393,37 @@ class OnlineScheduler:
                     break                     # reached the serialized tail
                 if g1 - max(g0, now) < self._min_gap:
                     continue                  # too narrow for any offload
+                if now + self._min_busy_bound(sub, tf) > g1 + 1e-9:
+                    # ROADMAP follow-up (b): no offload of THIS batch can
+                    # end inside the window, so don't pay a planner
+                    # dispatch to find that out (an all-local plan is
+                    # slot-independent, so skipping cannot change results)
+                    self.probe_prunes += 1
+                    continue
                 s = self._plan(sub, tf)
                 if not s.offload.any():
+                    self._slot_tf = tf
                     return s                  # no GPU needed at all
                 if now + s.t_free_end <= g1 + 1e-12:
                     self._slot_limit = g1
+                    self._slot_tf = tf
                     self.timeline.gap_fills += 1
                     return s
-        return self._plan(sub, self._t_free(now, sub, arrivals))
+        tf = self._t_free(now, sub, arrivals)
+        self._slot_tf = tf
+        return self._plan(sub, tf)
+
+    def _min_busy_bound(self, sub: DeviceFleet, tf: float) -> float:
+        """A lower bound (s, relative to now) on the END of any offloading
+        plan for this batch behind ``tf`` seconds of residual occupancy:
+        the GPU cannot finish before the fastest member's fastest-boundary
+        upload lands (γ at f_max, the plan's own rates) plus one sample's
+        suffix at f_e,max.  Bounds every (ñ, f_e, batch) choice from
+        below, so pruning a window it cannot fit never changes results."""
+        v = self.profile.v()
+        gam = (self.profile.O[:-1] / sub.rate[:, None]
+               + sub.zeta[:, None] * v[:-1] / sub.f_max[:, None]).min(axis=0)
+        return float(np.min(np.maximum(tf, gam) + self._phi1))
 
     def _post_plan(self, now: float, arrivals: list[OnlineArrival],
                    s: Schedule) -> Schedule:
@@ -319,8 +445,9 @@ class OnlineScheduler:
                        for a, off in zip(arrivals, s.offload) if off)
         limit = min(deadline, self._slot_limit)
         window = limit - (now + s.gpu_start)
-        if not np.isfinite(self._slot_limit) and (
-                self._pending_work() or not self.dvfs_quiescent):
+        tail = not np.isfinite(self._slot_limit)
+        quiet = (tail and self.dvfs_quiescent and not self._pending_work())
+        if tail and not quiet:
             # tail slot with traffic still pending: stretching extends the
             # horizon every later flush plans behind, so consume only the
             # configured fraction of the slack (default: none).  A
@@ -330,11 +457,18 @@ class OnlineScheduler:
             # existing reservation (sunk cost) and is used in full.
             window = s.gpu_busy + self.dvfs_slack_frac * (window
                                                           - s.gpu_busy)
+        pre = s
         s, saved = rescale_edge_dvfs(s, window=window, f_min=self.edge.f_min)
         if saved > 0.0:
             self.timeline.dvfs_rescales += 1
             self.timeline.dvfs_energy_saved += saved
             self._slot_saved = saved        # booked onto the reservation
+            if quiet:
+                # snapshot the unstretched plan so a submit() arriving
+                # before this reservation starts can roll the stretch
+                # back (follow-up (a) — the stretch was free only while
+                # nothing could plan behind it)
+                self._slot_stretch_orig = pre
         return s
 
     def _pending_work(self) -> bool:
@@ -359,13 +493,184 @@ class OnlineScheduler:
         re-planning of preempted batches + queue scrubbing)."""
         if ev.schedule.offload.any():
             self.timeline.book(self.tenant_id, ev,
-                               dvfs_saved=self._slot_saved)
+                               dvfs_saved=self._slot_saved,
+                               stretched_from=self._slot_stretch_orig,
+                               upload_planned=ev.upload_planned,
+                               upload_actual=ev.upload_actual)
         self.gpu_free = self.timeline.horizon
+
+    # ---- channel actualization -----------------------------------------
+    def _upload_geometry(self, s: Schedule, users: np.ndarray, at: float):
+        """One flush's upload geometry: ``(starts, nbytes, solo, keys)``.
+        Each offloader's upload begins at its device-compute finish (the
+        committed f_m) and carries the partition boundary's activation —
+        the single source both flush-time realization and re-plan
+        re-realization derive from."""
+        off = s.offload
+        nbytes = float(self.profile.O[s.partition])
+        v_nt = float(self.profile.v()[s.partition])
+        comp = at + self.fleet.zeta[users][off] * v_nt / s.f_device[off]
+        solo = self.fleet.rate[users][off]
+        keys = [(self.tenant_id, int(u)) for u in users[off]]
+        return comp, nbytes, solo, keys
+
+    def _actualize(self, now: float, arrivals: list[OnlineArrival],
+                   idx: np.ndarray, sub: DeviceFleet, s: Schedule,
+                   depth: int = 0) -> Schedule:
+        """Realize the flush's uploads on the channel and reconcile the
+        plan with what the medium actually delivered.  The actual
+        ``gpu_start`` is derived from the realized upload finishes:
+
+        * realized == planned (no channel, the static one, or divergence
+          below noise) — the schedule is returned untouched, bit for bit;
+        * uploads landed EARLY — the occupancy simply shifts forward
+          (later flushes inherit the shorter queue);
+        * uploads landed LATE — the reservation window shrank: first the
+          per-flush DVFS machinery runs the edge FASTER into what is left
+          (:func:`~repro.core.timeline.respeed_edge_dvfs`); when even
+          f_e,max cannot close the gap, a BOUNDED re-plan
+          (``channel_replan_limit``) re-solves the batch at the observed
+          rates — the planner may drop members to local or move the
+          partition — and the result is realized again.  Residual misses
+          are counted in ``realized_late``.
+        """
+        ch = self.channel
+        if ch is None or not s.offload.any():
+            return s
+        off = s.offload
+        comp, nbytes, solo, keys = self._upload_geometry(s, idx, now)
+        planned_fin = comp + nbytes / sub.rate[off]
+        real_fin, session = ch.realize(solo, comp, nbytes, keys=keys)
+        self._flush_session = session
+        up_plan = float(planned_fin.max())
+        up_real = float(real_fin.max())
+        self._flush_upload = (up_plan, up_real)
+        err = abs(up_real - up_plan)
+        self.upload_error += err
+        tf_abs = now + self._slot_tf      # the residual the plan was given
+        g_plan = now + s.gpu_start
+        g_real = max(tf_abs, up_real)
+        deadline = min(a.abs_deadline
+                       for a, o in zip(arrivals, s.offload) if o)
+        limit = min(deadline, self._slot_limit)
+        if g_real > g_plan and now + (g_real - now) + s.gpu_busy > \
+                limit + 1e-9:
+            window = limit - g_real
+            f_need = (s.edge_phi / window if window > 0 else np.inf)
+            if (f_need > self.edge.f_max * (1 + 1e-9)
+                    and depth < self.channel_replan_limit):
+                # even flat-out the edge cannot close the gap: re-plan at
+                # the observed per-user rates (bounded) — the planner may
+                # move the partition or drop members to local computing
+                ch.retract(session)
+                self._flush_session = None
+                self._flush_upload = None
+                if self._slot_saved > 0.0:
+                    # the pre-actualization stretch never materializes
+                    self.timeline.dvfs_rescales -= 1
+                    self.timeline.dvfs_energy_saved -= self._slot_saved
+                    self._slot_saved = 0.0
+                self._slot_stretch_orig = None
+                if np.isfinite(self._slot_limit):
+                    # a gap-filled slot that diverged this badly falls
+                    # back to the serialized tail: re-validating the
+                    # shrunken window is not worth risking a re-plan
+                    # whose end overlaps the reservation behind the gap
+                    self._slot_tf = self.timeline.t_free(now)
+                    self._slot_limit = np.inf
+                    self.timeline.gap_fills -= 1
+                rates_obs = np.array(sub.rate, np.float64)
+                rates_obs[off] = nbytes / np.maximum(real_fin - comp, 1e-12)
+                sub2 = dataclasses.replace(sub, rate=rates_obs)
+                self.channel_replans += 1
+                self._flush_rates = rates_obs
+                s2 = self._plan(sub2, self._slot_tf)
+                return self._actualize(now, arrivals, idx, sub2, s2,
+                                       depth + 1)
+        # ---- terminal: reconcile the committed plan with what happened --
+        if err > 1e-12 and abs(g_real - g_plan) > 1e-12:
+            shifted = dataclasses.replace(
+                s, t_free_end=(g_real - now) + s.gpu_busy)
+            if g_real > g_plan and now + shifted.t_free_end > limit + 1e-9:
+                # late uploads shrank the window: run the edge faster
+                # (clipped at f_e,max — the residue is a realized miss)
+                shifted, extra = respeed_edge_dvfs(shifted,
+                                                   window=limit - g_real,
+                                                   f_max=self.edge.f_max)
+                if extra > 0.0 and self._slot_saved > 0.0:
+                    # the speed-up eats into the per-flush stretch this
+                    # same flush was credited with — the reports must not
+                    # claim a saving the channel took back
+                    undo = min(extra, self._slot_saved)
+                    self._slot_saved -= undo
+                    self.timeline.dvfs_energy_saved -= undo
+                    if self._slot_saved <= 0.0:
+                        self.timeline.dvfs_rescales -= 1
+                        self._slot_stretch_orig = None
+            s = shifted
+        # Eq. 4 actualization: the radio is on for the REALIZED upload,
+        # so each offloader's uplink energy is (finish − start)·p_u — the
+        # plan priced it at the snapshot rate.  Sub-ppb deltas are pure
+        # float reassociation noise ((start + d) − start ≠ d in FP), not
+        # channel divergence: zeroing them keeps the static channel (and
+        # every realized-as-planned upload) bit-identical to the seed
+        # accounting.  This is the term that makes nominal-rate planning
+        # pay for its optimism on a contended medium.
+        dur_plan = nbytes / sub.rate[off]
+        diff = real_fin - comp - dur_plan
+        diff = np.where(np.abs(diff) <= 1e-9 * np.maximum(dur_plan, 1e-12),
+                        0.0, diff)
+        d_up = diff * sub.p_up[off]
+        d_sum = float(d_up.sum())
+        if d_up.any():
+            peu = np.array(s.per_user_energy, np.float64)
+            peu[off] = peu[off] + d_up
+            s = dataclasses.replace(
+                s, per_user_energy=peu, energy=s.energy + d_sum,
+                terms={**s.terms,
+                       "uplink": s.terms.get("uplink", 0.0) + d_sum})
+        if self._slot_stretch_orig is not None:
+            # keep the un-stretch snapshot coherent with the realized
+            # channel: same upload realization (membership and device
+            # frequencies are identical pre/post stretch), so the same
+            # shift and Eq. 4 delta apply to it
+            o = self._slot_stretch_orig
+            if err > 1e-12 and abs(g_real - g_plan) > 1e-12:
+                o = dataclasses.replace(
+                    o, t_free_end=(g_real - now) + o.gpu_busy)
+            if d_up.any():
+                peu_o = np.array(o.per_user_energy, np.float64)
+                peu_o[off] = peu_o[off] + d_up
+                o = dataclasses.replace(
+                    o, per_user_energy=peu_o, energy=o.energy + d_sum,
+                    terms={**o.terms,
+                           "uplink": o.terms.get("uplink", 0.0) + d_sum})
+            self._slot_stretch_orig = o
+        # realized misses: only when the channel genuinely diverged (a
+        # non-diverged plan's end is the planner's own feasible one — the
+        # float32 grid must not trip a float64 re-check), and never for
+        # requests the flush already counted late (past their point of no
+        # return — one miss, one violation)
+        if err > 1e-12:
+            end = now + s.t_free_end
+            if end > deadline + 1e-9:
+                self.realized_late += sum(
+                    1 for a, o in zip(arrivals, s.offload)
+                    if o and end > a.abs_deadline + 1e-9
+                    and (a.abs_deadline - now
+                         >= self._l_min[a.user] - 1e-12))
+        return s
 
     # ---- event processing ----------------------------------------------
     def _fire_timers(self, upto: float) -> None:
         while self._timers and self._timers[0][0] <= upto:
             t, _, ev = heapq.heappop(self._timers)
+            if isinstance(ev, UploadEvent):
+                if ev.flush.upload_actual != t:
+                    continue        # flush re-planned away: stale timer
+                if self.on_upload is not None:
+                    self.on_upload(ev)
+                continue
             if ev.flush.gpu_free != t:
                 continue            # booking re-planned away: stale timer
             if self.on_gpu_free is not None:
@@ -379,7 +684,21 @@ class OnlineScheduler:
         late = int(np.sum(rel < self._l_min[idx] - 1e-12))
         self.violations += late
         sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
+        self._flush_upload = None
+        self._flush_session = None
+        self._flush_rates = None
+        if (self.channel is not None and not self.channel.static
+                and self.channel_aware):
+            # plan against the channel's contended-rate snapshot: the
+            # batch's members plus every upload already in flight assumed
+            # concurrent (the jitted grid is unchanged — rates were
+            # already a per-user input array)
+            eff = self.channel.effective_rates(
+                sub.rate, now, keys=[(self.tenant_id, int(u)) for u in idx])
+            sub = dataclasses.replace(sub, rate=eff)
+            self._flush_rates = eff
         s = self._post_plan(now, q, self._plan_slot(now, sub, q))
+        s = self._actualize(now, q, idx, sub, s)
         # np.add.at, not fancy-index +=: a user may appear twice in a batch
         np.add.at(self.per_user_energy, idx, s.per_user_energy)
         if s.offload.any():
@@ -388,7 +707,15 @@ class OnlineScheduler:
                       s.terms["edge"] / s.offload.sum())
         gpu_free = self._book(now, s)
         ev = FlushEvent(now, q, idx, s, gpu_free, late,
-                        seq=len(self._batches))
+                        seq=len(self._batches),
+                        plan_rates=self._flush_rates,
+                        upload_session=self._flush_session)
+        if self._flush_upload is not None:
+            ev.upload_planned, ev.upload_actual = self._flush_upload
+            heapq.heappush(self._timers,
+                           (ev.upload_actual, next(self._seq),
+                            UploadEvent(ev.upload_actual, ev,
+                                        ev.upload_planned)))
         self._batches.append(int(s.offload.sum()))
         self._flush_times.append(now)
         self._f_edges.append(float(s.f_edge) if s.offload.any() else None)
@@ -446,6 +773,7 @@ class OnlineScheduler:
         if 0 <= ev.seq < len(self._f_edges):
             self._f_edges[ev.seq] = (float(s.f_edge) if s.offload.any()
                                      else None)
+        self._rerealize_uploads(ev)
         # the old timer (if any) went stale via ev.gpu_free; re-arm unless
         # a still-valid timer already sits on the identical instant
         if s.offload.any() and not (old.offload.any()
@@ -456,6 +784,34 @@ class OnlineScheduler:
         if self.on_replan is not None:
             self.on_replan(ev)
         return s
+
+    def _rerealize_uploads(self, ev: FlushEvent) -> None:
+        """A re-planned batch's uploads replace its old ones on the
+        channel's books (span bookkeeping only — divergence reconciliation
+        is bounded to the primary flush's actualization pass)."""
+        if self.channel is None:
+            return
+        self.channel.retract(ev.upload_session)
+        ev.upload_session = None
+        old_actual = ev.upload_actual
+        s = ev.schedule
+        if not s.offload.any():
+            ev.upload_planned = ev.upload_actual = float("nan")
+            return
+        off = s.offload
+        comp, nbytes, solo, keys = self._upload_geometry(s, ev.users,
+                                                         ev.time)
+        rates = (ev.plan_rates if ev.plan_rates is not None
+                 else self.fleet.rate[ev.users])[off]
+        real_fin, ev.upload_session = self.channel.realize(
+            solo, comp, nbytes, keys=keys)
+        ev.upload_planned = float((comp + nbytes / rates).max())
+        ev.upload_actual = float(real_fin.max())
+        if ev.upload_actual != old_actual:
+            heapq.heappush(self._timers,
+                           (ev.upload_actual, next(self._seq),
+                            UploadEvent(ev.upload_actual, ev,
+                                        ev.upload_planned)))
 
     def next_event_time(self) -> float | None:
         """Absolute time of this scheduler's next event (arrival enqueue
@@ -503,7 +859,11 @@ class OnlineScheduler:
         return OnlineResult(float(self.per_user_energy.sum()),
                             len(self._batches), list(self._batches),
                             self.violations, self.per_user_energy.copy(),
-                            list(self._flush_times), list(self._f_edges))
+                            list(self._flush_times), list(self._f_edges),
+                            upload_error=self.upload_error,
+                            channel_replans=self.channel_replans,
+                            realized_late=self.realized_late,
+                            pruned_probes=self.probe_prunes)
 
 
 def simulate_online(arrivals: list[OnlineArrival],
@@ -513,19 +873,22 @@ def simulate_online(arrivals: list[OnlineArrival],
                     rho: float = 0.03e9,
                     inner: Callable = jdob_plus,
                     service: PlannerService | None = None,
-                    occupancy: str = "serialized") -> OnlineResult:
+                    occupancy: str = "serialized",
+                    channel: ChannelModel | None = None,
+                    channel_aware: bool = True) -> OnlineResult:
     """One-shot simulation: submit a whole trace, run to completion.  A
     thin driver over :class:`OnlineScheduler`; under serialized occupancy
-    (the default) bit-identical to :func:`simulate_online_reference` for
-    every policy on traces with at most one arrival per user per flush.
-    (With duplicate users inside ONE flush the scheduler's accounting is
-    the correct one — ``np.add.at`` accumulates both requests' energies
-    where the seed loop's fancy-index ``+=`` silently dropped
-    duplicates.)"""
+    (the default) with a static channel, bit-identical to
+    :func:`simulate_online_reference` for every policy on traces with at
+    most one arrival per user per flush.  (With duplicate users inside ONE
+    flush the scheduler's accounting is the correct one — ``np.add.at``
+    accumulates both requests' energies where the seed loop's fancy-index
+    ``+=`` silently dropped duplicates.)"""
     sched = OnlineScheduler(profile, fleet, edge, policy=policy,
                             window=window, keep_frac=keep_frac, rho=rho,
                             inner=inner, service=service,
-                            occupancy=occupancy)
+                            occupancy=occupancy, channel=channel,
+                            channel_aware=channel_aware)
     sched.submit_many(sorted(arrivals, key=lambda a: a.arrival))
     return sched.run()
 

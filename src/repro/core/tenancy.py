@@ -43,7 +43,11 @@ one GPU through a single occupancy timeline:
 All tenants share ONE :class:`~repro.core.planner_service.PlannerService`
 compile cache (`PlannerService.for_profile` derives a sibling service per
 task profile), so XLA executables amortize across models whose batch
-shapes coincide.
+shapes coincide — and, when a :mod:`~repro.core.channel` model is given,
+ONE shared uplink: every tenant's devices contend on the same medium
+(flush plans price the contended snapshot, realized uploads contend
+cross-tenant) and the admission bound uses the contended rate, exactly as
+GPU occupancy serializes globally.
 
 With a single tenant the arbiter is bit-identical to a lone
 :class:`OnlineScheduler` — the parity test mirrors the repo's
@@ -57,6 +61,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .baselines import jdob_plus
+from .channel import ChannelModel
 from .cost_models import DeviceFleet, EdgeProfile
 from .online import FlushEvent, OnlineArrival, OnlineResult, OnlineScheduler
 from .planner_service import PlannerService
@@ -124,6 +129,8 @@ class _TenantScheduler(OnlineScheduler):
                          inner=tenant.inner, service=service,
                          history=history, occupancy=arbiter.occupancy,
                          timeline=arbiter.timeline,
+                         channel=arbiter.channel,
+                         channel_aware=arbiter.channel_aware,
                          dvfs_slack_frac=arbiter.dvfs_slack_frac,
                          dvfs_quiescent=arbiter.dvfs_quiescent)
         self.arbiter = arbiter
@@ -266,6 +273,16 @@ class MultiTenantResult:
     dvfs_energy_saved: float = 0.0   # J recovered by those stretches
     replan_trial_hits: int = 0       # victim re-plans served from the
     replan_trial_misses: int = 0     # what-if cache vs re-solved
+    #: channel observability (zero without a channel / with the static
+    #: one): Σ|realized − planned| upload completion across tenants (s),
+    #: bounded actualization re-plans, and requests whose REALIZED batch
+    #: end slipped past their deadline
+    channel: str = "static"
+    upload_error: float = 0.0
+    channel_replans: int = 0
+    realized_late: int = 0
+    pruned_probes: int = 0           # gap probes skipped (follow-up (b))
+    unstretches: int = 0             # quiescent stretches rolled back (a)
 
     @property
     def energy(self) -> float:
@@ -275,8 +292,11 @@ class MultiTenantResult:
     @property
     def violations(self) -> int:
         """Deadline misses: scheduler-counted late requests, plus degraded
-        requests (served, but past any feasible slot) and rejections."""
+        requests (served, but past any feasible slot), rejections, and
+        offloads whose REALIZED completion slipped past the deadline
+        (channel divergence — zero on a static channel)."""
         return sum(t.result.violations + t.degraded + t.rejected
+                   + t.result.realized_late
                    for t in self.tenants)
 
     @property
@@ -287,15 +307,20 @@ class MultiTenantResult:
 
 def min_offload_completion(profile: TaskProfile, fleet: DeviceFleet,
                            user: int, edge: EdgeProfile,
-                           t_free: float = 0.0) -> float:
+                           t_free: float = 0.0,
+                           rate: float | None = None) -> float:
     """Optimistic earliest completion (s, relative to now) of a SOLO
     offload of ``user`` behind ``t_free`` seconds of residual occupancy:
     ``min over ñ < N of  max(t_free, γ_ñ) + φ_ñ(1)/f_e,max``.  Batching,
     device DVFS below f_max and edge DVFS below f_e,max are all slower, so
-    a request this bound cannot fit has NO feasible offload slot."""
+    a request this bound cannot fit has NO feasible offload slot.
+    ``rate`` overrides the fleet's solo uplink view — admission on a
+    contended channel must price the CONTENDED rate, or the bound admits
+    requests whose only hope was an uncontended medium."""
     base, slope = edge.phi_coeffs(profile)
     phi1 = (base + slope) / edge.f_max                       # (N+1,) s
-    gamma = (profile.O / fleet.rate[user]
+    r = float(fleet.rate[user]) if rate is None else float(rate)
+    gamma = (profile.O / r
              + fleet.zeta[user] * profile.v() / fleet.f_max[user])
     return float(np.min(np.maximum(t_free, gamma[:-1]) + phi1[:-1]))
 
@@ -319,6 +344,8 @@ class MultiTenantScheduler:
                  service: PlannerService | None = None,
                  preemption: bool = True, admission: str = "admit",
                  history: int | None = None, occupancy: str = "serialized",
+                 channel: ChannelModel | None = None,
+                 channel_aware: bool = True,
                  dvfs_slack_frac: float = 0.0, dvfs_quiescent: bool = True,
                  on_flush=None, on_replan=None, on_gpu_free=None,
                  on_degrade=None):
@@ -332,6 +359,14 @@ class MultiTenantScheduler:
         self.preemption = preemption
         self.admission = admission
         self.occupancy = occupancy
+        #: ONE uplink shared by every tenant's devices — the arbiter
+        #: arbitrates it exactly as it arbitrates the GPU: flush plans
+        #: price the contended snapshot, realized uploads contend across
+        #: tenants, and admission's optimistic bound uses the contended
+        #: rate.  ``None`` keeps the per-fleet static scalars (bit-
+        #: identical to the pre-channel path).
+        self.channel = channel
+        self.channel_aware = channel_aware
         self.dvfs_slack_frac = dvfs_slack_frac
         self.dvfs_quiescent = dvfs_quiescent
         self.timeline = GpuTimeline(mode=occupancy)
@@ -396,8 +431,17 @@ class MultiTenantScheduler:
         l_min = float(self.schedulers[tid]._l_min[arrival.user])
         if budget >= l_min - 1e-12:
             return False
+        rate = None
+        ch = self.schedulers[tid].channel
+        if ch is not None and not ch.static:
+            # the contended-rate snapshot: a solo offload on a loaded
+            # uplink cannot ride the clear-channel Shannon rate
+            rate = float(ch.effective_rates(
+                np.asarray([t.fleet.rate[arrival.user]]), now,
+                keys=[(tid, int(arrival.user))])[0])
         best = min_offload_completion(t.profile, t.fleet, arrival.user,
-                                      t.edge, self._occupancy_at(now, tid))
+                                      t.edge, self._occupancy_at(now, tid),
+                                      rate=rate)
         return best > budget
 
     def _fallback(self, tid: int, arrival: OnlineArrival,
@@ -448,8 +492,19 @@ class MultiTenantScheduler:
                 f"cannot rewind — submit arrivals in causal order")
         if self.admission != "admit" and self._no_feasible_slot(tid,
                                                                 arrival):
+            # note: NO un-stretch sweep on this path — a rejected/degraded
+            # arrival never enters any queue, so nothing will plan behind
+            # the stretched reservations and the stretch stays valid
             self._fallback(tid, arrival)
             return False
+        # quiescence is global on a shared GPU, so a quiescent-tail DVFS
+        # stretch of ANY tenant's reservation is invalidated by traffic
+        # actually ENTERING any queue — sweep the other tenants (the
+        # target tenant's own submit() runs its sweep itself;
+        # follow-up (a))
+        for sch in self.schedulers:
+            if sch.tid != tid:
+                sch._unstretch_tail(arrival.arrival)
         self.schedulers[tid].submit(arrival)
         self.admitted[tid] += 1
         return True
@@ -583,7 +638,15 @@ class MultiTenantScheduler:
             dvfs_rescales=self.timeline.dvfs_rescales,
             dvfs_energy_saved=self.timeline.dvfs_energy_saved,
             replan_trial_hits=self.replan_trial_hits,
-            replan_trial_misses=self.replan_trial_misses)
+            replan_trial_misses=self.replan_trial_misses,
+            channel=(self.channel.name if self.channel is not None
+                     else "static"),
+            upload_error=sum(s.upload_error for s in self.schedulers),
+            channel_replans=sum(s.channel_replans
+                                for s in self.schedulers),
+            realized_late=sum(s.realized_late for s in self.schedulers),
+            pruned_probes=sum(s.probe_prunes for s in self.schedulers),
+            unstretches=self.timeline.unstretches)
 
 
 def naive_fifo(tenants: Sequence[Tenant],

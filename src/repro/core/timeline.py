@@ -94,6 +94,18 @@ class Reservation:
     #: reservation with — rolled back if the reservation is preempted
     #: (the re-planned schedule is a fresh solve, not a stretched one)
     dvfs_saved: float = 0.0
+    #: planned-vs-actual upload span (absolute s): when the batch's LAST
+    #: boundary activation was planned to land (Eqs. 3-4 at the rates the
+    #: plan priced) vs when the channel realized it — ``gpu_start`` is
+    #: derived from the actual one, and the divergence drives the online
+    #: scheduler's actualization pass.  NaN without a channel.
+    upload_planned: float = math.nan
+    upload_actual: float = math.nan
+    #: the pre-stretch schedule of a QUIESCENT-tail DVFS stretch (None
+    #: otherwise) — kept so ``submit()`` can restore a not-yet-started
+    #: stretched reservation to its unstretched f_e the moment new
+    #: traffic arrives (ROADMAP timeline follow-up (a))
+    stretched_from: object = None
 
     @property
     def busy(self) -> float:
@@ -152,6 +164,9 @@ class GpuTimeline:
         self.gap_fills = 0
         self.dvfs_rescales = 0
         self.dvfs_energy_saved = 0.0
+        #: quiescent-tail stretches rolled back because traffic arrived
+        #: before the stretched reservation started (follow-up (a))
+        self.unstretches = 0
 
     # ---- ledger-compatible surface (serialized semantics) ---------------
     @property
@@ -169,11 +184,16 @@ class GpuTimeline:
         ends = [r.end for r in self.reservations if r not in exclude]
         return max(max(ends, default=0.0) - now, 0.0)
 
-    def book(self, tenant: int, ev, dvfs_saved: float = 0.0
-             ) -> Reservation:
+    def book(self, tenant: int, ev, dvfs_saved: float = 0.0,
+             stretched_from=None, upload_planned: float = math.nan,
+             upload_actual: float = math.nan) -> Reservation:
         """Register a flushed batch's occupancy (``ev.gpu_free`` is its
         Eq. 22 end; the schedule's geometry, when present, pins the true
-        ``gpu_start``).  Past reservations (already free) are pruned."""
+        ``gpu_start``).  Past reservations (already free) are pruned.
+        ``upload_planned``/``upload_actual`` record the channel's
+        planned-vs-realized upload span; ``stretched_from`` snapshots the
+        pre-stretch schedule of a quiescent-tail DVFS stretch so
+        :meth:`unstretch` can roll it back."""
         s = ev.schedule
         busy = float(getattr(s, "gpu_busy", 0.0) or 0.0)
         end = ev.gpu_free
@@ -200,6 +220,9 @@ class GpuTimeline:
             f_edge=float(getattr(s, "f_edge", math.nan)),
             deadline=deadline, flush=ev, prune_before=ev.time)
         r.dvfs_saved = dvfs_saved
+        r.stretched_from = stretched_from
+        r.upload_planned = upload_planned
+        r.upload_actual = upload_actual
         return r
 
     def reserve(self, tenant: int, start: float, end: float, *,
@@ -247,6 +270,26 @@ class GpuTimeline:
             if r.dvfs_saved > 0.0:
                 self.dvfs_rescales -= 1
                 self.dvfs_energy_saved -= r.dvfs_saved
+
+    def unstretch(self, r: Reservation, *, end: float, f_edge: float
+                  ) -> None:
+        """Roll back a quiescent-tail DVFS stretch in place: restore the
+        reservation's unstretched geometry (same ``gpu_start``, earlier
+        ``end``, the planned ``f_edge``) and the stretch's energy credit.
+        The owning scheduler swaps the flush's accounting separately
+        (``replan_flush(schedule=<pre-stretch>)``) — together they make a
+        request submitted right after a quiescent stretch plan against
+        the horizon it would have seen had the stretch never fired
+        (ROADMAP timeline follow-up (a))."""
+        r.end = end
+        r.f_edge = f_edge
+        if r.dvfs_saved > 0.0:
+            self.dvfs_rescales -= 1
+            self.dvfs_energy_saved -= r.dvfs_saved
+            r.dvfs_saved = 0.0
+        r.stretched_from = None
+        self.horizon = max((x.end for x in self.reservations), default=0.0)
+        self.unstretches += 1
 
     # ---- interleaved occupancy shape -----------------------------------
     def gaps(self, now: float) -> list[tuple[float, float]]:
@@ -313,3 +356,32 @@ def rescale_edge_dvfs(schedule, *, window: float, f_min: float):
         energy=schedule.energy - saved,
         terms={**schedule.terms, "edge": edge_new})
     return rescaled, saved
+
+
+def respeed_edge_dvfs(schedule, *, window: float, f_max: float):
+    """The actualization counterpart of :func:`rescale_edge_dvfs`: realized
+    uploads landed LATE, the window from the actual GPU start to the
+    reservation's bound shrank, and the devices are long committed — so
+    the only lever left is running the edge FASTER.  Returns
+    ``(schedule, extra_energy)`` with f_e raised to the slowest frequency
+    that still ends inside ``window`` (clipped at ``f_max``; the batch may
+    still miss when even f_max cannot close the gap — the caller counts
+    that as a realized violation).  Keeps the GPU start bit-identical
+    (``t_free_end − gpu_busy`` invariant), mirroring the rescale."""
+    if schedule.edge_phi <= 0.0 or not schedule.offload.any():
+        return schedule, 0.0
+    if not window > 0.0:                      # hopeless (or nan) window
+        window = schedule.edge_phi / f_max    # best effort: flat out
+    f_new = min(max(schedule.edge_phi / window, schedule.f_edge), f_max)
+    if f_new <= schedule.f_edge:
+        return schedule, 0.0
+    edge_new = schedule.edge_psi * f_new ** 2
+    extra = edge_new - schedule.terms["edge"]
+    busy = schedule.gpu_busy
+    new_busy = schedule.edge_phi / f_new
+    sped = dataclasses.replace(
+        schedule, f_edge=f_new, gpu_busy=new_busy,
+        t_free_end=schedule.t_free_end - busy + new_busy,
+        energy=schedule.energy + extra,
+        terms={**schedule.terms, "edge": edge_new})
+    return sped, extra

@@ -7,10 +7,27 @@ whichever class the installed JAX exposes; when neither exists (or the
 installed signature rejects our kwargs) it returns ``None``, which
 ``pl.pallas_call`` accepts — correct in interpret mode, where the
 ``dimension_semantics`` hint is advisory anyway.
+
+Dropping the hint silently on a COMPILED path would regress performance
+with no correctness signal (ROADMAP TPU-path item (b)), so every fallback
+that loses ``dimension_semantics`` emits a one-time ``RuntimeWarning``
+naming what was dropped and why.
 """
 from __future__ import annotations
 
+import warnings
+
 from jax.experimental.pallas import tpu as pltpu
+
+#: one-time warning keys already emitted (process-wide)
+_WARNED: set[str] = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
 def tpu_compiler_params(*, dimension_semantics: tuple[str, ...] | None = None,
@@ -18,14 +35,41 @@ def tpu_compiler_params(*, dimension_semantics: tuple[str, ...] | None = None,
     """Build the TPU compiler-params object for ``pl.pallas_call``.
 
     Tries ``pltpu.CompilerParams`` (JAX ≥ 0.5 naming), then
-    ``pltpu.TPUCompilerParams`` (JAX ≤ 0.4.x), then gives up and returns
-    ``None`` so the call site still works in interpret mode.
+    ``pltpu.TPUCompilerParams`` (JAX ≤ 0.4.x).  When the resolved class
+    cannot honor ``dimension_semantics`` (or no class exists at all), the
+    hint is dropped with a one-time warning — the call site still works in
+    interpret mode, but compiled-mode performance would silently regress
+    otherwise, which is exactly the signal the warning restores.
     """
     cls = (getattr(pltpu, "CompilerParams", None)
            or getattr(pltpu, "TPUCompilerParams", None))
     if cls is None:
+        if dimension_semantics is not None:
+            _warn_once(
+                "no-compiler-params",
+                "pallas TPU compat: this JAX exposes neither "
+                "pltpu.CompilerParams nor pltpu.TPUCompilerParams — the "
+                "dimension_semantics hint is dropped (harmless in "
+                "interpret mode; compiled-mode perf may regress)")
         return None
     try:
         return cls(dimension_semantics=dimension_semantics, **kwargs)
     except TypeError:
+        pass
+    if dimension_semantics is not None:
+        _warn_once(
+            f"no-dimension-semantics:{cls.__name__}",
+            f"pallas TPU compat: {cls.__name__} does not accept "
+            f"dimension_semantics={dimension_semantics!r} — the hint is "
+            f"dropped (harmless in interpret mode; compiled-mode perf may "
+            f"regress)")
+    try:
+        # keep whatever kwargs the installed signature still honors
+        return cls(**kwargs)
+    except TypeError:
+        if kwargs:
+            _warn_once(
+                f"no-kwargs:{cls.__name__}",
+                f"pallas TPU compat: {cls.__name__} rejected "
+                f"{sorted(kwargs)} — falling back to no compiler params")
         return None

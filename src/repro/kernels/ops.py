@@ -26,7 +26,10 @@ def default_interpret() -> bool:
     sets it explicitly so the compiled-path plumbing (``compat.
     tpu_compiler_params`` and the ``dimension_semantics`` hints) is at
     least exercised deterministically in interpret mode until real-TPU
-    validation lands (see ROADMAP)."""
+    validation lands (see ROADMAP).  When the resolved compiler-params
+    class cannot honor ``dimension_semantics``, ``compat`` now emits a
+    one-time ``RuntimeWarning`` instead of silently dropping the hint —
+    compiled-mode perf regressions get a signal."""
     env = os.environ.get("JAX_PALLAS_INTERPRET", "").strip().lower()
     if env:                      # empty/unset falls through to the default
         return env not in ("0", "false", "no")

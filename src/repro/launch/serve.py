@@ -22,6 +22,11 @@ each tenant's flushes executing on its own model:
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --users 4 \\
       --tenants 3 --rate 200 --admission degrade
+
+``--channel {static,shared,trace}`` picks the uplink model (shared-medium
+contention / Markov fading; ``--channel-nominal`` plans at solo rates on a
+contended channel — the bench baseline); the report then includes the
+realized-vs-planned upload error and actualization replan counts.
 """
 from __future__ import annotations
 
@@ -32,11 +37,19 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import (local_computing, make_edge_profile, make_fleet,
-                        profile_from_arch)
+from repro.core import (local_computing, make_channel, make_edge_profile,
+                        make_fleet, profile_from_arch)
 from repro.models import init_params
 from repro.serving import (CoInferenceServer, MultiTenantServer, Request,
                            TenantModel)
+
+
+def _build_channel(args):
+    """The uplink model behind ``--channel`` (None = seed-path static)."""
+    if args.channel == "static":
+        return None
+    return make_channel(args.channel, share=args.channel_share,
+                        seed=args.seed)
 
 
 def _verify(report_logits, executor, reqs) -> float:
@@ -70,7 +83,9 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
     t0 = time.perf_counter()
     report = server.serve_online(reqs, policy=args.policy,
                                  window=args.window,
-                                 occupancy=args.occupancy)
+                                 occupancy=args.occupancy,
+                                 channel=_build_channel(args),
+                                 channel_aware=not args.channel_nominal)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
@@ -91,7 +106,13 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
     if args.occupancy == "interleaved":
         print(f"timeline: {report.gap_fills} gap-fill(s), "
               f"{report.dvfs_rescales} per-flush DVFS rescale(s) saving "
-              f"{report.dvfs_energy_saved:.4f} J")
+              f"{report.dvfs_energy_saved:.4f} J, "
+              f"{report.pruned_probes} gap probe(s) pruned")
+    if report.channel != "static":
+        print(f"channel={report.channel}: realized-vs-planned upload error "
+              f"Σ|Δ| = {report.upload_error * 1e3:.2f} ms, "
+              f"{report.channel_replans} actualization replan(s), "
+              f"{report.realized_late} realized-late request(s)")
     err = _verify(report.logits, server.executor, reqs)
     print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
     assert err < 1e-3
@@ -136,13 +157,15 @@ def _serve_tenants(args) -> dict:
 
     server = MultiTenantServer(models, preemption=not args.no_preemption,
                                admission=args.admission,
-                               occupancy=args.occupancy)
+                               occupancy=args.occupancy,
+                               channel=_build_channel(args),
+                               channel_aware=not args.channel_nominal)
     t0 = time.perf_counter()
     report = server.serve_online(streams)
     serve_s = time.perf_counter() - t0
     print(f"arch={args.arch}  tenants={args.tenants}  M={args.users}/tenant  "
           f"policy={args.policy}  admission={args.admission}  "
-          f"occupancy={args.occupancy}  "
+          f"occupancy={args.occupancy}  channel={args.channel}  "
           f"(planned+served in {serve_s:.2f}s, shared-GPU arbitration)")
     max_err = 0.0
     for tid, (m, reqs, tr) in enumerate(zip(models, streams,
@@ -172,9 +195,16 @@ def _serve_tenants(args) -> dict:
         res = report.result
         print(f"timeline: {res.gap_fills} gap-fill(s), "
               f"{res.dvfs_rescales} per-flush DVFS rescale(s) saving "
-              f"{res.dvfs_energy_saved:.4f} J  "
+              f"{res.dvfs_energy_saved:.4f} J, "
+              f"{res.pruned_probes} gap probe(s) pruned  "
               f"(what-if trial reuse {res.replan_trial_hits}/"
               f"{res.replan_trial_hits + res.replan_trial_misses})")
+    if report.result.channel != "static":
+        res = report.result
+        print(f"channel={res.channel}: realized-vs-planned upload error "
+              f"Σ|Δ| = {res.upload_error * 1e3:.2f} ms, "
+              f"{res.channel_replans} actualization replan(s), "
+              f"{res.realized_late} realized-late request(s)")
     print(f"co-inference vs monolithic max |Δlogit| = {max_err:.2e} "
           f"(per tenant, served rows)")
     assert max_err < 1e-3
@@ -213,6 +243,20 @@ def main(argv=None) -> dict:
                          "scalar Eq. 22 horizon; interleaved = gap-fill "
                          "small batches into idle windows + per-flush "
                          "edge DVFS against reservation slack")
+    ap.add_argument("--channel", default="static",
+                    choices=["static", "shared", "trace"],
+                    help="uplink model: static = the paper's frozen "
+                         "Shannon scalars; shared = concurrent uploads "
+                         "split the medium; trace = Markov good/bad "
+                         "fading traces")
+    ap.add_argument("--channel-share", default="equal",
+                    choices=["equal", "weighted"],
+                    help="shared-uplink split: equal slots or "
+                         "bandwidth-weighted")
+    ap.add_argument("--channel-nominal", action="store_true",
+                    help="plan at the nominal solo rates even on a "
+                         "contended channel (the baseline the channel "
+                         "bench measures channel-aware planning against)")
     args = ap.parse_args(argv)
 
     if args.tenants > 1:
@@ -244,6 +288,11 @@ def main(argv=None) -> dict:
         # imply interleaved numbers
         print("NOTE: --occupancy interleaved applies to --online/--tenants "
               "serving; offline OG serving is serialized-only")
+    if args.channel != "static":
+        # the one-shot OG wave has no arrival process to contend over —
+        # realized channel divergence is an online phenomenon
+        print("NOTE: --channel applies to --online/--tenants serving; "
+              "offline OG serving prices the static solo rates")
     return _serve_offline(server, fleet, profile, edge, reqs, args)
 
 

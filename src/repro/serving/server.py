@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (DeviceFleet, EdgeProfile, FlushEvent,
+from repro.core import (ChannelModel, DeviceFleet, EdgeProfile, FlushEvent,
                         MultiTenantResult, MultiTenantScheduler,
                         OnlineArrival, OnlineResult, OnlineScheduler,
                         PlannerService, Schedule, TaskProfile, Tenant,
@@ -81,6 +81,14 @@ class OnlineServeReport:
     gap_fills: int = 0
     dvfs_rescales: int = 0
     dvfs_energy_saved: float = 0.0
+    #: channel observability (zero on the default static uplink):
+    #: Σ|realized − planned| upload completion (s), bounded actualization
+    #: re-plans, realized deadline slips, pruned gap probes
+    channel: str = "static"
+    upload_error: float = 0.0
+    channel_replans: int = 0
+    realized_late: int = 0
+    pruned_probes: int = 0
 
 
 def run_partitioned(executor: BlockwiseExecutor, vocab_size: int,
@@ -173,23 +181,33 @@ class CoInferenceServer:
 
     def scheduler(self, *, policy: str = "slack", window: float = 0.0,
                   keep_frac: float = 0.7, occupancy: str = "serialized",
+                  channel: ChannelModel | None = None,
+                  channel_aware: bool = True,
                   on_flush=None, on_gpu_free=None) -> OnlineScheduler:
         """An event-driven scheduler wired to this server's fleet and
         planner service (compiled shapes shared with ``serve``).
         ``occupancy`` picks the GPU timeline mode: ``"serialized"`` is the
         paper's scalar Eq. 22 horizon; ``"interleaved"`` gap-fills small
-        batches into idle windows and re-selects f_e per flush."""
+        batches into idle windows and re-selects f_e per flush.
+        ``channel`` attaches an uplink model (shared-medium contention /
+        fading traces — :mod:`repro.core.channel`); flush plans then price
+        the contended-rate snapshot (``channel_aware=False`` keeps the
+        nominal solo rates) and realized uploads drive the actual GPU
+        start."""
         return OnlineScheduler(self.profile, self.fleet, self.edge,
                                policy=policy, window=window,
                                keep_frac=keep_frac, rho=self.rho,
                                inner=self.inner, service=self.service,
-                               occupancy=occupancy,
+                               occupancy=occupancy, channel=channel,
+                               channel_aware=channel_aware,
                                on_flush=on_flush, on_gpu_free=on_gpu_free)
 
     def serve_online(self, requests: list[Request], *,
                      policy: str = "slack", window: float = 0.0,
                      keep_frac: float = 0.7,
-                     occupancy: str = "serialized") -> OnlineServeReport:
+                     occupancy: str = "serialized",
+                     channel: ChannelModel | None = None,
+                     channel_aware: bool = True) -> OnlineServeReport:
         """Serve requests arriving over time (``Request.arrival``).
 
         Each policy flush executes its planned batch on the model the
@@ -210,6 +228,7 @@ class CoInferenceServer:
 
         sched = self.scheduler(policy=policy, window=window,
                                keep_frac=keep_frac, occupancy=occupancy,
+                               channel=channel, channel_aware=channel_aware,
                                on_flush=execute)
         for row, r in enumerate(requests):
             sched.submit(OnlineArrival(r.user, r.arrival, r.deadline,
@@ -224,7 +243,14 @@ class CoInferenceServer:
                                  gap_fills=sched.timeline.gap_fills,
                                  dvfs_rescales=sched.timeline.dvfs_rescales,
                                  dvfs_energy_saved=(
-                                     sched.timeline.dvfs_energy_saved))
+                                     sched.timeline.dvfs_energy_saved),
+                                 channel=(sched.channel.name
+                                          if sched.channel is not None
+                                          else "static"),
+                                 upload_error=result.upload_error,
+                                 channel_replans=result.channel_replans,
+                                 realized_late=result.realized_late,
+                                 pruned_probes=result.pruned_probes)
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +312,9 @@ class MultiTenantServer:
                  rho: float = 0.03e9,
                  service: PlannerService | None = None,
                  preemption: bool = True, admission: str = "admit",
-                 occupancy: str = "serialized"):
+                 occupancy: str = "serialized",
+                 channel: ChannelModel | None = None,
+                 channel_aware: bool = True):
         assert len(models) >= 1
         self.models = list(models)
         self.executors = [BlockwiseExecutor(m.cfg, m.params)
@@ -298,6 +326,9 @@ class MultiTenantServer:
         self.preemption = preemption
         self.admission = admission
         self.occupancy = occupancy
+        #: ONE uplink every tenant's devices share (None = static scalars)
+        self.channel = channel
+        self.channel_aware = channel_aware
         self.service = (service if service is not None
                         else PlannerService(self.models[0].profile,
                                             self.models[0].edge, rho=rho))
@@ -335,6 +366,7 @@ class MultiTenantServer:
             [m.tenant() for m in self.models], rho=self.rho,
             service=self.service, preemption=self.preemption,
             admission=self.admission, occupancy=self.occupancy,
+            channel=self.channel, channel_aware=self.channel_aware,
             on_flush=execute, on_replan=execute, on_degrade=degrade)
         for tid, reqs in enumerate(requests):
             order = sorted(range(len(reqs)), key=lambda i: reqs[i].arrival)

@@ -1,0 +1,258 @@
+"""Wireless channel subsystem: StaticChannel end-to-end bit-parity with the
+pre-channel path (all four flush policies, single- and multi-tenant, OG
+offline), SharedUplink/TraceChannel unit semantics, and the contention
+properties (effective rates never exceed solo; realized gpu_start never
+precedes the solo upload completion)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (MultiTenantScheduler, OnlineArrival, OnlineScheduler,
+                        SharedUplink, StaticChannel, Tenant, TraceChannel,
+                        make_channel, make_edge_profile, make_fleet,
+                        markov_fading_gains, min_offload_completion,
+                        mobilenet_v2_profile, optimal_grouping,
+                        optimal_grouping_reference, poisson_arrivals,
+                        simulate_online, simulate_online_reference)
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+PROF2 = mobilenet_v2_profile(input_res=160)
+EDGE2 = make_edge_profile(PROF2)
+
+POLICIES = ("immediate", "window", "slack", "lastcall")
+
+
+def _setup(M=8, beta=20.0, rate=100.0, seed=0, **kw):
+    fleet = make_fleet(M, PROF, EDGE, beta=beta, seed=seed, **kw)
+    return fleet, poisson_arrivals(M, rate, fleet, seed=seed)
+
+
+def _assert_same_result(a, b):
+    assert a.energy == b.energy
+    assert a.n_flushes == b.n_flushes
+    assert a.batch_sizes == b.batch_sizes
+    assert a.violations == b.violations
+    assert a.flush_times == b.flush_times
+    assert a.f_edges == b.f_edges
+    np.testing.assert_array_equal(a.per_user_energy, b.per_user_energy)
+
+
+# ---------------------------------------------------------------------------
+# StaticChannel: bit-identical to the pre-channel path, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_static_channel_online_bit_identical(policy):
+    """The full channel machinery (snapshot, realize, actualize) runs with
+    a StaticChannel and reproduces the seed flush-loop simulator bit for
+    bit — realized uploads land exactly where Eqs. 3-4 predicted."""
+    fleet, arrivals = _setup()
+    ref = simulate_online_reference(arrivals, PROF, fleet, EDGE,
+                                    policy=policy, window=0.02)
+    r = simulate_online(arrivals, PROF, fleet, EDGE, policy=policy,
+                        window=0.02, channel=StaticChannel())
+    _assert_same_result(r, ref)
+    assert r.upload_error == 0.0
+    assert r.channel_replans == 0 and r.realized_late == 0
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_static_channel_fleet_attached_bit_identical(policy):
+    """A channel attached at fleet construction (`make_fleet(channel=)`)
+    is picked up by the scheduler and static semantics stay bit-exact."""
+    fleet, arrivals = _setup(seed=2, rate=300.0)
+    fleet_ch = dataclasses.replace(fleet, channel=StaticChannel())
+    ref = simulate_online_reference(arrivals, PROF, fleet, EDGE,
+                                    policy=policy, window=0.02)
+    sched = OnlineScheduler(PROF, fleet_ch, EDGE, policy=policy,
+                            window=0.02)
+    assert sched.channel is fleet_ch.channel
+    sched.submit_many(arrivals)
+    _assert_same_result(sched.run(), ref)
+    # the machinery DID run: upload spans recorded on every offload flush
+    offl = [ev for ev in sched.flushes if ev.schedule.offload.any()]
+    assert all(np.isfinite(ev.upload_actual) for ev in offl)
+    assert all(ev.upload_actual == ev.upload_planned for ev in offl)
+
+
+@pytest.mark.parametrize("policy", ("immediate", "slack"))
+def test_static_channel_multi_tenant_bit_identical(policy):
+    """Multi-tenant arbitration over an explicit shared StaticChannel
+    equals the channel-less arbiter bit for bit (admission, preemption and
+    the contended-rate bound all collapse to the solo view)."""
+    tenants, traces = [], []
+    for k, (prof, edge) in enumerate(((PROF, EDGE), (PROF2, EDGE2))):
+        fleet = make_fleet(6, prof, edge, beta=(6.0, 18.0), seed=k)
+        tenants.append(Tenant(prof, fleet, edge, name=f"t{k}",
+                              policy=policy, window=0.02))
+        traces.append(poisson_arrivals(6, 400.0, fleet, seed=100 + k))
+    results = {}
+    for ch in (None, StaticChannel()):
+        mts = MultiTenantScheduler(tenants, preemption=True,
+                                   admission="degrade", channel=ch)
+        mts.submit_traces([list(tr) for tr in traces])
+        results[ch is None] = mts.run()
+    plain, static = results[True], results[False]
+    assert static.energy == plain.energy
+    assert static.violations == plain.violations
+    assert static.upload_error == 0.0 and static.realized_late == 0
+    for a, b in zip(static.tenants, plain.tenants):
+        _assert_same_result(a.result, b.result)
+        assert (a.admitted, a.degraded, a.rejected) == \
+               (b.admitted, b.degraded, b.rejected)
+
+
+def test_static_channel_og_offline_bit_identical():
+    """The OG outer DP consumes the fleet's solo rate view — a static
+    channel attached to the fleet changes nothing, bit for bit."""
+    fleet, _ = _setup(M=6, beta=(4.0, 18.0), seed=5)
+    fleet_ch = dataclasses.replace(fleet, channel=StaticChannel())
+    plain = optimal_grouping(PROF, fleet, EDGE)
+    with_ch = optimal_grouping(PROF, fleet_ch, EDGE)
+    ref = optimal_grouping_reference(PROF, fleet_ch, EDGE)
+    assert with_ch.energy == plain.energy == ref.energy
+    assert [list(g) for g in with_ch.groups] == \
+           [list(g) for g in plain.groups]
+    # subset/replace carry the channel through
+    assert fleet_ch.subset(np.arange(3)).channel is fleet_ch.channel
+
+
+# ---------------------------------------------------------------------------
+# SharedUplink semantics
+# ---------------------------------------------------------------------------
+
+def test_shared_uplink_effective_rates_split_the_medium():
+    ch = SharedUplink(share="equal")
+    solo = np.array([8e6, 8e6, 8e6, 8e6])
+    # four concurrent uploaders, empty channel: quarter rate each
+    np.testing.assert_allclose(ch.effective_rates(solo, 0.0), solo / 4)
+    # a lone uploader keeps its solo rate
+    np.testing.assert_allclose(ch.effective_rates(solo[:1], 0.0), solo[:1])
+    # weighted: shares proportional to solo rate
+    chw = SharedUplink(share="weighted")
+    solo_w = np.array([8e6, 4e6])
+    eff = chw.effective_rates(solo_w, 0.0)
+    np.testing.assert_allclose(eff, solo_w * (solo_w / solo_w.sum()))
+
+
+def test_shared_uplink_realize_two_concurrent_uploads():
+    """Two identical uploads starting together each get half the medium:
+    both finish at start + 2·N/R (vs N/R solo)."""
+    ch = SharedUplink()
+    solo = np.array([1e6, 1e6])
+    fin, sess = ch.realize(solo, np.zeros(2), 1e6)
+    np.testing.assert_allclose(fin, [2.0, 2.0])
+    # the spans stay on the books and contend with a later upload ...
+    fin2, _ = ch.realize(np.array([1e6]), np.array([1.0]), 0.5e6)
+    # ... which shares 3-ways during [1, 2], then runs solo
+    # bytes in [1,2] at 1/3 rate = 1/3 MB; remaining 1/6 MB solo
+    np.testing.assert_allclose(fin2, [2.0 + (0.5 - 1 / 3) / 1.0], rtol=1e-9)
+    # retract frees the medium
+    ch.retract(sess)
+    fin3, _ = ch.realize(np.array([1e6]), np.array([0.0]), 1e6)
+    assert fin3[0] < 2.0 + 1e-9
+
+
+def test_shared_uplink_staggered_uploads_free_their_share():
+    """An upload that completes releases its slot: the survivor speeds
+    back up to solo rate (piecewise progressive sharing)."""
+    ch = SharedUplink()
+    solo = np.array([1e6, 1e6])
+    fin, _ = ch.realize(solo, np.zeros(2), 0.5e6)
+    # both share until the pair finishes together at 1.0 s
+    np.testing.assert_allclose(fin, [1.0, 1.0])
+    ch.reset()
+    # staggered starts: u0 runs solo until u1 joins at t=0.5
+    fin, _ = ch.realize(solo, np.array([0.0, 0.5]), 0.75e6)
+    # u0 solo in [0, 0.5): 0.5 MB done; shares [0.5, 1.0): 0.25 MB more at
+    # 0.5 MB/s -> done at 1.0; u1 has 0.25 MB by then, last 0.5 MB solo
+    np.testing.assert_allclose(fin, [1.0, 1.5])
+
+
+# ---------------------------------------------------------------------------
+# TraceChannel semantics
+# ---------------------------------------------------------------------------
+
+def test_trace_channel_integrates_across_gain_switches():
+    # gain 1.0 on [0, 1), 0.25 from t >= 1
+    ch = TraceChannel(np.array([0.0, 1.0]), np.array([[1.0, 0.25]]))
+    solo = np.array([1e6])
+    np.testing.assert_allclose(ch.effective_rates(solo, 0.5), [1e6])
+    np.testing.assert_allclose(ch.effective_rates(solo, 1.5), [0.25e6])
+    # 0.75 MB from t=0.5: 0.5 MB lands by t=1, the rest at quarter rate
+    fin, _ = ch.realize(solo, np.array([0.5]), 0.75e6)
+    np.testing.assert_allclose(fin, [1.0 + 0.25 / 0.25], rtol=1e-9)
+
+
+def test_markov_fading_gains_shape_and_determinism():
+    t1, g1 = markov_fading_gains(4, horizon=1.0, dt=0.01, seed=7)
+    t2, g2 = markov_fading_gains(4, horizon=1.0, dt=0.01, seed=7)
+    np.testing.assert_array_equal(g1, g2)
+    assert g1.shape == (4, len(t1)) and t1[0] == 0.0
+    assert set(np.unique(g1)) <= {0.25, 1.0}
+    # both states visited somewhere (p_stay defaults leave the good state)
+    assert (g1 == 0.25).any() and (g1 == 1.0).any()
+    ch = make_channel("trace", seed=7)
+    assert isinstance(ch, TraceChannel)
+
+
+# ---------------------------------------------------------------------------
+# contended admission bound
+# ---------------------------------------------------------------------------
+
+def test_min_offload_completion_uses_contended_rate():
+    fleet, _ = _setup(M=2)
+    base = min_offload_completion(PROF, fleet, 0, EDGE)
+    contended = min_offload_completion(PROF, fleet, 0, EDGE,
+                                       rate=float(fleet.rate[0]) / 4)
+    assert contended >= base
+    assert min_offload_completion(PROF, fleet, 0, EDGE,
+                                  rate=float(fleet.rate[0])) == base
+
+
+# ---------------------------------------------------------------------------
+# properties: contention only ever slows uploads
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(M=st.integers(2, 9), rate=st.floats(50.0, 2000.0),
+       beta=st.floats(4.0, 40.0), seed=st.integers(0, 999),
+       share=st.sampled_from(["equal", "weighted"]),
+       aware=st.booleans())
+def test_property_shared_uplink_never_beats_solo(M, rate, beta, seed,
+                                                 share, aware):
+    """SharedUplink effective rates never exceed solo rates, and every
+    reservation's realized gpu_start never precedes the completion its
+    uploads would have had on a CLEAR channel (contention only slows) —
+    nor the occupancy the plan was given."""
+    fleet = make_fleet(M, PROF, EDGE, beta=beta, seed=seed)
+    arrivals = poisson_arrivals(M, rate, fleet, seed=seed)
+    ch = SharedUplink(share=share)
+    eff = ch.effective_rates(fleet.rate, 0.0)
+    assert np.all(eff <= fleet.rate + 1e-9)
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy="slack", channel=ch,
+                            channel_aware=aware)
+    sched.submit_many(arrivals)
+    r = sched.run()
+    assert r.energy == pytest.approx(float(r.per_user_energy.sum()))
+    v = PROF.v()
+    for ev in sched.flushes:
+        s = ev.schedule
+        if not s.offload.any():
+            continue
+        assert np.isfinite(ev.upload_actual)
+        # solo (clear-channel) completion of the same uploads
+        off = s.offload
+        comp = ev.time + (fleet.zeta[ev.users][off] * v[s.partition]
+                          / s.f_device[off])
+        solo_fin = comp + PROF.O[s.partition] / fleet.rate[ev.users][off]
+        gpu_start = ev.gpu_free - s.gpu_busy
+        assert ev.upload_actual >= solo_fin.max() - 1e-9
+        assert gpu_start >= solo_fin.max() - 1e-9
+    for res in sched.timeline.reservations:
+        if np.isfinite(res.upload_actual):
+            assert res.gpu_start >= res.upload_actual - 1e-9

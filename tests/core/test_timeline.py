@@ -306,6 +306,138 @@ def test_dvfs_quiescent_false_disables_tail_stretch():
 
 
 # ---------------------------------------------------------------------------
+# un-stretch on submit (ROADMAP timeline follow-up (a))
+# ---------------------------------------------------------------------------
+
+def test_submit_unstretches_not_yet_started_quiescent_tail():
+    """A request submitted right after a quiescent-tail stretch must not
+    plan behind the inflated horizon: the stretched, not-yet-started
+    reservation is restored to its planned f_e on submit."""
+    fleet, _ = _setup(M=2, beta=8.0)
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy="immediate",
+                            occupancy="interleaved")
+    # two staggered flushes: the second plans behind the first's
+    # occupancy (queue-dominated start), leaving f_e headroom the
+    # quiescent-tail rescale recovers
+    sched.submit(OnlineArrival(0, 0.0, float(fleet.deadline[0])))
+    sched.submit(OnlineArrival(1, 0.005, float(fleet.deadline[1])))
+    while sched.step() is not None:
+        pass
+    assert sched.timeline.dvfs_rescales == 1      # quiescent tail stretched
+    r = sched.timeline.reservations[-1]
+    assert r.stretched_from is not None
+    f_planned = r.stretched_from.f_edge
+    stretched_end = r.end
+    assert r.f_edge < f_planned                   # genuinely slowed down
+    e_stretched = float(sched.per_user_energy.sum())
+    # new traffic lands BEFORE the stretched run starts
+    t_a = sched.now + 0.5 * (r.gpu_start - sched.now)
+    assert t_a < r.gpu_start
+    sched.submit(OnlineArrival(0, t_a, float(fleet.deadline[0])))
+    assert sched.timeline.unstretches == 1
+    assert sched.timeline.dvfs_rescales == 0      # credit rolled back
+    assert r.stretched_from is None
+    assert r.f_edge == f_planned                  # planned setting restored
+    assert r.end < stretched_end
+    assert sched.gpu_free == sched.timeline.horizon >= r.end
+    assert float(sched.per_user_energy.sum()) > e_stretched  # saving undone
+    assert sched._f_edges[r.flush.seq] == f_planned  # result view restored
+    while sched.step() is not None:
+        pass
+    # the late arrival planned against the UNSTRETCHED horizon
+    assert sched.flushes[-1].schedule.feasible
+    assert sched.violations == 0
+
+
+def test_one_shot_traces_never_unstretch():
+    """Everything submitted before the clock moves ⇒ the stretch rollback
+    can never fire, and interleaved results are exactly the pre-satellite
+    ones (the committed BENCH_timeline invariant)."""
+    fleet, arrivals = _setup(M=6, rate=800.0, seed=4, alpha=(0.5, 3.0))
+    sched = OnlineScheduler(PROF, fleet, EDGE, policy="slack",
+                            occupancy="interleaved")
+    sched.submit_many(arrivals)
+    r = sched.run()
+    assert sched.timeline.unstretches == 0
+    # deterministic replay: identical end-to-end
+    sched2 = OnlineScheduler(PROF, fleet, EDGE, policy="slack",
+                             occupancy="interleaved")
+    sched2.submit_many(arrivals)
+    _assert_same_result(sched2.run(), r)
+
+
+def test_multi_tenant_submit_unstretches_other_tenants():
+    """Quiescence is global: traffic arriving at tenant B rolls back a
+    not-yet-started quiescent stretch of tenant A's reservation."""
+    fleetA, _ = _setup(M=2, beta=8.0)
+    fleetB, _ = _setup(M=2, beta=8.0, seed=1)
+    mts = MultiTenantScheduler(
+        [Tenant(PROF, fleetA, EDGE, name="A", policy="immediate"),
+         Tenant(PROF2, fleetB, EDGE2, name="B", policy="immediate")],
+        occupancy="interleaved")
+    mts.submit(0, OnlineArrival(0, 0.0, float(fleetA.deadline[0])))
+    mts.submit(0, OnlineArrival(1, 0.005, float(fleetA.deadline[1])))
+    while mts.step() is not None:
+        pass
+    assert mts.timeline.dvfs_rescales == 1
+    r = [x for x in mts.timeline.reservations
+         if x.stretched_from is not None][-1]
+    assert r.tenant == 0
+    t_a = mts.now + 0.5 * (r.gpu_start - mts.now)
+    mts.submit(1, OnlineArrival(0, t_a, float(fleetB.deadline[0])))
+    assert mts.timeline.unstretches == 1
+    assert r.stretched_from is None
+
+
+# ---------------------------------------------------------------------------
+# gap-probe pruning (ROADMAP timeline follow-up (b))
+# ---------------------------------------------------------------------------
+
+def test_gap_probe_pruned_when_batch_cannot_fit():
+    """An idle window wider than the single-sample busy floor but too
+    narrow for this batch's busy-time lower bound is skipped WITHOUT a
+    planner dispatch — and the flush lands where it would have anyway."""
+    fleet, _ = _setup(M=4, beta=30.0)
+    sched0 = OnlineScheduler(PROF, fleet, EDGE, policy="immediate",
+                             occupancy="interleaved")
+    sub = dataclasses.replace(fleet.subset(np.arange(2)),
+                              deadline=fleet.deadline[:2])
+    lb = sched0._min_busy_bound(sub, 0.0)
+    assert lb > sched0._min_gap      # γ (upload+compute) tightens the bound
+    # a window that passes the min-width check but fails the batch bound
+    width = 0.5 * (sched0._min_gap + lb)
+    for prune_on in (True, False):
+        tl = GpuTimeline(mode="interleaved")
+        tl.reserve(1, 0.0, width + 1.0, gpu_start=width, deadline=10.0)
+        sched = OnlineScheduler(PROF, fleet, EDGE, policy="immediate",
+                                occupancy="interleaved", timeline=tl)
+        if not prune_on:                      # disable the bound
+            sched._min_busy_bound = lambda sub, tf: 0.0
+        for m in range(2):
+            sched.submit(OnlineArrival(m, 0.0, float(fleet.deadline[m])))
+        res = sched.run()
+        if prune_on:
+            pruned = res
+            assert res.pruned_probes >= 1
+            assert tl.gap_fills == 0
+        else:
+            unpruned = res
+            assert res.pruned_probes == 0
+    # pruning only skips hopeless dispatches — results are identical
+    _assert_same_result(pruned, unpruned)
+
+
+def test_pruned_probe_count_reaches_multi_tenant_result():
+    fleet, arrivals = _setup(M=8, rate=1500.0, seed=3, alpha=(0.5, 3.0))
+    mts = MultiTenantScheduler([Tenant(PROF, fleet, EDGE, policy="slack")],
+                               occupancy="interleaved")
+    mts.submit_traces([arrivals])
+    out = mts.run()
+    assert out.pruned_probes == sum(s.probe_prunes for s in mts.schedulers)
+    assert out.unstretches == mts.timeline.unstretches
+
+
+# ---------------------------------------------------------------------------
 # grouping: the DP threads the timeline cursor
 # ---------------------------------------------------------------------------
 
