@@ -22,6 +22,13 @@ win beyond it fails the gate, not just a wall-clock regression:
 * ``BENCH_channel.json`` — ``saving_vs_nominal`` per named
   contention/fading scenario (``--channel-baseline``/``--channel-fresh``).
 
+``BENCH_scale.json`` (the fleet-scale bench) gates differently: per fleet
+size M the simulated goodput (requests/s meeting deadlines) must not DROP
+and the energy per request must not GROW by more than
+``--scale-tolerance`` (fractional; both are deterministic given the
+seeds, so the default band is tight).  Wall times and planner latency
+percentiles are reported, never gated — they measure the CI host.
+
 Cases are keyed by (M, scenario) / (tenants, users) / scenario name;
 cases present in only one file are reported but never fail the gate
 (benchmarks may legitimately add or retire sizes).  Improvements are
@@ -143,6 +150,48 @@ def _gate_savings(kind: str, baseline: str, fresh_path: str,
     return failures
 
 
+def _gate_scale(baseline: str, fresh_path: str, tolerance: float) -> int:
+    """Per-M goodput (higher-better) and energy/request (lower-better)."""
+    with open(baseline) as f:
+        base_doc = json.load(f)
+    with open(fresh_path) as f:
+        fresh_doc = json.load(f)
+    base = {r["users"]: r for r in base_doc.get("online", [])}
+    fresh = {r["users"]: r for r in fresh_doc.get("online", [])}
+    if not base:
+        print(f"no scale cases in {baseline}; nothing to gate")
+        return 0
+    failures = 0
+    print(f"\n{'scale case':<28} {'baseline':>12} {'fresh':>12} "
+          f"{'delta':>8}  verdict")
+    for M in sorted(base):
+        if M not in fresh:
+            print(f"M={M:<26} (case missing from fresh run: reported, "
+                  f"not gated)")
+            continue
+        for field, better in (("goodput_rps", "higher"),
+                              ("energy_per_request", "lower")):
+            b, f_ = base[M][field], fresh[M][field]
+            if better == "higher":
+                ok = f_ >= b * (1.0 - tolerance)
+            else:
+                ok = f_ <= b * (1.0 + tolerance)
+            delta = f_ / b - 1.0 if b else 0.0
+            verdict = ("ok" if ok
+                       else f"SCALE REGRESSION > {tolerance:.0%}")
+            print(f"M={M:<7} {field:<18} {b:>12.5g} {f_:>12.5g} "
+                  f"{delta:>+7.1%}  {verdict}")
+            failures += not ok
+    for M in sorted(set(fresh) - set(base)):
+        print(f"M={M}: new scale case, not in baseline")
+    if fresh_doc.get("gate_wins", 0) < fresh_doc.get("gate_needed", 0):
+        print(f"fresh scale run failed its own gate "
+              f"({fresh_doc['gate_wins']}/{fresh_doc['gate_needed']} wins)",
+              file=sys.stderr)
+        failures += 1
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_planner.json",
@@ -171,11 +220,19 @@ def main(argv=None) -> int:
                     help="freshly-emitted channel JSON to gate")
     ap.add_argument("--channel-tolerance", type=float, default=0.05,
                     help="max allowed absolute drop in saving_vs_nominal")
+    ap.add_argument("--scale-baseline", default=None,
+                    help="committed fleet-scale snapshot JSON")
+    ap.add_argument("--scale-fresh", default=None,
+                    help="freshly-emitted fleet-scale JSON to gate")
+    ap.add_argument("--scale-tolerance", type=float, default=0.05,
+                    help="max allowed fractional goodput drop / "
+                         "energy-per-request growth per fleet size")
     args = ap.parse_args(argv)
     if (args.fresh is None and args.tenancy_fresh is None
-            and args.timeline_fresh is None and args.channel_fresh is None):
+            and args.timeline_fresh is None and args.channel_fresh is None
+            and args.scale_fresh is None):
         ap.error("nothing to gate: pass --fresh, --tenancy-fresh, "
-                 "--timeline-fresh and/or --channel-fresh")
+                 "--timeline-fresh, --channel-fresh and/or --scale-fresh")
 
     failures = 0
     if args.fresh is not None:
@@ -192,6 +249,10 @@ def main(argv=None) -> int:
         failures += _gate_savings(
             "channel", args.channel_baseline or "BENCH_channel.json",
             args.channel_fresh, args.channel_tolerance)
+    if args.scale_fresh is not None:
+        failures += _gate_scale(
+            args.scale_baseline or "BENCH_scale.json",
+            args.scale_fresh, args.scale_tolerance)
     if failures:
         print(f"{failures} case(s) regressed beyond tolerance",
               file=sys.stderr)

@@ -6,8 +6,10 @@ The simulation drives the event-driven ``OnlineScheduler`` — the same
 engine ``CoInferenceServer.serve_online`` uses to execute flushes on a
 real model — here with a callback printing the flush timeline.
 
-PYTHONPATH=src python examples/online_serving.py
+PYTHONPATH=src python examples/online_serving.py [arrival-seed]
 """
+import sys
+
 from repro.core import (OnlineScheduler, PlannerService, all_local_energy,
                         make_edge_profile, make_fleet, mobilenet_v2_profile,
                         oracle_bound, poisson_arrivals, simulate_online)
@@ -16,11 +18,14 @@ profile = mobilenet_v2_profile()
 edge = make_edge_profile(profile)
 M = 12
 fleet = make_fleet(M, profile, edge, beta=20.0, seed=0)
+# deterministic arrival draws: same seed → same Poisson trace; pass a
+# different one to re-roll the load while the fleet stays pinned
+ARRIVAL_SEED = int(sys.argv[1]) if len(sys.argv) > 1 else 1
 
 print(f"{'rate':>8s} {'LC':>8s} {'oracle':>8s} {'online(slack)':>13s} "
       f"{'gap':>6s} {'max batch':>9s} {'flushes':>7s}")
 for rate in (10.0, 100.0, 1000.0):
-    arr = poisson_arrivals(M, rate, fleet, seed=1)
+    arr = poisson_arrivals(M, rate, fleet, seed=ARRIVAL_SEED)
     lc = all_local_energy(arr, profile, fleet, edge)
     orc = oracle_bound(arr, profile, fleet, edge)
     r = simulate_online(arr, profile, fleet, edge, policy="slack")
@@ -45,7 +50,7 @@ sched = OnlineScheduler(
         f"batch={ev.schedule.batch_size}  e={ev.schedule.energy:.4f} J  "
         f"gpu_free={ev.gpu_free * 1e3:.2f} ms"),
     on_gpu_free=lambda ev: print(f"  t={ev.time * 1e3:7.2f} ms  gpu free"))
-sched.submit_many(poisson_arrivals(M, 1000.0, fleet, seed=1))
+sched.submit_many(poisson_arrivals(M, 1000.0, fleet, seed=ARRIVAL_SEED))
 r = sched.run()
 stats = service.stats()
 assert r.violations == 0

@@ -5,16 +5,17 @@ from .channel import (CHANNEL_KINDS, ChannelModel, SharedUplink,
                       make_channel, markov_fading_gains)
 from .cost_models import (DeviceFleet, EdgeProfile, make_edge_profile,
                           make_tpu_v5e_edge_profile, make_fleet)
-from .jdob import (BatchedPlanner, ExecutableCache, PlannerStats, Schedule,
-                   jdob_schedule, jdob_energy_grid, jdob_plan_batched,
-                   make_f_sweep, shared_executable_cache)
+from .jdob import (BatchedPlanner, ExecutableCache, PendingPlans,
+                   PlannerStats, Schedule, jdob_schedule, jdob_energy_grid,
+                   jdob_plan_batched, make_f_sweep, shared_executable_cache)
 from .reference import jdob_reference
 from .baselines import (STRATEGIES, local_computing, ip_ssa,
                         jdob_no_edge_dvfs, jdob_binary, jdob_plus)
 from .planner_service import PlannerService, planner_spec
 from .bruteforce import brute_force
-from .grouping import (GroupedSchedule, optimal_grouping,
+from .grouping import (GroupedSchedule, IncrementalOgState, optimal_grouping,
                        optimal_grouping_reference, single_group)
+from .cohort import cohort_bounds, cohort_grouping
 from .timeline import (OCCUPANCY_MODES, GpuTimeline, Reservation,
                        TimelineCursor, rescale_edge_dvfs, respeed_edge_dvfs)
 from .online import (FlushEvent, GpuFreeEvent, OnlineArrival, OnlineResult,
@@ -33,15 +34,17 @@ __all__ = [
     "markov_fading_gains",
     "DeviceFleet", "EdgeProfile", "make_edge_profile",
     "make_tpu_v5e_edge_profile", "make_fleet",
-    "BatchedPlanner", "ExecutableCache", "PlannerStats", "Schedule",
+    "BatchedPlanner", "ExecutableCache", "PendingPlans", "PlannerStats",
+    "Schedule",
     "jdob_schedule", "jdob_energy_grid", "jdob_plan_batched", "make_f_sweep",
     "shared_executable_cache",
     "jdob_reference", "STRATEGIES", "local_computing", "ip_ssa",
     "jdob_no_edge_dvfs", "jdob_binary", "jdob_plus",
     "PlannerService", "planner_spec",
     "brute_force",
-    "GroupedSchedule", "optimal_grouping", "optimal_grouping_reference",
-    "single_group",
+    "GroupedSchedule", "IncrementalOgState", "optimal_grouping",
+    "optimal_grouping_reference", "single_group",
+    "cohort_bounds", "cohort_grouping",
     "OCCUPANCY_MODES", "GpuTimeline", "Reservation", "TimelineCursor",
     "rescale_edge_dvfs", "respeed_edge_dvfs",
     "FlushEvent", "GpuFreeEvent", "OnlineArrival", "OnlineResult",

@@ -108,6 +108,23 @@ class ChannelModel:
         flushes contend with it — until retracted or complete."""
         raise NotImplementedError
 
+    def staggered_rates(self, solo: np.ndarray, starts: np.ndarray,
+                        nbytes: float, keys=None) -> np.ndarray:
+        """Stagger-aware rate snapshot: the equivalent constant rate each
+        upload of ``nbytes`` would average if it starts at its device's
+        compute finish ``starts`` — instead of :meth:`effective_rates`'
+        everyone-concurrent-from-now worst case.  Devices finishing at
+        different times contend only while their uploads actually
+        overlap, so the staggered view is never more pessimistic; a
+        planner pricing it recovers the headroom the concurrent snapshot
+        gives away (ROADMAP plan/realize follow-up (c)).  Nothing is
+        committed to the channel's books.  Default: the concurrent
+        snapshot at the earliest start (exact for contention-free
+        models)."""
+        starts = np.asarray(starts, np.float64)
+        t0 = float(starts.min()) if len(starts) else 0.0
+        return self.effective_rates(solo, t0, keys=keys)
+
     def retract(self, session: UploadSession | None) -> None:
         """Undo a realized session (its flush was re-planned)."""
 
@@ -169,6 +186,41 @@ class SharedUplink(ChannelModel):
             return solo.copy()
         return solo * (w / total)
 
+    def _march(self, solo: np.ndarray, starts: np.ndarray, nb: float,
+               w: np.ndarray, spans: list[UploadSpan]) -> np.ndarray:
+        """March the progressive-sharing dynamics forward: each upload
+        starts at its own ``starts``, active uploads split the medium by
+        weight against the fixed committed ``spans``, completions free
+        their share.  Pure — mutates nothing; both :meth:`realize` (which
+        then commits the result) and :meth:`staggered_rates` (which only
+        prices it) run the SAME dynamics, so the staggered snapshot is
+        exactly what realization will deliver at unchanged starts."""
+        n = len(solo)
+        rem = np.full(n, nb)
+        fin = np.full(n, np.nan)
+        # committed spans are fixed intervals: collect their breakpoints
+        brk = sorted({float(s) for s in starts}
+                     | {s.start for s in spans}
+                     | {s.finish for s in spans})
+        t = float(starts.min()) if n else 0.0
+        while np.isnan(fin).any():
+            act = (starts <= t + _EPS) & np.isnan(fin)
+            if not act.any():
+                t = float(starts[np.isnan(fin)].min())
+                continue
+            w_busy = sum(s.weight for s in spans
+                         if s.start <= t + _EPS and s.finish > t + _EPS)
+            total = w_busy + float(w[act].sum())
+            rate = solo[act] * (w[act] / total)
+            dt_done = float((rem[act] / rate).min())
+            nxt = min((b for b in brk if b > t + _EPS), default=np.inf)
+            dt = min(dt_done, nxt - t)
+            rem[act] -= rate * dt
+            t += dt
+            done = act & (rem <= nb * 1e-12 + _EPS)
+            fin[done] = t
+        return fin
+
     def realize(self, solo, starts, nbytes, keys=None):
         solo = np.asarray(solo, np.float64)
         starts = np.asarray(starts, np.float64)
@@ -182,33 +234,28 @@ class SharedUplink(ChannelModel):
         if nb <= _EPS:
             fin = starts.copy()
             return fin, UploadSession([])
-        rem = np.full(n, nb)
-        fin = np.full(n, np.nan)
-        # committed spans are fixed intervals: collect their breakpoints
-        brk = sorted({float(s) for s in starts}
-                     | {s.start for s in self._spans}
-                     | {s.finish for s in self._spans})
-        t = t0
-        while np.isnan(fin).any():
-            act = (starts <= t + _EPS) & np.isnan(fin)
-            if not act.any():
-                t = float(starts[np.isnan(fin)].min())
-                continue
-            w_busy = sum(s.weight for s in self._spans
-                         if s.start <= t + _EPS and s.finish > t + _EPS)
-            total = w_busy + float(w[act].sum())
-            rate = solo[act] * (w[act] / total)
-            dt_done = float((rem[act] / rate).min())
-            nxt = min((b for b in brk if b > t + _EPS), default=np.inf)
-            dt = min(dt_done, nxt - t)
-            rem[act] -= rate * dt
-            t += dt
-            done = act & (rem <= nb * 1e-12 + _EPS)
-            fin[done] = t
+        fin = self._march(solo, starts, nb, w, self._spans)
         spans = [UploadSpan(keys[i], float(starts[i]), float(fin[i]), nb,
                             float(w[i])) for i in range(n)]
         self._spans.extend(spans)
         return fin, UploadSession(spans)
+
+    def staggered_rates(self, solo, starts, nbytes, keys=None):
+        """Simulate the progressive sharing at the ACTUAL staggered starts
+        (without committing anything) and back out each upload's average
+        rate ``nbytes / (finish − start)`` — the per-user scalar the
+        jitted planner grid prices Eqs. 3-4 with.  Tighter than (never
+        below) :meth:`effective_rates`' all-concurrent snapshot whenever
+        compute finishes actually stagger."""
+        solo = np.asarray(solo, np.float64)
+        starts = np.asarray(starts, np.float64)
+        nb = float(nbytes)
+        if len(solo) == 0 or nb <= _EPS:
+            return solo.copy()
+        t0 = float(starts.min())
+        live = [s for s in self._spans if s.finish > t0]
+        fin = self._march(solo, starts, nb, self._weights(solo), live)
+        return nb / np.maximum(fin - starts, _EPS)
 
     def retract(self, session):
         if session is None:
@@ -284,6 +331,21 @@ class TraceChannel(ChannelModel):
         fin = np.array([self._finish(k, float(r), float(s), float(nbytes))
                         for k, r, s in zip(keys, solo, starts)])
         return fin, UploadSession([])
+
+    def staggered_rates(self, solo, starts, nbytes, keys=None):
+        """Integrate each device's gain trace from its OWN compute finish
+        (not the flush instant) — the average rate its upload will really
+        see, so a plan priced with it matches realization exactly at
+        unchanged starts."""
+        solo = np.asarray(solo, np.float64)
+        starts = np.asarray(starts, np.float64)
+        nb = float(nbytes)
+        if len(solo) == 0 or nb <= _EPS:
+            return solo.copy()
+        keys = list(keys) if keys is not None else [None] * len(solo)
+        fin = np.array([self._finish(k, float(r), float(s), nb)
+                        for k, r, s in zip(keys, solo, starts)])
+        return nb / np.maximum(fin - starts, _EPS)
 
 
 def markov_fading_gains(n_traces: int, horizon: float, dt: float = 0.005, *,

@@ -1,0 +1,183 @@
+"""Hierarchical OG: deadline-sorted cohort sharding for fleet-scale plans.
+
+The OG prefix DP (:func:`repro.core.grouping.optimal_grouping`) enumerates
+all O(M²) contiguous segments of the deadline-sorted fleet — exact, but
+quadratic, and the ROADMAP's fleet sizes (10k-100k users) put it far out of
+reach.  This module trades bounded optimality for linear scaling:
+
+1. **Shard**: split the deadline-sorted fleet into consecutive cohorts of
+   at most ``cohort_size`` (C) users.  Deadline-similar users — the ones OG
+   wants to co-batch — land in the same cohort by construction.
+2. **Plan**: run the existing batched OG inside each cohort, threading the
+   GPU occupancy cursor across cohorts exactly as the DP threads it across
+   groups (Eq. 22's serialized view).  Cohorts reuse one
+   :class:`~repro.core.planner_service.PlannerService` shape policy, so all
+   shards dispatch against the same few prefetched compiled shapes.
+3. **Merge**: a top-level DP over the resulting group *atoms* that may fuse
+   up to ``merge_window`` consecutive atoms (capped at C users) into one
+   group — repairing groups the shard boundaries artificially split.  The
+   identity partition is always a candidate, so the merge can only lower
+   energy relative to the sharded plans.
+
+Exactness: an M ≤ C fleet is planned by the exact OG path (bit-identical —
+the function literally delegates).  Above C the result matches the exact
+DP whenever no optimal group spans a cohort boundary; otherwise the merge
+DP repairs boundary-spanning groups and the energy stays within a measured
+band of exact (benchmarked in ``benchmarks/scale_bench.py``, banded in
+tests/core/test_scale.py).  The band is two-sided: the prefix DP keeps
+only the min-energy state per prefix while segment energy couples to the
+threaded occupancy cursor, so neither solver dominates — the coarser
+cohort chain has been observed BELOW "exact" (−5.25% at M=96, C=48)
+because a cheaper-but-later prefix poisoned the exact DP's suffix.
+
+Cost: O(M·C) segment solves in the shards plus O(M/C · merge_window) merge
+solves — linear in M at fixed C, versus exact OG's O(M²).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .cost_models import DeviceFleet
+from .grouping import GroupedSchedule, _collect_chain, optimal_grouping
+from .jdob import Schedule, jdob_schedule
+from .planner_service import PlannerService
+from .timeline import GpuTimeline, TimelineCursor
+
+
+def cohort_bounds(M: int, cohort_size: int) -> list[tuple[int, int]]:
+    """Consecutive [lo, hi) spans of the deadline-sorted fleet, each of at
+    most ``cohort_size`` users."""
+    assert cohort_size >= 1
+    return [(lo, min(lo + cohort_size, M))
+            for lo in range(0, M, cohort_size)]
+
+
+def cohort_grouping(profile, fleet: DeviceFleet, edge,
+                    inner: Callable = jdob_schedule,
+                    t_free: float = 0.0, rho: float = 0.03e9,
+                    cohort_size: int = 64, merge_window: int = 4,
+                    service: PlannerService | None = None,
+                    timeline: GpuTimeline | None = None
+                    ) -> GroupedSchedule:
+    """Hierarchical OG over deadline-sorted cohorts of ≤ ``cohort_size``.
+
+    Same contract as :func:`~repro.core.grouping.optimal_grouping` (group
+    indices into the original fleet, threaded occupancy, optional timeline
+    commit); delegates to it verbatim when the fleet fits one cohort.
+    ``merge_window`` bounds how many consecutive per-cohort groups the
+    top-level merge DP may fuse into one (1 disables boundary repair).
+    """
+    assert merge_window >= 1
+    if service is None:
+        service = PlannerService(profile, edge, rho=rho)
+    else:
+        assert service.rho == rho, "service rho disagrees with rho argument"
+    if timeline is not None:
+        t_free = max(t_free, timeline.t_free(0.0))
+    M = fleet.M
+    if M <= cohort_size:
+        # single cohort == the exact path, bit for bit
+        return optimal_grouping(profile, fleet, edge, inner, t_free=t_free,
+                                rho=rho, service=service, timeline=timeline)
+
+    spec = service.spec_for(inner)
+    planner = None if spec is None else service.planner(**spec)
+    order = np.argsort(fleet.deadline, kind="stable")
+    sorted_fleet = fleet.subset(order)
+    buckets = service.level_buckets(cohort_size)
+    if planner is not None:
+        for b, g in service.level_shapes(cohort_size):
+            planner.prefetch(b, g)
+
+    # top-level segment solver over ABSOLUTE sorted positions; per-cohort
+    # group schedules seed it so identity atoms never re-dispatch
+    sub: dict[tuple[int, int], DeviceFleet] = {}
+    cache: dict[tuple[int, int, float], Schedule] = {}
+
+    def seg(i: int, j: int) -> DeviceFleet:
+        if (i, j) not in sub:
+            sub[(i, j)] = sorted_fleet.subset(np.arange(i, j))
+        return sub[(i, j)]
+
+    def solve_many(pairs: Sequence[tuple[int, int, float]]) -> None:
+        if planner is None:
+            for (i, j, tf) in pairs:
+                cache[(i, j, round(tf, 9))] = inner(
+                    profile, seg(i, j), edge, t_free=tf, rho=rho)
+            return
+        by_bucket: dict[int, list[tuple[int, int, float]]] = {}
+        for (i, j, tf) in pairs:
+            by_bucket.setdefault(
+                service.bucket_for(j - i, buckets), []).append((i, j, tf))
+        pending = []
+        for b, part in sorted(by_bucket.items()):
+            pending.append((part, planner.plan_async(
+                [seg(i, j) for (i, j, _) in part],
+                [tf for (_, _, tf) in part], m_pad=b,
+                g_pad=service.level_group_pad(buckets, len(part)))))
+        for part, plans in pending:
+            for (i, j, tf), p in zip(part, plans.get()):
+                cache[(i, j, round(tf, 9))] = p
+
+    def solve(i: int, j: int, tf: float) -> Schedule:
+        key = (i, j, round(tf, 9))
+        if key not in cache:
+            solve_many([(i, j, tf)])
+        return cache[key]
+
+    # ---- shard + plan: exact OG inside each cohort, cursor threaded ----
+    atoms: list[tuple[int, int]] = []
+    cursor = TimelineCursor(t_free)
+    for lo, hi in cohort_bounds(M, cohort_size):
+        og = optimal_grouping(profile, sorted_fleet.subset(np.arange(lo, hi)),
+                              edge, inner, t_free=cursor.t_free, rho=rho,
+                              service=service)
+        for g, s in zip(og.groups, og.schedules):
+            i_abs, j_abs = lo + int(g[0]), lo + int(g[-1]) + 1
+            cache[(i_abs, j_abs, round(cursor.t_free, 9))] = s
+            atoms.append((i_abs, j_abs))
+            cursor = cursor.advance(s)
+
+    # ---- merge: top-level DP over atoms, fusing ≤ merge_window of them --
+    K = len(atoms)
+    INF = np.inf
+    dp: list[tuple[float, TimelineCursor, int]] = \
+        [(0.0, TimelineCursor(t_free), -1)]
+    for t in range(1, K + 1):
+        # warm the level's missing candidate solves in one batched dispatch
+        need = []
+        for s in range(max(0, t - merge_window), t):
+            i_abs, j_abs = atoms[s][0], atoms[t - 1][1]
+            if t - s > 1 and j_abs - i_abs > cohort_size:
+                continue
+            e_s, cur_s, _ = dp[s]
+            if np.isfinite(e_s) and \
+                    (i_abs, j_abs, round(cur_s.t_free, 9)) not in cache:
+                need.append((i_abs, j_abs, cur_s.t_free))
+        if need:
+            solve_many(need)
+        best = (INF, TimelineCursor(t_free), t - 1)
+        for s in range(max(0, t - merge_window), t):
+            i_abs, j_abs = atoms[s][0], atoms[t - 1][1]
+            if t - s > 1 and j_abs - i_abs > cohort_size:
+                continue
+            e_s, cur_s, _ = dp[s]
+            if not np.isfinite(e_s):
+                continue
+            sch = solve(i_abs, j_abs, cur_s.t_free)
+            cand = e_s + sch.energy
+            if cand < best[0]:
+                best = (cand, cur_s.advance(sch), s)
+        dp.append(best)
+
+    chain: list[tuple[int, int]] = []
+    t = K
+    while t > 0:
+        s = dp[t][2]
+        chain.append((atoms[s][0], atoms[t - 1][1]))
+        t = s
+    chain.reverse()
+    return _collect_chain(chain, order, solve, TimelineCursor(t_free),
+                          timeline)

@@ -105,6 +105,14 @@ class DeviceFleet:
                   for f in dataclasses.fields(self) if f.name != "channel"}
         return dataclasses.replace(self, **arrays)
 
+    def concat(self, other: "DeviceFleet") -> "DeviceFleet":
+        """Row-wise concatenation (self's users first).  The channel owner
+        is inherited from ``self`` — fleet churn joins the same uplink."""
+        arrays = {f.name: np.concatenate([getattr(self, f.name),
+                                          getattr(other, f.name)])
+                  for f in dataclasses.fields(self) if f.name != "channel"}
+        return dataclasses.replace(self, **arrays)
+
     def rates_at(self, now: float, users=None, tenant: int = 0) -> np.ndarray:
         """The channel's effective-rate snapshot for ``users`` (default:
         everyone) at instant ``now`` — equal to the solo ``rate`` view

@@ -63,8 +63,8 @@ class GroupedSchedule:
         return out
 
 
-def _run_dp(M: int, cursor: TimelineCursor, solve, level_prefetch=None
-            ) -> list[tuple[int, int]]:
+def _run_dp(M: int, cursor: TimelineCursor, solve, level_prefetch=None,
+            dp: list | None = None) -> list[tuple[int, int]]:
     """The shared prefix DP: ``dp[j] = (energy, timeline cursor, split i)``
     for users [0, j), folding ``solve(i, j, cursor_i.t_free)`` with
     ascending-``i`` tie-breaks.  Occupancy threads through a
@@ -75,10 +75,20 @@ def _run_dp(M: int, cursor: TimelineCursor, solve, level_prefetch=None
     runs before level j folds so a batched backend can warm every
     (i, j, tf_i) solve at once.  Returns the chain of contiguous segments
     covering [0, M).  Both grouping implementations run THIS function —
-    their bit-for-bit parity is structural, not coincidental."""
+    their bit-for-bit parity is structural, not coincidental.
+
+    ``dp``, when given, is a partial prefix list from a previous run whose
+    entries are already final (levels 0..len(dp)-1); folding resumes at
+    level ``len(dp)`` and the list is extended IN PLACE — this is the
+    incremental path's suffix re-solve (:class:`IncrementalOgState`).  A
+    level's fold reads only dp[0..j-1] and ``solve``, so re-folding the
+    suffix over a trusted prefix is exactly the from-scratch recurrence.
+    """
     INF = np.inf
-    dp: list[tuple[float, TimelineCursor, int]] = [(0.0, cursor, -1)]
-    for j in range(1, M + 1):
+    if dp is None:
+        dp = [(0.0, cursor, -1)]
+    start = len(dp)
+    for j in range(start, M + 1):
         if level_prefetch is not None:
             level_prefetch(j, dp)
         best = (INF, cursor, 0)
@@ -196,13 +206,16 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
         for (i, j, tf) in pairs:
             by_bucket.setdefault(
                 service.bucket_for(j - i, buckets), []).append((i, j, tf))
+        # dispatch every bucket before materializing any: the device works
+        # on bucket k+1 while bucket k's winners transfer/reconstruct
+        pending = []
         for b, part in sorted(by_bucket.items()):
-            plans = planner.plan([sub[(i, j)] for (i, j, _) in part],
-                                 [tf for (_, _, tf) in part],
-                                 m_pad=b,
-                                 g_pad=service.level_group_pad(buckets,
-                                                               len(part)))
-            for (i, j, tf), p in zip(part, plans):
+            pending.append((part, planner.plan_async(
+                [sub[(i, j)] for (i, j, _) in part],
+                [tf for (_, _, tf) in part], m_pad=b,
+                g_pad=service.level_group_pad(buckets, len(part)))))
+        for part, plans in pending:
+            for (i, j, tf), p in zip(part, plans.get()):
                 cache[(i, j, round(tf, 9))] = p
 
     def solve(i: int, j: int, tf: float) -> Schedule:
@@ -228,6 +241,175 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     chain = _run_dp(M, TimelineCursor(t_free), solve, level_prefetch)
     return _collect_chain(chain, order, solve, TimelineCursor(t_free),
                           timeline)
+
+
+class IncrementalOgState:
+    """Incremental OG: the prefix DP under fleet churn.
+
+    The DP of :func:`_run_dp` is lower-triangular in the prefix end j, so a
+    single arrival or departure at deadline-sorted position k leaves every
+    prefix [0, j) with j ≤ k — and every memoized segment solve with both
+    endpoints ≤ k — untouched.  This class caches the per-prefix DP state
+    (best cost, threaded cursor, winning split) plus the segment-solve memo
+    across fleet changes and re-folds ONLY levels > k, instead of the
+    O(M²)-segment from-scratch solve.  Results are bit-identical to
+    :func:`optimal_grouping` on the current fleet: the suffix re-fold runs
+    the same recurrence over the same solver with the same memo keys and
+    tie-breaks, and the batched core is padding-invariant, so caching can
+    never change a value (parity-tested in tests/core/test_scale.py).
+
+    Segment solves behind position k are REMAPPED, not recomputed: after an
+    arrival at k, old segment (i, j) with i ≥ k is the new segment
+    (i+1, j+1) over the same users, so its memo entries carry over; only
+    segments straddling k are dropped.  Amortized work per update is one
+    DP suffix (M − k levels, each a few batched dispatches) instead of the
+    full triangle.
+
+    Usage::
+
+        state = IncrementalOgState(profile, fleet, edge, service=svc)
+        plan = state.plan()          # == optimal_grouping(profile, fleet, ..)
+        plan = state.arrive(row)     # row: an M==1 DeviceFleet
+        plan = state.depart(m)       # m: index into state.fleet
+
+    ``t_free`` is fixed at construction (the state plans a fleet snapshot
+    at one occupancy origin — reconstruct for a new origin).  Timelines are
+    not threaded here; the serialized scalar cursor is the DP's contract.
+    """
+
+    def __init__(self, profile, fleet: DeviceFleet, edge,
+                 inner: Callable = jdob_schedule, t_free: float = 0.0,
+                 rho: float = 0.03e9,
+                 service: PlannerService | None = None):
+        if service is None:
+            service = PlannerService(profile, edge, rho=rho)
+        else:
+            assert service.rho == rho, \
+                "service rho disagrees with rho argument"
+        spec = service.spec_for(inner)
+        assert spec is not None, \
+            "IncrementalOgState requires a planner-family inner solver"
+        self.profile, self.edge, self.rho = profile, edge, rho
+        self.t_free = float(t_free)
+        self.service = service
+        self.planner = service.planner(**spec)
+        self.fleet = fleet                       # current fleet, append order
+        #: deadline-sorted positions -> current-fleet indices (stable order)
+        self._order = list(np.argsort(fleet.deadline, kind="stable"))
+        self._sorted_fleet = fleet.subset(np.array(self._order, dtype=int))
+        self._sub: dict[tuple[int, int], DeviceFleet] = {}
+        self._cache: dict[tuple[int, int, float], Schedule] = {}
+        self._dp: list = [(0.0, TimelineCursor(self.t_free), -1)]
+        #: levels re-folded by the last plan()/arrive()/depart() call —
+        #: the bench's incrementality observable
+        self.last_refold_levels = 0
+
+    @property
+    def M(self) -> int:
+        return self.fleet.M
+
+    # -- solver plumbing (mirrors optimal_grouping's closures exactly) ----
+    def _seg(self, i: int, j: int) -> DeviceFleet:
+        key = (i, j)
+        if key not in self._sub:
+            self._sub[key] = self._sorted_fleet.subset(np.arange(i, j))
+        return self._sub[key]
+
+    def _solve_many(self, pairs, buckets) -> None:
+        by_bucket: dict[int, list[tuple[int, int, float]]] = {}
+        for (i, j, tf) in pairs:
+            by_bucket.setdefault(
+                self.service.bucket_for(j - i, buckets), []).append((i, j, tf))
+        pending = []
+        for b, part in sorted(by_bucket.items()):
+            pending.append((part, self.planner.plan_async(
+                [self._seg(i, j) for (i, j, _) in part],
+                [tf for (_, _, tf) in part], m_pad=b,
+                g_pad=self.service.level_group_pad(buckets, len(part)))))
+        for part, plans in pending:
+            for (i, j, tf), p in zip(part, plans.get()):
+                self._cache[(i, j, round(tf, 9))] = p
+
+    def _solver(self):
+        buckets = self.service.level_buckets(self.M)
+
+        def solve(i: int, j: int, tf: float) -> Schedule:
+            key = (i, j, round(tf, 9))
+            if key not in self._cache:
+                self._solve_many([(i, j, tf)], buckets)
+            return self._cache[key]
+
+        def level_prefetch(j: int, dp) -> None:
+            need = []
+            for i in range(j):
+                e_i, cur_i, _ = dp[i]
+                if np.isfinite(e_i) and (i, j, round(cur_i.t_free, 9)) \
+                        not in self._cache:
+                    need.append((i, j, cur_i.t_free))
+            if need:
+                self._solve_many(need, buckets)
+
+        return solve, level_prefetch
+
+    # -- fleet churn ------------------------------------------------------
+    def arrive(self, user: DeviceFleet) -> GroupedSchedule:
+        """Admit a one-user fleet row; re-folds the DP suffix from its
+        deadline-sorted position and returns the new plan."""
+        assert user.M == 1, "arrive() takes a single-user fleet row"
+        d = float(user.deadline[0])
+        # stable argsort puts the newest (largest original index) after
+        # every equal deadline — i.e. searchsorted side='right'
+        k = int(np.searchsorted(self._sorted_fleet.deadline, d,
+                                side="right"))
+        self.fleet = self.fleet.concat(user)
+        self._order.insert(k, self.fleet.M - 1)
+        self._sorted_fleet = self.fleet.subset(np.array(self._order,
+                                                        dtype=int))
+        # remap caches across the insertion point; drop straddlers
+        self._sub = {(i + (i >= k), j + (j > k)): f
+                     for (i, j), f in self._sub.items()
+                     if j <= k or i >= k}
+        self._cache = {(i + (i >= k), j + (j > k), tf): s
+                       for (i, j, tf), s in self._cache.items()
+                       if j <= k or i >= k}
+        del self._dp[k + 1:]
+        return self.plan()
+
+    def depart(self, m: int) -> GroupedSchedule:
+        """Remove the user at index ``m`` of the current fleet; re-folds
+        the DP suffix from its deadline-sorted position."""
+        k = self._order.index(m)
+        keep = [u for u in range(self.fleet.M) if u != m]
+        self.fleet = self.fleet.subset(np.array(keep, dtype=int))
+        del self._order[k]
+        self._order = [u - (u > m) for u in self._order]
+        self._sorted_fleet = self.fleet.subset(np.array(self._order,
+                                                        dtype=int))
+        self._sub = {(i - (i > k), j - (j > k)): f
+                     for (i, j), f in self._sub.items()
+                     if j <= k or i >= k + 1}
+        self._cache = {(i - (i > k), j - (j > k), tf): s
+                       for (i, j, tf), s in self._cache.items()
+                       if j <= k or i >= k + 1}
+        del self._dp[k + 1:]
+        return self.plan()
+
+    # -- solve ------------------------------------------------------------
+    def plan(self) -> GroupedSchedule:
+        """The OG plan for the current fleet, re-folding only the DP
+        levels invalidated since the last call (all of them on first
+        use)."""
+        M = self.M
+        for b, g in self.service.level_shapes(M):
+            self.planner.prefetch(b, g)
+        solve, level_prefetch = self._solver()
+        self.last_refold_levels = M + 1 - len(self._dp)
+        del self._dp[M + 1:]
+        chain = _run_dp(M, TimelineCursor(self.t_free), solve,
+                        level_prefetch, dp=self._dp)
+        order = np.array(self._order, dtype=int)
+        return _collect_chain(chain, order, solve,
+                              TimelineCursor(self.t_free))
 
 
 def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,

@@ -37,6 +37,7 @@ import functools
 import itertools
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
@@ -307,30 +308,77 @@ def _bucket(n: int, minimum: int = 4) -> int:
 
 @dataclasses.dataclass
 class PlannerStats:
-    """Per-planner compile/shape-cache counters.
+    """Per-planner compile/shape-cache counters + plan-latency histogram.
 
     ``hits``/``misses``/``evictions`` count this planner's lookups against
     its :class:`ExecutableCache` (misses trigger an XLA compile; evictions
     are entries this planner's compiles pushed out).  ``dispatches`` counts
-    device launches, ``groups_planned`` real (unpadded) groups solved."""
+    device launches, ``groups_planned`` real (unpadded) groups solved.
+
+    ``plan_calls`` counts :meth:`BatchedPlanner.plan` invocations (one per
+    online flush / OG level dispatch) and ``plan_ns`` holds their wall-time
+    samples (ns, dispatch through host materialization — the latency a
+    serving loop actually experiences), so planner cost is observable
+    without an external profiler.  The sample list is deterministically
+    decimated (every other sample dropped) past ``LATENCY_CAP`` entries —
+    percentile estimates stay representative while a 100k-flush run stays
+    bounded; ``plan_calls`` and min/max remain exact."""
 
     hits: int = 0
     misses: int = 0
     evictions: int = 0
     dispatches: int = 0
     groups_planned: int = 0
+    plan_calls: int = 0
+    plan_ns_min: int = 0
+    plan_ns_max: int = 0
+    plan_ns: list = dataclasses.field(default_factory=list)
+
+    LATENCY_CAP = 8192
 
     @property
     def compiles(self) -> int:
         return self.misses
 
+    def record_latency(self, ns: int) -> None:
+        self.plan_calls += 1
+        self.plan_ns_min = (ns if self.plan_calls == 1
+                            else min(self.plan_ns_min, ns))
+        self.plan_ns_max = max(self.plan_ns_max, ns)
+        self.plan_ns.append(ns)
+        if len(self.plan_ns) > self.LATENCY_CAP:
+            del self.plan_ns[::2]
+
+    def plan_latency(self) -> dict:
+        """min/p50/p99/max plan wall time in ms (zeros when never timed)."""
+        if not self.plan_ns:
+            return dict(count=self.plan_calls, min_ms=0.0, p50_ms=0.0,
+                        p99_ms=0.0, max_ms=0.0)
+        p50, p99 = np.percentile(np.asarray(self.plan_ns), [50, 99])
+        return dict(count=self.plan_calls,
+                    min_ms=self.plan_ns_min / 1e6,
+                    p50_ms=float(p50) / 1e6, p99_ms=float(p99) / 1e6,
+                    max_ms=self.plan_ns_max / 1e6)
+
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self) if f.name != "plan_ns"}
+        out["plan_latency"] = self.plan_latency()
+        return out
 
     def merge(self, other: "PlannerStats") -> "PlannerStats":
-        return PlannerStats(*(a + b for a, b in
-                              zip(dataclasses.astuple(self),
-                                  dataclasses.astuple(other))))
+        out = PlannerStats(
+            *(getattr(self, f) + getattr(other, f)
+              for f in ("hits", "misses", "evictions", "dispatches",
+                        "groups_planned", "plan_calls")))
+        out.plan_ns = self.plan_ns + other.plan_ns
+        if self.plan_calls and other.plan_calls:
+            out.plan_ns_min = min(self.plan_ns_min, other.plan_ns_min)
+        else:
+            out.plan_ns_min = (self.plan_ns_min if self.plan_calls
+                               else other.plan_ns_min)
+        out.plan_ns_max = max(self.plan_ns_max, other.plan_ns_max)
+        return out
 
 
 class ExecutableCache:
@@ -556,22 +604,15 @@ class BatchedPlanner:
             outs.append(exe(*args))
         return outs
 
-    def plan(self, fleets: Sequence[DeviceFleet],
-             t_frees: Sequence[float] | None = None,
-             pad_users: bool = True, m_pad: int | None = None,
-             g_pad: int | None = None) -> list[Schedule]:
-        """Solve every group; returns one :class:`Schedule` per fleet.
-
-        ``m_pad``/``g_pad`` pin the padded user width / group count so a
-        caller issuing many variable-size batches (the OG level solver)
-        hits a single compiled shape; by default both round up to a power
-        of two.  Padding never changes results: masked users sum in as
-        exact zeros (see ``_pow2_sum``) and filler groups are dropped."""
+    def _dispatch(self, fleets: Sequence[DeviceFleet],
+                  t_frees: Sequence[float], pad_users: bool,
+                  m_pad: int | None, g_pad: int | None) -> list[tuple]:
+        """Issue every device dispatch for a :meth:`plan` call and return
+        the in-flight chunks as ``(start, n_real, outs_device)`` — the
+        device→host transfer and winner reconstruction are deferred to
+        :meth:`_materialize` (JAX dispatch is asynchronous, so work for
+        every chunk is in flight before anything syncs)."""
         G = len(fleets)
-        if G == 0:
-            return []
-        if t_frees is None:
-            t_frees = [0.0] * G
         m_max = max(fl.M for fl in fleets)
         if m_pad is not None:
             assert m_pad >= m_max
@@ -582,7 +623,6 @@ class BatchedPlanner:
         # chunk + bucket the group dimension: large batches split into
         # fixed-size chunks, small ones pad to a power of two — every call
         # lands on one of O(log) compiled shapes instead of one per G
-        schedules: list[Schedule] = []
         chunk = self.group_chunk
         if G > chunk:
             starts = range(0, G, chunk)
@@ -597,6 +637,7 @@ class BatchedPlanner:
             # stable compiled shape
             chunk = _bucket(G, 1) if pad_users else G
         pad_fleet = fleets[0].subset(np.arange(0))      # zero-user filler
+        chunks = []
         for s in starts:
             part = list(fleets[s:s + chunk])
             tfs = list(t_frees[s:s + chunk])
@@ -604,7 +645,12 @@ class BatchedPlanner:
             while len(part) < chunk:                    # ragged last chunk
                 part.append(pad_fleet)
                 tfs.append(0.0)
-            outs = self._run(part, tfs, m_pad)
+            chunks.append((s, n_real, self._run(part, tfs, m_pad)))
+        return chunks
+
+    def _materialize(self, fleets, t_frees, chunks) -> list[Schedule]:
+        schedules: list[Schedule] = []
+        for s, n_real, outs in chunks:
             # ONE device→host transfer per output array, not one tiny
             # jnp slice per group: per-group indexing of jnp arrays was
             # ~90% of warm planning time at M = 80 ("E" stays on device —
@@ -616,6 +662,41 @@ class BatchedPlanner:
                 schedules.append(self._reconstruct(
                     fleets[s + g], float(t_frees[s + g]), outs, g))
         return schedules
+
+    def plan(self, fleets: Sequence[DeviceFleet],
+             t_frees: Sequence[float] | None = None,
+             pad_users: bool = True, m_pad: int | None = None,
+             g_pad: int | None = None) -> list[Schedule]:
+        """Solve every group; returns one :class:`Schedule` per fleet.
+
+        ``m_pad``/``g_pad`` pin the padded user width / group count so a
+        caller issuing many variable-size batches (the OG level solver)
+        hits a single compiled shape; by default both round up to a power
+        of two.  Padding never changes results: masked users sum in as
+        exact zeros (see ``_pow2_sum``) and filler groups are dropped."""
+        return self.plan_async(fleets, t_frees, pad_users=pad_users,
+                               m_pad=m_pad, g_pad=g_pad).get()
+
+    def plan_async(self, fleets: Sequence[DeviceFleet],
+                   t_frees: Sequence[float] | None = None,
+                   pad_users: bool = True, m_pad: int | None = None,
+                   g_pad: int | None = None) -> "PendingPlans":
+        """Like :meth:`plan`, but returns a :class:`PendingPlans` handle
+        with the results still device-resident: the dispatches are in
+        flight, the device→host transfer and winner reconstruction wait
+        until :meth:`PendingPlans.get`.  Callers with several independent
+        batches (the OG level solver's per-length buckets, the tenancy
+        what-if's paired trial solves) dispatch them ALL before paying any
+        host sync, overlapping device work instead of serializing on each
+        conversion.  ``get()`` is bit-identical to a direct ``plan``."""
+        t0 = time.perf_counter_ns()
+        G = len(fleets)
+        if G == 0:
+            return PendingPlans(self, [], [], [], t0)
+        if t_frees is None:
+            t_frees = [0.0] * G
+        chunks = self._dispatch(fleets, t_frees, pad_users, m_pad, g_pad)
+        return PendingPlans(self, list(fleets), list(t_frees), chunks, t0)
 
     # ---- host-side winner reconstruction ------------------------------
     def _reconstruct(self, fleet: DeviceFleet, t_free: float, outs,
@@ -660,6 +741,37 @@ class BatchedPlanner:
                         dict(device=dev, uplink=up, edge=edge_e), eu,
                         gpu_busy=edge_phi / f_e, edge_phi=edge_phi,
                         edge_psi=edge_psi)
+
+
+class PendingPlans:
+    """A dispatched-but-unmaterialized :meth:`BatchedPlanner.plan_async`
+    batch.  The device outputs stay resident until :meth:`get`, which
+    performs the single host transfer + winner reconstruction (memoized —
+    repeated ``get`` returns the same list).  The planner's plan-latency
+    sample covers dispatch through first materialization, so async callers
+    report the latency they actually experienced."""
+
+    def __init__(self, planner: BatchedPlanner, fleets, t_frees, chunks,
+                 t0_ns: int):
+        self._planner = planner
+        self._fleets = fleets
+        self._t_frees = t_frees
+        self._chunks = chunks
+        self._t0_ns = t0_ns
+        self._result: list[Schedule] | None = None
+
+    @property
+    def ready(self) -> bool:
+        return self._result is not None
+
+    def get(self) -> list[Schedule]:
+        if self._result is None:
+            self._result = self._planner._materialize(
+                self._fleets, self._t_frees, self._chunks)
+            self._planner.stats.record_latency(
+                time.perf_counter_ns() - self._t0_ns)
+            self._chunks = None          # free the device buffers
+        return self._result
 
 
 def jdob_schedule(profile: TaskProfile,

@@ -108,6 +108,8 @@ class OnlineResult:
     upload_error: float = 0.0
     channel_replans: int = 0
     realized_late: int = 0
+    #: flushes re-priced against staggered upload starts (``channel_stagger``)
+    stagger_replans: int = 0
     #: gap probes skipped because the per-batch busy-time lower bound
     #: could not fit the idle window (ROADMAP timeline follow-up (b))
     pruned_probes: int = 0
@@ -183,10 +185,13 @@ class OnlineScheduler:
                  timeline: GpuTimeline | None = None,
                  channel: ChannelModel | None = None,
                  channel_aware: bool = True,
+                 channel_stagger: bool = False,
                  channel_replan_limit: int = 1,
                  dvfs_slack_frac: float = 0.0,
-                 dvfs_quiescent: bool = True):
+                 dvfs_quiescent: bool = True,
+                 batch_window: float = 0.0):
         assert policy in POLICIES, f"unknown policy {policy!r}"
+        assert batch_window >= 0.0
         assert occupancy in OCCUPANCY_MODES, \
             f"unknown occupancy mode {occupancy!r}"
         assert 0.0 <= dvfs_slack_frac <= 1.0
@@ -214,6 +219,14 @@ class OnlineScheduler:
         #: the nominal solo rates (False — the baseline the channel bench
         #: measures channel-aware planning against)
         self.channel_aware = channel_aware
+        #: stagger-aware pricing (ROADMAP plan/realize follow-up (c)): the
+        #: contended snapshot assumes the WHOLE batch uploads concurrently
+        #: from the flush instant, but uploads really start staggered at
+        #: each device's compute finish — once the first plan commits the
+        #: f_m's, one bounded re-plan re-prices Eqs. 3-4 at the channel's
+        #: staggered-rate view of those starts (never more pessimistic
+        #: than the concurrent snapshot, so the plan only tightens)
+        self.channel_stagger = channel_stagger
         #: bounded actualization: how many re-plans one flush may take
         #: when realized rates diverge beyond what edge DVFS can absorb
         self.channel_replan_limit = channel_replan_limit
@@ -228,6 +241,12 @@ class OnlineScheduler:
         # per-partition single-sample busy time at f_e,max — the φ part of
         # the per-batch busy-time lower bound gap-probe pruning uses
         self._phi1 = (_phi_base[:-1] + _phi_slope[:-1]) / edge.f_max
+        #: epsilon batching window for :meth:`step_batch` (s): an arrival
+        #: landing within this of the armed flush time is absorbed into
+        #: the waiting batch instead of flushing first.  0 (default) keeps
+        #: :meth:`run_batched` bit-identical to the event-at-a-time
+        #: :meth:`run` — the parity the scale tests pin.
+        self.batch_window = batch_window
         self._seq = itertools.count()
         self._arrivals: list = []                 # heap of pending arrivals
         self._timers: list = []                   # heap of gpu-free events
@@ -267,6 +286,7 @@ class OnlineScheduler:
         self._flush_rates = None                  # effective-rate snapshot
         self.upload_error = 0.0
         self.channel_replans = 0
+        self.stagger_replans = 0
         self.realized_late = 0
         self.probe_prunes = 0
         self.gpu_free = 0.0                       # mirror: timeline horizon
@@ -470,6 +490,39 @@ class OnlineScheduler:
                 # nothing could plan behind it)
                 self._slot_stretch_orig = pre
         return s
+
+    def _stagger_replan(self, now: float, arrivals: list[OnlineArrival],
+                        idx: np.ndarray, sub: DeviceFleet, s: Schedule
+                        ) -> tuple[DeviceFleet, Schedule]:
+        """One bounded re-plan at the channel's stagger-aware rates
+        (``channel_stagger``).  The first plan committed the device
+        frequencies, hence each member's compute finish — the actual,
+        STAGGERED upload starts.  Pricing those against the channel
+        (:meth:`~repro.core.channel.ChannelModel.staggered_rates`) is
+        never more pessimistic than the flush-instant concurrent
+        snapshot, so the re-plan can only recover headroom; the updated
+        ``sub`` flows into actualization so planned-vs-realized is judged
+        against the rates the plan actually priced."""
+        ch = self.channel
+        if (not self.channel_stagger or ch is None or ch.static
+                or not self.channel_aware or not s.offload.any()):
+            return sub, s
+        comp, nbytes, solo, keys = self._upload_geometry(s, idx, now)
+        r_stag = ch.staggered_rates(solo, comp, nbytes, keys=keys)
+        rates = np.array(sub.rate, np.float64)
+        if np.allclose(r_stag, rates[s.offload], rtol=1e-9, atol=0.0):
+            return sub, s                # stagger bought nothing: keep s
+        rates[s.offload] = r_stag
+        sub2 = dataclasses.replace(sub, rate=rates)
+        s2 = self._plan(sub2, self._slot_tf)
+        if (np.isfinite(self._slot_limit) and s2.offload.any()
+                and now + s2.t_free_end > self._slot_limit + 1e-12):
+            # the re-plan outgrew its gap-filled window (a faster uplink
+            # can justify a bigger batch): keep the plan that fits
+            return sub, s
+        self._flush_rates = rates
+        self.stagger_replans += 1
+        return sub2, s2
 
     def _pending_work(self) -> bool:
         """Is any traffic still pending that could flush behind the
@@ -697,7 +750,9 @@ class OnlineScheduler:
                 sub.rate, now, keys=[(self.tenant_id, int(u)) for u in idx])
             sub = dataclasses.replace(sub, rate=eff)
             self._flush_rates = eff
-        s = self._post_plan(now, q, self._plan_slot(now, sub, q))
+        s = self._plan_slot(now, sub, q)
+        sub, s = self._stagger_replan(now, q, idx, sub, s)
+        s = self._post_plan(now, q, s)
         s = self._actualize(now, q, idx, sub, s)
         # np.add.at, not fancy-index +=: a user may appear twice in a batch
         np.add.at(self.per_user_energy, idx, s.per_user_energy)
@@ -855,6 +910,99 @@ class OnlineScheduler:
             pass
         return self.result()
 
+    # ---- batched event loop (the fleet-scale path) ----------------------
+    def _drain_arrivals(self, eps: float, gate=None,
+                        admit=None) -> float | None:
+        """Pop every arrival the event-at-a-time loop would pop before the
+        next flush — plus, with ``eps`` > 0, arrivals landing within
+        ``eps`` of the armed flush time — in ONE pass, maintaining the
+        policy time incrementally (O(1) per absorbed arrival instead of
+        :meth:`_policy_time`'s O(queue) rescan per event).  Returns the
+        armed policy time for the drained queue, or ``None`` when the
+        caller must not flush: either nothing is left anywhere, or
+        ``gate`` stopped the drain (multi-tenant arbitration — another
+        tenant's event is due first; re-arbitrate).
+
+        ``gate(t) -> bool`` is consulted with each candidate arrival time
+        before popping; returning False ends the drain (the arbiter's
+        "would this tenant still win?" predicate — it may fire other
+        tenants' timers as a side effect, which is why it is only called
+        on times actually consumed or refused, never speculatively).
+        ``admit(a) -> bool`` is consulted after each pop; returning False
+        removes the arrival from the queue again (admission fallback) and
+        the policy time is re-derived by full rescan — removals break the
+        running-min argument, incremental updates don't.
+
+        At ``eps == 0`` the absorb condition is exactly :meth:`step`'s
+        arrival-wins-ties comparison, and each incremental policy update
+        equals the full rescan (running min over the same floats; the
+        lastcall ``− 1e-6`` commutes with ``min`` because float
+        subtraction is monotone) — so the drain is bit-identical to
+        stepping arrivals one at a time."""
+        q, arr = self._queue, self._arrivals
+        pol = self.policy
+        t_policy = self._policy_time() if q else None
+        while True:
+            if not arr:
+                return t_policy                     # None when q empty too
+            t = arr[0][0]
+            if q and t > t_policy + eps:
+                return t_policy                     # policy says flush
+            if gate is not None and not gate(t):
+                return None                         # arbitration capped
+            t, _, a = heapq.heappop(arr)
+            self._fire_timers(t)
+            self.now = t
+            q.append(a)
+            if admit is not None and not admit(a):
+                q.pop()                             # admission fallback
+                t_policy = self._policy_time() if q else None
+                continue
+            if t_policy is None:                    # queue was just seeded
+                t_policy = self._policy_time()
+            elif pol == "immediate":
+                t_policy = t
+            elif pol == "slack":
+                t_policy = min(t_policy, a.arrival +
+                               (1.0 - self.keep_frac) * a.rel_deadline)
+            elif pol == "lastcall":
+                t_policy = min(t_policy, a.abs_deadline
+                               - float(self._l_min[a.user]) - 1e-6)
+            # window: pinned by q[0], unchanged as the queue grows
+
+    def step_batch(self):
+        """Batched event processing: drain the whole arrival run preceding
+        the next flush in one pass, then fire that flush.  Returns the
+        :class:`FlushEvent` (every drained arrival is inside it) or
+        ``None`` when the scheduler is empty.  With ``batch_window == 0``
+        a :meth:`run_batched` drive is bit-identical to :meth:`run` —
+        same flushes, same batches, same accounting — it just takes one
+        pass per flush instead of one per event."""
+        t_policy = self._drain_arrivals(self.batch_window)
+        if t_policy is None:
+            self._fire_timers(np.inf)
+            return None
+        if self._planner is not None:
+            # warm the flush's batch shape on the background compile pool
+            # (no-op when cached) so a first-seen size overlaps its XLA
+            # compile with the timer/bookkeeping work below, and the next
+            # flush of this size class pays nothing
+            from .jdob import _bucket
+            self._planner.prefetch(
+                _bucket(len(self._queue), self._planner.min_user_bucket), 1)
+        t_fire = max(t_policy, self._queue[-1].arrival)
+        self._fire_timers(t_fire)
+        return self._flush(t_fire)
+
+    def run_batched(self) -> OnlineResult:
+        """Drain every pending event through the batched loop and
+        summarize.  Bit-identical to :meth:`run` at ``batch_window=0``
+        (parity-gated in tests/core/test_scale.py); an epsilon window
+        trades a bounded flush deferral for larger batches under load."""
+        while self.step_batch() is not None:
+            pass
+        return self.result()
+
     def result(self) -> OnlineResult:
         return OnlineResult(float(self.per_user_energy.sum()),
                             len(self._batches), list(self._batches),
@@ -863,6 +1011,7 @@ class OnlineScheduler:
                             upload_error=self.upload_error,
                             channel_replans=self.channel_replans,
                             realized_late=self.realized_late,
+                            stagger_replans=self.stagger_replans,
                             pruned_probes=self.probe_prunes)
 
 
@@ -875,7 +1024,10 @@ def simulate_online(arrivals: list[OnlineArrival],
                     service: PlannerService | None = None,
                     occupancy: str = "serialized",
                     channel: ChannelModel | None = None,
-                    channel_aware: bool = True) -> OnlineResult:
+                    channel_aware: bool = True,
+                    channel_stagger: bool = False,
+                    batch_window: float = 0.0,
+                    batch_events: bool = False) -> OnlineResult:
     """One-shot simulation: submit a whole trace, run to completion.  A
     thin driver over :class:`OnlineScheduler`; under serialized occupancy
     (the default) with a static channel, bit-identical to
@@ -888,9 +1040,11 @@ def simulate_online(arrivals: list[OnlineArrival],
                             window=window, keep_frac=keep_frac, rho=rho,
                             inner=inner, service=service,
                             occupancy=occupancy, channel=channel,
-                            channel_aware=channel_aware)
+                            channel_aware=channel_aware,
+                            channel_stagger=channel_stagger,
+                            batch_window=batch_window)
     sched.submit_many(sorted(arrivals, key=lambda a: a.arrival))
-    return sched.run()
+    return sched.run_batched() if batch_events else sched.run()
 
 
 def simulate_online_reference(arrivals: list[OnlineArrival],

@@ -87,7 +87,8 @@ class PlannerService:
                  max_level_buckets: int = 2, bucket_stride: int = 4,
                  single_bucket_max: int = 64,
                  max_cached_shapes: int | None = None,
-                 cache: ExecutableCache | None = None):
+                 cache: ExecutableCache | None = None,
+                 default_cohort_size: int | None = None):
         assert max_level_buckets >= 1 and bucket_stride >= 2
         self.profile = profile
         self.edge = edge
@@ -98,6 +99,9 @@ class PlannerService:
         self.max_level_buckets = max_level_buckets
         self.bucket_stride = bucket_stride
         self.single_bucket_max = single_bucket_max
+        #: fleets above this size route through hierarchical cohort
+        #: planning in :meth:`plan_fleet`; None = always exact OG
+        self.default_cohort_size = default_cohort_size
         self._owns_cache = cache is None and max_cached_shapes is not None
         if cache is not None:
             self.cache = cache
@@ -141,7 +145,8 @@ class PlannerService:
                 min_group_bucket=self.min_group_bucket,
                 max_level_buckets=self.max_level_buckets,
                 bucket_stride=self.bucket_stride,
-                single_bucket_max=self.single_bucket_max, cache=self.cache)
+                single_bucket_max=self.single_bucket_max, cache=self.cache,
+                default_cohort_size=self.default_cohort_size)
             svc._family = self._family
             self._family[key] = svc
         return svc
@@ -167,6 +172,32 @@ class PlannerService:
         if spec is None:
             return None
         return self.planner(**spec)
+
+    def plan_fleet(self, fleet, inner: Callable | None = None, *,
+                   t_free: float = 0.0, cohort_size: int | None = None,
+                   merge_window: int = 4, timeline=None):
+        """Fleet-size-aware OG entry point: exact
+        :func:`~repro.core.grouping.optimal_grouping` when the fleet fits a
+        single cohort (or no cohort size is configured), hierarchical
+        :func:`~repro.core.cohort.cohort_grouping` above it.  The cohort
+        threshold is ``cohort_size`` when given, else this service's
+        ``default_cohort_size``; ``None`` for both means always-exact.
+        This is THE planning call the serving layer makes — it inherits the
+        service's rho, shape policy and compile cache."""
+        # local imports: grouping/cohort import this module at top level
+        from .cohort import cohort_grouping
+        from .grouping import optimal_grouping
+        from .jdob import jdob_schedule
+        inner = jdob_schedule if inner is None else inner
+        C = self.default_cohort_size if cohort_size is None else cohort_size
+        if C is None or fleet.M <= C:
+            return optimal_grouping(self.profile, fleet, self.edge, inner,
+                                    t_free=t_free, rho=self.rho,
+                                    service=self, timeline=timeline)
+        return cohort_grouping(self.profile, fleet, self.edge, inner,
+                               t_free=t_free, rho=self.rho, cohort_size=C,
+                               merge_window=merge_window, service=self,
+                               timeline=timeline)
 
     # ---- shape-bucket policy -------------------------------------------
     @staticmethod

@@ -131,8 +131,10 @@ class _TenantScheduler(OnlineScheduler):
                          timeline=arbiter.timeline,
                          channel=arbiter.channel,
                          channel_aware=arbiter.channel_aware,
+                         channel_stagger=arbiter.channel_stagger,
                          dvfs_slack_frac=arbiter.dvfs_slack_frac,
-                         dvfs_quiescent=arbiter.dvfs_quiescent)
+                         dvfs_quiescent=arbiter.dvfs_quiescent,
+                         batch_window=arbiter.batch_window)
         self.arbiter = arbiter
         self.tid = self.tenant_id = tid
         self._pending_preempt: list[Reservation] | None = None
@@ -175,9 +177,16 @@ class _TenantScheduler(OnlineScheduler):
         # what-if: does the queued occupancy force deadline-infeasible
         # offloads?  (J-DOB feasible sets shrink monotonically in t_free,
         # so fewer offloads at t0 than at t1 means members were forced
-        # local by the queue ahead, not by economics.)
-        s0 = super()._plan(sub, t0)
-        s1 = super()._plan(sub, t1)
+        # local by the queue ahead, not by economics.)  Both residuals go
+        # down in ONE async dispatch — the device works on the pair while
+        # the host waits once, instead of serializing two plan() syncs
+        # (padding invariance keeps the paired solve bit-identical to two
+        # solo ones)
+        if self._planner is not None:
+            s0, s1 = self._planner.plan_async([sub, sub], [t0, t1]).get()
+        else:
+            s0 = super()._plan(sub, t0)
+            s1 = super()._plan(sub, t1)
         if s1.batch_size <= s0.batch_size:
             self._trial_plan = (t0, s0)
             return t0
@@ -281,6 +290,7 @@ class MultiTenantResult:
     upload_error: float = 0.0
     channel_replans: int = 0
     realized_late: int = 0
+    stagger_replans: int = 0         # stagger-aware re-priced flushes
     pruned_probes: int = 0           # gap probes skipped (follow-up (b))
     unstretches: int = 0             # quiescent stretches rolled back (a)
 
@@ -345,8 +355,9 @@ class MultiTenantScheduler:
                  preemption: bool = True, admission: str = "admit",
                  history: int | None = None, occupancy: str = "serialized",
                  channel: ChannelModel | None = None,
-                 channel_aware: bool = True,
+                 channel_aware: bool = True, channel_stagger: bool = False,
                  dvfs_slack_frac: float = 0.0, dvfs_quiescent: bool = True,
+                 batch_window: float = 0.0,
                  on_flush=None, on_replan=None, on_gpu_free=None,
                  on_degrade=None):
         assert len(tenants) >= 1
@@ -367,8 +378,14 @@ class MultiTenantScheduler:
         #: identical to the pre-channel path).
         self.channel = channel
         self.channel_aware = channel_aware
+        self.channel_stagger = channel_stagger
         self.dvfs_slack_frac = dvfs_slack_frac
         self.dvfs_quiescent = dvfs_quiescent
+        assert batch_window >= 0.0
+        #: epsilon batching window for :meth:`step_batch`, threaded to
+        #: every tenant scheduler (0 keeps :meth:`run_batched`
+        #: bit-identical to :meth:`run`)
+        self.batch_window = batch_window
         self.timeline = GpuTimeline(mode=occupancy)
         self.ledger = self.timeline          # PR-3 name, same object
         self.on_degrade = on_degrade
@@ -618,6 +635,78 @@ class MultiTenantScheduler:
             pass
         return self.result()
 
+    def step_batch(self):
+        """Batched event processing: the winning tenant (same earliest-
+        event, lowest-index arbitration as :meth:`step`) absorbs its
+        whole arrival run in one pass and flushes — instead of paying a
+        full cross-tenant arbitration (N × O(queue) policy rescans) per
+        EVENT, the arbiter pays it once per batch.  The drain is capped
+        exactly where the event-at-a-time loop would hand control to
+        another tenant: the winner only consumes events strictly earlier
+        than every lower-index tenant's next event and no later than
+        every higher-index tenant's — so at ``batch_window == 0``
+        :meth:`run_batched` is bit-identical to :meth:`run`.
+
+        Returns ``(tid, ev)`` — ``ev`` is the :class:`FlushEvent`, or
+        ``None`` when arbitration capped the step after it only drained
+        arrivals — or ``None`` when every tenant is drained."""
+        times = [sch.next_event_time() for sch in self.schedulers]
+        best_t, best_k = None, None
+        for k, t in enumerate(times):
+            if t is not None and (best_t is None or t < best_t):
+                best_t, best_k = t, k
+        if best_k is None:
+            for sch in self.schedulers:
+                sch._fire_timers(np.inf)
+            return None
+        sch = self.schedulers[best_k]
+        others = [o for o in self.schedulers if o is not sch]
+        # other tenants' state cannot change while the winner only pops
+        # arrivals (cross-tenant timers have no internal side effects),
+        # so the caps computed here stay valid for the whole drain
+        lo = min((t for t in times[:best_k] if t is not None),
+                 default=np.inf)
+        hi = min((t for t in times[best_k + 1:] if t is not None),
+                 default=np.inf)
+
+        def gate(t):
+            # mirror of step()'s tie-break: lower-index tenants win ties,
+            # higher-index ones only strictly-earlier events
+            if t >= lo or t > hi:
+                return False
+            for o in others:        # cross-tenant timer chronology
+                o._fire_timers(t)
+            return True
+
+        admit = None
+        if self.admission != "admit":
+            def admit(a):
+                # step()'s event-time admission re-check, per absorbed
+                # arrival
+                if self._no_feasible_slot(best_k, a):
+                    self.admitted[best_k] -= 1
+                    self._fallback(best_k, a)
+                    return False
+                return True
+
+        t_policy = sch._drain_arrivals(sch.batch_window, gate, admit)
+        ev = None
+        if t_policy is not None:
+            t_fire = max(t_policy, sch._queue[-1].arrival)
+            if gate(t_fire):
+                sch._fire_timers(t_fire)
+                ev = sch._flush(t_fire)
+        self.now = max(self.now, sch.now)
+        return best_k, ev
+
+    def run_batched(self) -> MultiTenantResult:
+        """Drain every tenant through the batched loop and summarize —
+        bit-identical to :meth:`run` at ``batch_window == 0`` (parity-
+        gated in tests/core/test_scale.py)."""
+        while self.step_batch() is not None:
+            pass
+        return self.result()
+
     def result(self) -> MultiTenantResult:
         return MultiTenantResult(
             tenants=[TenantResult(
@@ -645,6 +734,8 @@ class MultiTenantScheduler:
             channel_replans=sum(s.channel_replans
                                 for s in self.schedulers),
             realized_late=sum(s.realized_late for s in self.schedulers),
+            stagger_replans=sum(s.stagger_replans
+                                for s in self.schedulers),
             pruned_probes=sum(s.probe_prunes for s in self.schedulers),
             unstretches=self.timeline.unstretches)
 

@@ -59,9 +59,17 @@ def _verify(report_logits, executor, reqs) -> float:
     return float(np.abs(report_logits - want).max())
 
 
+def _plan_latency_line(service) -> None:
+    lat = service.stats().plan_latency()
+    if lat["count"]:
+        print(f"plan latency: {lat['count']} dispatch(es), "
+              f"min {lat['min_ms']:.2f} ms / p50 {lat['p50_ms']:.2f} ms / "
+              f"p99 {lat['p99_ms']:.2f} ms / max {lat['max_ms']:.2f} ms")
+
+
 def _serve_offline(server, fleet, profile, edge, reqs, args) -> dict:
     t0 = time.perf_counter()
-    report = server.serve(reqs)
+    report = server.serve(reqs, cohort_size=args.cohort_size)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
@@ -85,7 +93,10 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
                                  window=args.window,
                                  occupancy=args.occupancy,
                                  channel=_build_channel(args),
-                                 channel_aware=not args.channel_nominal)
+                                 channel_aware=not args.channel_nominal,
+                                 channel_stagger=args.channel_stagger,
+                                 batch_window=args.batch_window,
+                                 batch_events=args.batch_events)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
@@ -112,7 +123,8 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
         print(f"channel={report.channel}: realized-vs-planned upload error "
               f"Σ|Δ| = {report.upload_error * 1e3:.2f} ms, "
               f"{report.channel_replans} actualization replan(s), "
-              f"{report.realized_late} realized-late request(s)")
+              f"{report.realized_late} realized-late request(s), "
+              f"{report.stagger_replans} stagger re-price(s)")
     err = _verify(report.logits, server.executor, reqs)
     print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
     assert err < 1e-3
@@ -125,6 +137,7 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
     print(f"planner service: {stats.dispatches} dispatches, "
           f"{stats.hits} cache hits / {stats.misses} compiles / "
           f"{stats.evictions} evictions")
+    _plan_latency_line(server.service)
     return dict(energy=report.energy, lc=lc.energy, err=err,
                 violations=report.violations,
                 n_flushes=len(report.flushes))
@@ -134,6 +147,8 @@ def _serve_tenants(args) -> dict:
     """N tenants with distinct profiles/deadlines on one shared GPU."""
     import jax.numpy as jnp
     rng = np.random.default_rng(args.seed)
+    arr_rng = (rng if args.arrival_seed is None
+               else np.random.default_rng(args.arrival_seed))
     models, streams = [], []
     for t in range(args.tenants):
         cfg = ARCHS[args.arch].reduced()
@@ -147,7 +162,7 @@ def _serve_tenants(args) -> dict:
         models.append(TenantModel(f"tenant{t}", cfg, params, profile, fleet,
                                   edge, policy=args.policy,
                                   window=args.window))
-        arr = np.cumsum(rng.exponential(1.0 / args.rate, args.users))
+        arr = np.cumsum(arr_rng.exponential(1.0 / args.rate, args.users))
         streams.append([Request(user=m,
                                 tokens=rng.integers(0, cfg.vocab_size, seq,
                                                     dtype=np.int32),
@@ -159,9 +174,11 @@ def _serve_tenants(args) -> dict:
                                admission=args.admission,
                                occupancy=args.occupancy,
                                channel=_build_channel(args),
-                               channel_aware=not args.channel_nominal)
+                               channel_aware=not args.channel_nominal,
+                               channel_stagger=args.channel_stagger,
+                               batch_window=args.batch_window)
     t0 = time.perf_counter()
-    report = server.serve_online(streams)
+    report = server.serve_online(streams, batch_events=args.batch_events)
     serve_s = time.perf_counter() - t0
     print(f"arch={args.arch}  tenants={args.tenants}  M={args.users}/tenant  "
           f"policy={args.policy}  admission={args.admission}  "
@@ -204,13 +221,15 @@ def _serve_tenants(args) -> dict:
         print(f"channel={res.channel}: realized-vs-planned upload error "
               f"Σ|Δ| = {res.upload_error * 1e3:.2f} ms, "
               f"{res.channel_replans} actualization replan(s), "
-              f"{res.realized_late} realized-late request(s)")
+              f"{res.realized_late} realized-late request(s), "
+              f"{res.stagger_replans} stagger re-price(s)")
     print(f"co-inference vs monolithic max |Δlogit| = {max_err:.2e} "
           f"(per tenant, served rows)")
     assert max_err < 1e-3
     stats = server.service.stats()
     print(f"planner service family: {stats.dispatches} dispatches, "
           f"{stats.hits} cache hits / {stats.misses} compiles")
+    _plan_latency_line(server.service)
     return dict(energy=report.energy, violations=report.violations,
                 preemptions=report.preemptions, err=max_err,
                 tenants=args.tenants)
@@ -223,6 +242,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--beta", type=float, nargs=2, default=[2.0, 8.0])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival-seed", type=int, default=None,
+                    help="deterministic seed for the Poisson arrival draws "
+                         "alone (default: --seed) — lets load traces vary "
+                         "while weights/tokens stay pinned, and vice versa")
     ap.add_argument("--online", action="store_true",
                     help="event-driven serving over a Poisson arrival stream")
     ap.add_argument("--rate", type=float, default=100.0,
@@ -230,6 +253,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--policy", default="slack",
                     choices=["immediate", "window", "slack", "lastcall"])
     ap.add_argument("--window", type=float, default=0.02)
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="hierarchical planning threshold: fleets larger "
+                         "than this split into deadline-sorted cohorts "
+                         "merged by a boundary DP (offline serving; "
+                         "None = always-exact OG)")
+    ap.add_argument("--batch-events", action="store_true",
+                    help="drain the event queue through the fleet-scale "
+                         "batched loop (bit-identical at "
+                         "--batch-window 0)")
+    ap.add_argument("--batch-window", type=float, default=0.0,
+                    help="epsilon batching window (s) for --batch-events: "
+                         "arrivals this close to the policy flush time "
+                         "join the same drain pass")
+    ap.add_argument("--channel-stagger", action="store_true",
+                    help="re-price each flush against staggered upload "
+                         "starts (devices finish local blocks at "
+                         "different times) instead of the all-concurrent "
+                         "contention snapshot")
     ap.add_argument("--tenants", type=int, default=1,
                     help="co-resident models sharing the GPU (>1 switches "
                          "to the tenancy subsystem)")
@@ -271,7 +312,11 @@ def main(argv=None) -> dict:
     server = CoInferenceServer(cfg, params, profile, fleet, edge)
 
     rng = np.random.default_rng(args.seed)
-    arrivals = (np.cumsum(rng.exponential(1.0 / args.rate, args.users))
+    # a distinct --arrival-seed re-rolls the load trace only; the default
+    # shares the stream (byte-stable with previous releases)
+    arr_rng = (rng if args.arrival_seed is None
+               else np.random.default_rng(args.arrival_seed))
+    arrivals = (np.cumsum(arr_rng.exponential(1.0 / args.rate, args.users))
                 if args.online else np.zeros(args.users))
     reqs = [Request(user=m,
                     tokens=rng.integers(0, cfg.vocab_size, args.seq,

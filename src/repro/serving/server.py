@@ -37,7 +37,7 @@ from repro.core import (ChannelModel, DeviceFleet, EdgeProfile, FlushEvent,
                         MultiTenantResult, MultiTenantScheduler,
                         OnlineArrival, OnlineResult, OnlineScheduler,
                         PlannerService, Schedule, TaskProfile, Tenant,
-                        jdob_plus, jdob_schedule, optimal_grouping)
+                        jdob_plus, jdob_schedule)
 from .engine import BlockwiseExecutor
 
 
@@ -88,6 +88,7 @@ class OnlineServeReport:
     upload_error: float = 0.0
     channel_replans: int = 0
     realized_late: int = 0
+    stagger_replans: int = 0
     pruned_probes: int = 0
 
 
@@ -156,15 +157,23 @@ class CoInferenceServer:
         return run_partitioned(self.executor, self.cfg.vocab_size,
                                requests, sched)
 
-    def serve(self, requests: list[Request], t_free: float = 0.0
+    def serve(self, requests: list[Request], t_free: float = 0.0, *,
+              cohort_size: int | None = None, merge_window: int = 4
               ) -> ServeReport:
+        """One-shot wave: OG-group, plan and execute every request.
+
+        ``cohort_size`` bounds the exact OG problem size: fleets larger
+        than it are planned hierarchically (deadline-sorted cohorts +
+        boundary-merge DP — :func:`~repro.core.cohort.cohort_grouping`);
+        fleets that fit stay on the exact path, bit-identical to the
+        previous releases.  ``None`` defers to the planner service's
+        ``default_cohort_size``."""
         fleet = dataclasses.replace(
             self.fleet,
             deadline=np.asarray([r.deadline for r in requests]))
-        grouped = optimal_grouping(self.profile, fleet, self.edge,
-                                   inner=self.inner, t_free=t_free,
-                                   rho=self.rho, planner=self.planner,
-                                   service=self.service)
+        grouped = self.service.plan_fleet(fleet, self.inner, t_free=t_free,
+                                          cohort_size=cohort_size,
+                                          merge_window=merge_window)
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)
@@ -183,6 +192,8 @@ class CoInferenceServer:
                   keep_frac: float = 0.7, occupancy: str = "serialized",
                   channel: ChannelModel | None = None,
                   channel_aware: bool = True,
+                  channel_stagger: bool = False,
+                  batch_window: float = 0.0,
                   on_flush=None, on_gpu_free=None) -> OnlineScheduler:
         """An event-driven scheduler wired to this server's fleet and
         planner service (compiled shapes shared with ``serve``).
@@ -200,6 +211,8 @@ class CoInferenceServer:
                                inner=self.inner, service=self.service,
                                occupancy=occupancy, channel=channel,
                                channel_aware=channel_aware,
+                               channel_stagger=channel_stagger,
+                               batch_window=batch_window,
                                on_flush=on_flush, on_gpu_free=on_gpu_free)
 
     def serve_online(self, requests: list[Request], *,
@@ -207,7 +220,10 @@ class CoInferenceServer:
                      keep_frac: float = 0.7,
                      occupancy: str = "serialized",
                      channel: ChannelModel | None = None,
-                     channel_aware: bool = True) -> OnlineServeReport:
+                     channel_aware: bool = True,
+                     channel_stagger: bool = False,
+                     batch_window: float = 0.0,
+                     batch_events: bool = False) -> OnlineServeReport:
         """Serve requests arriving over time (``Request.arrival``).
 
         Each policy flush executes its planned batch on the model the
@@ -215,7 +231,12 @@ class CoInferenceServer:
         batches the suffix — with GPU occupancy threaded between flushes
         through the scheduler's :class:`~repro.core.GpuTimeline`.
         Unlike :meth:`serve`, a user may appear in several flushes (repeat
-        traffic) and requests need not cover the fleet."""
+        traffic) and requests need not cover the fleet.
+        ``batch_events`` drives the fleet-scale batched event loop
+        (:meth:`~repro.core.OnlineScheduler.run_batched`): events sharing
+        a timestamp — or falling inside ``batch_window`` seconds — drain
+        in one pass; at ``batch_window=0`` the outcome is bit-identical to
+        the event-at-a-time loop."""
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)
@@ -229,11 +250,13 @@ class CoInferenceServer:
         sched = self.scheduler(policy=policy, window=window,
                                keep_frac=keep_frac, occupancy=occupancy,
                                channel=channel, channel_aware=channel_aware,
+                               channel_stagger=channel_stagger,
+                               batch_window=batch_window,
                                on_flush=execute)
         for row, r in enumerate(requests):
             sched.submit(OnlineArrival(r.user, r.arrival, r.deadline,
                                        payload=(row, r)))
-        result = sched.run()
+        result = sched.run_batched() if batch_events else sched.run()
         return OnlineServeReport(logits=logits, result=result,
                                  flushes=sched.flushes, energy=result.energy,
                                  violations=result.violations,
@@ -250,6 +273,7 @@ class CoInferenceServer:
                                  upload_error=result.upload_error,
                                  channel_replans=result.channel_replans,
                                  realized_late=result.realized_late,
+                                 stagger_replans=result.stagger_replans,
                                  pruned_probes=result.pruned_probes)
 
 
@@ -314,7 +338,9 @@ class MultiTenantServer:
                  preemption: bool = True, admission: str = "admit",
                  occupancy: str = "serialized",
                  channel: ChannelModel | None = None,
-                 channel_aware: bool = True):
+                 channel_aware: bool = True,
+                 channel_stagger: bool = False,
+                 batch_window: float = 0.0):
         assert len(models) >= 1
         self.models = list(models)
         self.executors = [BlockwiseExecutor(m.cfg, m.params)
@@ -329,14 +355,19 @@ class MultiTenantServer:
         #: ONE uplink every tenant's devices share (None = static scalars)
         self.channel = channel
         self.channel_aware = channel_aware
+        self.channel_stagger = channel_stagger
+        self.batch_window = batch_window
         self.service = (service if service is not None
                         else PlannerService(self.models[0].profile,
                                             self.models[0].edge, rho=rho))
 
-    def serve_online(self, requests: Sequence[Sequence[Request]]
-                     ) -> MultiTenantServeReport:
+    def serve_online(self, requests: Sequence[Sequence[Request]], *,
+                     batch_events: bool = False) -> MultiTenantServeReport:
         """Serve one request stream per tenant (``Request.arrival`` times
-        interleave freely across tenants)."""
+        interleave freely across tenants).  ``batch_events`` drives the
+        arbitrated batched event loop
+        (:meth:`~repro.core.MultiTenantScheduler.run_batched`) —
+        bit-identical to event-at-a-time at ``batch_window=0``."""
         assert len(requests) == len(self.models)
         # a tenant may have no traffic in the window: zero flushes, an
         # empty logits block
@@ -367,6 +398,8 @@ class MultiTenantServer:
             service=self.service, preemption=self.preemption,
             admission=self.admission, occupancy=self.occupancy,
             channel=self.channel, channel_aware=self.channel_aware,
+            channel_stagger=self.channel_stagger,
+            batch_window=self.batch_window,
             on_flush=execute, on_replan=execute, on_degrade=degrade)
         for tid, reqs in enumerate(requests):
             order = sorted(range(len(reqs)), key=lambda i: reqs[i].arrival)
@@ -374,7 +407,7 @@ class MultiTenantServer:
                 r = reqs[row]
                 mts.submit(tid, OnlineArrival(r.user, r.arrival, r.deadline,
                                               payload=(row, r)))
-        result = mts.run()
+        result = mts.run_batched() if batch_events else mts.run()
         return MultiTenantServeReport(
             logits=logits, served=served, result=result,
             energy=result.energy, violations=result.violations,

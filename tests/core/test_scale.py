@@ -1,0 +1,300 @@
+"""Fleet-scale layer: incremental OG under churn, hierarchical cohort
+planning, the batched event loop's bitwise parity with event-at-a-time
+stepping (single- and multi-tenant), and the stagger-aware channel
+snapshot."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (IncrementalOgState, MultiTenantScheduler,
+                        OnlineArrival, OnlineScheduler, PlannerService,
+                        SharedUplink, Tenant, cohort_bounds, cohort_grouping,
+                        make_edge_profile, make_fleet, mobilenet_v2_profile,
+                        optimal_grouping, poisson_arrivals, simulate_online)
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+PROF2 = mobilenet_v2_profile(input_res=160)
+EDGE2 = make_edge_profile(PROF2)
+
+POLICIES = ("immediate", "window", "slack", "lastcall")
+
+#: one service per module: compiled planner shapes amortize across tests
+SVC = PlannerService(PROF, EDGE)
+
+
+def _assert_same_plan(a, b):
+    assert a.energy == b.energy
+    assert [list(g) for g in a.groups] == [list(g) for g in b.groups]
+    np.testing.assert_array_equal(a.per_user_energy, b.per_user_energy)
+    assert a.t_free_end == b.t_free_end
+
+
+def _assert_same_result(a, b):
+    assert a.energy == b.energy
+    assert a.n_flushes == b.n_flushes
+    assert a.batch_sizes == b.batch_sizes
+    assert a.violations == b.violations
+    assert a.flush_times == b.flush_times
+    assert a.f_edges == b.f_edges
+    np.testing.assert_array_equal(a.per_user_energy, b.per_user_energy)
+
+
+# ---------------------------------------------------------------------------
+# incremental OG: churn at position k re-folds only the suffix, bit-equal
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(M=st.integers(3, 8), beta_lo=st.floats(4.0, 10.0),
+       spread=st.floats(1.0, 30.0), seed=st.integers(0, 99),
+       new_beta=st.floats(2.0, 50.0))
+def test_property_incremental_og_matches_scratch(M, beta_lo, spread, seed,
+                                                 new_beta):
+    """Arrival then departure, each bit-identical to the from-scratch DP
+    on the mutated fleet — any deadline position, any tie pattern."""
+    fleet = make_fleet(M, PROF, EDGE, beta=(beta_lo, beta_lo + spread),
+                       seed=seed)
+    state = IncrementalOgState(PROF, fleet, EDGE, service=SVC)
+    _assert_same_plan(state.plan(),
+                      optimal_grouping(PROF, fleet, EDGE, service=SVC))
+    row = make_fleet(1, PROF, EDGE, beta=new_beta, seed=seed + 1)
+    _assert_same_plan(state.arrive(row),
+                      optimal_grouping(PROF, state.fleet, EDGE, service=SVC))
+    gone = seed % state.M
+    _assert_same_plan(state.depart(gone),
+                      optimal_grouping(PROF, state.fleet, EDGE, service=SVC))
+
+
+def test_incremental_tail_arrival_refolds_one_level():
+    """A later-than-everyone deadline sorts to the end: the DP suffix it
+    invalidates is a single level, not the triangle."""
+    fleet = make_fleet(8, PROF, EDGE, beta=(5.0, 15.0), seed=0)
+    state = IncrementalOgState(PROF, fleet, EDGE, service=SVC)
+    state.plan()
+    row = make_fleet(1, PROF, EDGE, beta=80.0, seed=1)
+    state.arrive(row)
+    assert state.last_refold_levels == 1
+
+
+# ---------------------------------------------------------------------------
+# hierarchical cohorts: exact below the threshold, a tight band above it
+# ---------------------------------------------------------------------------
+
+def test_cohort_bounds_partition_the_fleet():
+    for M, C in ((1, 4), (8, 8), (9, 8), (24, 7), (100, 32)):
+        bounds = cohort_bounds(M, C)
+        assert bounds[0][0] == 0 and bounds[-1][1] == M
+        assert all(b[1] - b[0] <= C for b in bounds)
+        assert all(a[1] == b[0] for a, b in zip(bounds, bounds[1:]))
+
+
+@pytest.mark.parametrize("M", [3, 6, 8])
+def test_cohort_grouping_exact_below_threshold(M):
+    """M <= cohort_size delegates verbatim to optimal_grouping."""
+    fleet = make_fleet(M, PROF, EDGE, beta=(5.0, 25.0), seed=M)
+    _assert_same_plan(
+        cohort_grouping(PROF, fleet, EDGE, cohort_size=8, service=SVC),
+        optimal_grouping(PROF, fleet, EDGE, service=SVC))
+
+
+def test_cohort_grouping_band_above_threshold():
+    """Above the threshold the cohort plan stays within an energy band of
+    the prefix DP.  Note the band is two-sided in principle: both solvers
+    keep only the min-energy state per prefix while segment energy couples
+    to the threaded occupancy cursor, so the coarser cohort chain can
+    occasionally land BELOW the "exact" DP (observed at M=96, C=48 in
+    benchmarks/scale_bench.py — a cheaper-but-later prefix poisons the
+    exact DP's suffix).  We therefore bound only the regression side."""
+    fleet = make_fleet(24, PROF, EDGE, beta=(5.0, 40.0), seed=2)
+    exact = optimal_grouping(PROF, fleet, EDGE, service=SVC)
+    coh = cohort_grouping(PROF, fleet, EDGE, cohort_size=8, service=SVC)
+    assert coh.energy <= exact.energy * 1.10
+    assert sorted(u for g in coh.groups for u in g) == list(range(24))
+
+
+def test_plan_fleet_routes_by_fleet_size():
+    svc = PlannerService(PROF, EDGE, default_cohort_size=8)
+    small = make_fleet(6, PROF, EDGE, beta=(5.0, 25.0), seed=0)
+    _assert_same_plan(svc.plan_fleet(small),
+                      optimal_grouping(PROF, small, EDGE, service=svc))
+    big = make_fleet(20, PROF, EDGE, beta=(5.0, 25.0), seed=0)
+    _assert_same_plan(svc.plan_fleet(big),
+                      cohort_grouping(PROF, big, EDGE, cohort_size=8,
+                                      service=svc))
+
+
+# ---------------------------------------------------------------------------
+# batched event loop: bitwise parity with event-at-a-time stepping
+# ---------------------------------------------------------------------------
+
+def _online_pair(policy, M, rate, seed, **kw):
+    fleet = make_fleet(M, PROF, EDGE, beta=20.0, seed=seed)
+    arrivals = sorted(poisson_arrivals(M, rate, fleet, seed=seed),
+                      key=lambda a: a.arrival)
+    out = []
+    for batched in (False, True):
+        s = OnlineScheduler(PROF, fleet, EDGE, policy=policy, window=0.02,
+                            **kw)
+        s.submit_many(list(arrivals))
+        out.append(s.run_batched() if batched else s.run())
+    return out
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("rate,seed", [(40.0, 0), (800.0, 1)])
+def test_batched_loop_bit_identical_single_tenant(policy, rate, seed):
+    r_step, r_batch = _online_pair(policy, 10, rate, seed)
+    _assert_same_result(r_step, r_batch)
+
+
+def test_batched_loop_parity_survives_interleaved_occupancy():
+    r_step, r_batch = _online_pair("immediate", 8, 500.0, 2,
+                                   occupancy="interleaved")
+    _assert_same_result(r_step, r_batch)
+
+
+def test_simulate_online_batch_events_flag():
+    fleet = make_fleet(8, PROF, EDGE, beta=20.0, seed=0)
+    arrivals = poisson_arrivals(8, 100.0, fleet, seed=0)
+    a = simulate_online(arrivals, PROF, fleet, EDGE, policy="slack")
+    b = simulate_online(arrivals, PROF, fleet, EDGE, policy="slack",
+                        batch_events=True)
+    _assert_same_result(a, b)
+
+
+def test_epsilon_batch_window_still_serves_everyone():
+    """A positive window may defer flushes (bounded by epsilon) but every
+    request is still served and batches can only merge, not split."""
+    fleet = make_fleet(12, PROF, EDGE, beta=25.0, seed=3)
+    arrivals = sorted(poisson_arrivals(12, 300.0, fleet, seed=3),
+                      key=lambda a: a.arrival)
+    s0 = OnlineScheduler(PROF, fleet, EDGE, policy="slack")
+    s0.submit_many(list(arrivals))
+    r0 = s0.run_batched()
+    s1 = OnlineScheduler(PROF, fleet, EDGE, policy="slack",
+                         batch_window=0.005)
+    s1.submit_many(list(arrivals))
+    r1 = s1.run_batched()
+    assert np.all(r1.per_user_energy > 0)
+    assert r1.n_flushes <= r0.n_flushes
+
+
+def _mts_pair(policies, rate, seed, **kw):
+    tA = Tenant(PROF, make_fleet(8, PROF, EDGE, beta=20.0, seed=seed),
+                EDGE, name="A", policy=policies[0], window=0.02)
+    tB = Tenant(PROF2, make_fleet(6, PROF2, EDGE2, beta=25.0, seed=seed + 1),
+                EDGE2, name="B", policy=policies[1], window=0.02)
+    trA = poisson_arrivals(8, rate, tA.fleet, seed=seed)
+    trB = poisson_arrivals(6, rate, tB.fleet, seed=seed + 1)
+    out = []
+    for batched in (False, True):
+        mts = MultiTenantScheduler([tA, tB], **kw)
+        mts.submit_traces([list(trA), list(trB)])
+        out.append(mts.run_batched() if batched else mts.run())
+    return out
+
+
+@pytest.mark.parametrize("policies", [("immediate", "slack"),
+                                      ("window", "lastcall"),
+                                      ("slack", "slack")])
+def test_batched_loop_bit_identical_multi_tenant(policies):
+    a, b = _mts_pair(policies, 300.0, 0)
+    assert a.energy == b.energy
+    assert a.violations == b.violations
+    assert a.preemptions == b.preemptions
+    for ta, tb in zip(a.tenants, b.tenants):
+        _assert_same_result(ta.result, tb.result)
+
+
+@pytest.mark.parametrize("admission", ["degrade", "reject"])
+def test_batched_loop_parity_with_admission_control(admission):
+    a, b = _mts_pair(("immediate", "immediate"), 2000.0, 1,
+                     admission=admission)
+    assert a.energy == b.energy
+    for ta, tb in zip(a.tenants, b.tenants):
+        assert ta.degraded == tb.degraded and ta.rejected == tb.rejected
+        _assert_same_result(ta.result, tb.result)
+
+
+def test_batched_loop_parity_under_forced_preemption():
+    """The tenancy suite's forced-preemption shape: tenant B's
+    tight-deadline flush preempts A's queued booking — the batched
+    arbitration must reproduce the preemption and every downstream
+    number."""
+    fleetA = make_fleet(8, PROF, EDGE, beta=30.0, seed=0)
+    fleetB = make_fleet(2, PROF, EDGE, beta=3.0, seed=1)
+    trA = ([OnlineArrival(m, 0.0, float(fleetA.deadline[m]))
+            for m in range(4)]
+           + [OnlineArrival(m, 1e-4, float(fleetA.deadline[m]))
+              for m in range(4, 8)])
+    trB = [OnlineArrival(0, 2e-4, 0.06)]
+    out = []
+    for batched in (False, True):
+        A = Tenant(PROF, fleetA, EDGE, name="A", policy="immediate")
+        B = Tenant(PROF, fleetB, EDGE, name="B", policy="immediate")
+        mts = MultiTenantScheduler([A, B], preemption=True)
+        mts.submit_traces([list(trA), list(trB)])
+        out.append(mts.run_batched() if batched else mts.run())
+    a, b = out
+    assert a.preemptions == b.preemptions >= 1
+    assert a.energy == b.energy
+    for ta, tb in zip(a.tenants, b.tenants):
+        _assert_same_result(ta.result, tb.result)
+
+
+# ---------------------------------------------------------------------------
+# stagger-aware channel snapshot
+# ---------------------------------------------------------------------------
+
+def _channel_run(stagger, policy="immediate", M=10, rate=60.0, seed=3):
+    fleet = make_fleet(M, PROF, EDGE, beta=20.0, seed=0)
+    arrivals = sorted(poisson_arrivals(M, rate, fleet, seed=seed),
+                      key=lambda a: a.arrival)
+    s = OnlineScheduler(PROF, fleet, EDGE, policy=policy,
+                        channel=SharedUplink(share="equal"),
+                        channel_aware=True, channel_stagger=stagger)
+    s.submit_many(arrivals)
+    return s.run()
+
+
+def test_stagger_snapshot_tightens_upload_pricing():
+    """Staggered upload starts share the medium less than the concurrent
+    snapshot assumes: pricing against them cannot be more pessimistic,
+    and the realized-vs-planned upload error shrinks at equal-or-fewer
+    violations."""
+    aware = _channel_run(False)
+    stag = _channel_run(True)
+    assert stag.stagger_replans > 0
+    assert aware.stagger_replans == 0        # off by default
+    assert stag.upload_error <= aware.upload_error + 1e-12
+    assert stag.violations <= aware.violations
+    assert stag.energy <= aware.energy + 1e-9
+
+
+def test_stagger_noop_without_channel():
+    """No channel (or a static one) means no staggered contention to
+    re-price: the flag must leave results bit-identical."""
+    fleet = make_fleet(8, PROF, EDGE, beta=20.0, seed=0)
+    arrivals = poisson_arrivals(8, 100.0, fleet, seed=0)
+    a = simulate_online(arrivals, PROF, fleet, EDGE, policy="slack")
+    b = simulate_online(arrivals, PROF, fleet, EDGE, policy="slack",
+                        channel_stagger=True)
+    _assert_same_result(a, b)
+    assert b.stagger_replans == 0
+
+
+# ---------------------------------------------------------------------------
+# planner latency observability (the scale bench's percentile source)
+# ---------------------------------------------------------------------------
+
+def test_plan_latency_percentiles_recorded():
+    svc = PlannerService(PROF, EDGE)
+    fleet = make_fleet(8, PROF, EDGE, beta=20.0, seed=0)
+    s = OnlineScheduler(PROF, fleet, EDGE, policy="slack", service=svc)
+    s.submit_many(poisson_arrivals(8, 200.0, fleet, seed=0))
+    s.run_batched()
+    lat = svc.stats().plan_latency()
+    assert lat["count"] > 0
+    assert 0.0 < lat["min_ms"] <= lat["p50_ms"] <= lat["p99_ms"] \
+        <= lat["max_ms"]
