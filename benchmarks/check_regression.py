@@ -23,11 +23,19 @@ win beyond it fails the gate, not just a wall-clock regression:
   contention/fading scenario (``--channel-baseline``/``--channel-fresh``).
 
 ``BENCH_scale.json`` (the fleet-scale bench) gates differently: per fleet
-size M the simulated goodput (requests/s meeting deadlines) must not DROP
-and the energy per request must not GROW by more than
+size M — in both the synchronous ``online`` rows and the plan-ahead
+``pipelined`` rows — the simulated goodput (requests/s meeting deadlines)
+must not DROP and the energy per request must not GROW by more than
 ``--scale-tolerance`` (fractional; both are deterministic given the
-seeds, so the default band is tight).  Wall times and planner latency
-percentiles are reported, never gated — they measure the CI host.
+seeds, so the default band is tight).  A pipelined row that lost bitwise
+parity with its synchronous twin fails outright.  The planning section's
+soundness invariants are gated absolutely: the Pareto-frontier DP's
+energy must be ``<=`` the prefix DP's, and the hierarchical cohort chain
+must band ONE-SIDED against the pareto baseline (the prefix band is
+two-sided by construction — the prefix DP is itself unsound under
+occupancy coupling — so it is reported, not gated).  Wall times and
+planner latency percentiles are reported, never gated — they measure
+the CI host.
 
 Cases are keyed by (M, scenario) / (tenants, users) / scenario name;
 cases present in only one file are reported but never fail the gate
@@ -150,19 +158,17 @@ def _gate_savings(kind: str, baseline: str, fresh_path: str,
     return failures
 
 
-def _gate_scale(baseline: str, fresh_path: str, tolerance: float) -> int:
-    """Per-M goodput (higher-better) and energy/request (lower-better)."""
-    with open(baseline) as f:
-        base_doc = json.load(f)
-    with open(fresh_path) as f:
-        fresh_doc = json.load(f)
-    base = {r["users"]: r for r in base_doc.get("online", [])}
-    fresh = {r["users"]: r for r in fresh_doc.get("online", [])}
+def _gate_scale_section(section: str, base_doc: dict, fresh_doc: dict,
+                        tolerance: float) -> int:
+    """Per-M goodput (higher-better) and energy/request (lower-better)
+    for one result list (``online`` or ``pipelined``) keyed by users."""
+    base = {r["users"]: r for r in base_doc.get(section, [])}
+    fresh = {r["users"]: r for r in fresh_doc.get(section, [])}
     if not base:
-        print(f"no scale cases in {baseline}; nothing to gate")
+        print(f"no {section} scale cases in baseline; nothing to gate")
         return 0
     failures = 0
-    print(f"\n{'scale case':<28} {'baseline':>12} {'fresh':>12} "
+    print(f"\n{section + ' case':<28} {'baseline':>12} {'fresh':>12} "
           f"{'delta':>8}  verdict")
     for M in sorted(base):
         if M not in fresh:
@@ -182,8 +188,55 @@ def _gate_scale(baseline: str, fresh_path: str, tolerance: float) -> int:
             print(f"M={M:<7} {field:<18} {b:>12.5g} {f_:>12.5g} "
                   f"{delta:>+7.1%}  {verdict}")
             failures += not ok
+        # a pipelined row that lost bitwise parity with its synchronous
+        # twin is a correctness break, not a perf regression
+        if section == "pipelined" and not fresh[M].get("parity", True):
+            print(f"M={M:<7} pipelined run DIVERGED from synchronous loop",
+                  file=sys.stderr)
+            failures += 1
     for M in sorted(set(fresh) - set(base)):
-        print(f"M={M}: new scale case, not in baseline")
+        print(f"M={M}: new {section} scale case, not in baseline")
+    return failures
+
+
+def _gate_scale_planning(fresh_doc: dict) -> int:
+    """Soundness invariants of the fresh planning section: the
+    Pareto-frontier DP never above the prefix DP, and the hierarchical
+    chain banded ONE-SIDED (never below) against the pareto baseline —
+    the committed prefix band is two-sided by construction (the prefix
+    DP itself is unsound under occupancy coupling), so it is reported
+    but not gated."""
+    p = fresh_doc.get("planning", {})
+    if not p or "pareto_energy" not in p:
+        print("no pareto planning fields in fresh run; nothing to gate")
+        return 0
+    failures = 0
+    if not p.get("pareto_sound", False):
+        print(f"pareto DP ABOVE prefix DP "
+              f"({p['pareto_energy']:.6f} > {p['exact_energy']:.6f})",
+              file=sys.stderr)
+        failures += 1
+    band = p.get("cohort_energy_band_vs_pareto")
+    if band is not None and band < -1e-9:
+        print(f"cohort chain BELOW the pareto-exact baseline "
+              f"({band:+.4%}) — frontier DP missed a state",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"planning: pareto {p['pareto_vs_prefix']:+.2%} vs prefix, "
+              f"cohort band {band:+.2%} vs pareto (one-sided)  ok")
+    return failures
+
+
+def _gate_scale(baseline: str, fresh_path: str, tolerance: float) -> int:
+    with open(baseline) as f:
+        base_doc = json.load(f)
+    with open(fresh_path) as f:
+        fresh_doc = json.load(f)
+    failures = _gate_scale_section("online", base_doc, fresh_doc, tolerance)
+    failures += _gate_scale_section("pipelined", base_doc, fresh_doc,
+                                    tolerance)
+    failures += _gate_scale_planning(fresh_doc)
     if fresh_doc.get("gate_wins", 0) < fresh_doc.get("gate_needed", 0):
         print(f"fresh scale run failed its own gate "
               f"({fresh_doc['gate_wins']}/{fresh_doc['gate_needed']} wins)",

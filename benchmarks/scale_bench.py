@@ -14,12 +14,22 @@ Two sections, one JSON document (``BENCH_scale.json``):
   cadence — and therefore wall time — stays roughly M-independent while
   batch sizes grow with the fleet.
 
+* **pipelined** — the same online runs with ``plan_workers`` plan-ahead
+  threads overlapping the next flush's grouping solve with the current
+  batch's bookkeeping.  Results are asserted bitwise-equal to the
+  synchronous rows (speculation is consumed only on exact key match), so
+  the only thing that may move is wall time: ``pipeline_speedup`` and the
+  plan-ahead hit rate are reported per M.
+
 * **planning** — the one-shot OG problem at a fleet size where the exact
-  O(M²)-segment DP is measurably expensive: exact vs hierarchical
-  :func:`~repro.core.cohort_grouping` (wall time + energy band), and
-  :class:`~repro.core.IncrementalOgState` fleet churn (a late-deadline
-  arrival re-folds O(1) DP levels; a mid departure re-folds the suffix)
-  against the from-scratch re-solve, with bit-parity asserted.
+  O(M²)-segment DP is measurably expensive: prefix-exact vs the
+  Pareto-frontier DP (sound under occupancy coupling; energy must come
+  out ``<=`` prefix) vs hierarchical :func:`~repro.core.cohort_grouping`
+  (wall time + energy band — banded against BOTH baselines; only the
+  pareto band is one-sided), and :class:`~repro.core.IncrementalOgState`
+  fleet churn (a late-deadline arrival re-folds O(1) DP levels; a mid
+  departure re-folds the suffix) against the from-scratch re-solve, with
+  bit-parity asserted.
 
 The committed ``BENCH_scale.json`` is the regression baseline
 ``benchmarks/check_regression.py --scale-baseline`` gates against
@@ -49,8 +59,13 @@ def _build(M: int, seed: int):
 
 def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
                      policy: str = "slack",
-                     batch_window: float = 0.0) -> dict:
-    """One sustained-load run at fleet size M through the batched loop."""
+                     batch_window: float = 0.0,
+                     plan_workers: int = 0):
+    """One sustained-load run at fleet size M through the batched loop.
+
+    Returns ``(row, result)`` — the JSON row plus the raw
+    :class:`OnlineResult` so the pipelined run can be asserted bitwise
+    equal to the synchronous one."""
     from repro.core import OnlineScheduler, PlannerService, poisson_arrivals
     profile, edge, fleet = _build(M, seed)
     rate = load_hz * M
@@ -58,17 +73,20 @@ def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
     service = PlannerService(profile, edge)
     sched = OnlineScheduler(profile, fleet, edge, policy=policy,
                             keep_frac=0.7, service=service,
-                            batch_window=batch_window)
+                            batch_window=batch_window,
+                            plan_workers=plan_workers)
     sched.submit_many(sorted(arrivals, key=lambda a: a.arrival))
     t0 = time.perf_counter()
     res = sched.run_batched()
     wall = time.perf_counter() - t0
     makespan = max(res.flush_times) if res.flush_times else 0.0
     served = M - res.violations
-    lat = service.stats().plan_latency()
-    return dict(
+    stats = service.stats()
+    lat = stats.plan_latency()
+    row = dict(
         users=M, rate_hz=rate, policy=policy, seed=seed,
         arrival_seed=arrival_seed, batch_window=batch_window,
+        plan_workers=plan_workers,
         n_flushes=res.n_flushes,
         mean_batch=float(np.mean(res.batch_sizes)) if res.batch_sizes else 0.0,
         max_batch=max(res.batch_sizes) if res.batch_sizes else 0,
@@ -79,10 +97,24 @@ def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
         goodput_rps=served / makespan if makespan > 0 else 0.0,
         wall_s=wall,
         plan_latency=lat,
+        plan_ahead_hits=stats.plan_ahead_hits,
+        plan_ahead_misses=stats.plan_ahead_misses,
         # the loop is only "batched" if batching actually emerged AND the
         # fleet was served (not a degenerate all-violations run)
         healthy=bool(res.n_flushes < M and served > 0.5 * M),
     )
+    service.close()
+    return row, res
+
+
+def _same_result(a, b) -> bool:
+    """Bitwise parity across every simulated quantity (wall time aside)."""
+    return bool(a.energy == b.energy and a.n_flushes == b.n_flushes
+                and a.batch_sizes == b.batch_sizes
+                and a.violations == b.violations
+                and a.flush_times == b.flush_times
+                and a.f_edges == b.f_edges
+                and np.array_equal(a.per_user_energy, b.per_user_energy))
 
 
 def run_planning_scale(M: int, cohort_size: int, seed: int) -> dict:
@@ -101,10 +133,21 @@ def run_planning_scale(M: int, cohort_size: int, seed: int) -> dict:
     exact = optimal_grouping(profile, fleet, edge, service=service)
     t_exact = time.perf_counter() - t0
     t0 = time.perf_counter()
+    pareto = optimal_grouping(profile, fleet, edge, service=service,
+                              dp="pareto")
+    t_pareto = time.perf_counter() - t0
+    fstats = service.stats()
+    t0 = time.perf_counter()
     cohort = cohort_grouping(profile, fleet, edge, cohort_size=cohort_size,
                              service=service)
     t_cohort = time.perf_counter() - t0
     band = cohort.energy / exact.energy - 1.0
+    t0 = time.perf_counter()
+    cohort_pareto = cohort_grouping(profile, fleet, edge,
+                                    cohort_size=cohort_size,
+                                    service=service, dp="pareto")
+    t_cohort_pareto = time.perf_counter() - t0
+    band_pareto = cohort_pareto.energy / pareto.energy - 1.0
 
     state = IncrementalOgState(profile, fleet, edge, service=service)
     t0 = time.perf_counter()
@@ -128,8 +171,17 @@ def run_planning_scale(M: int, cohort_size: int, seed: int) -> dict:
     return dict(
         users=M, cohort_size=cohort_size, seed=seed,
         exact_s=t_exact, exact_energy=exact.energy,
+        pareto_s=t_pareto, pareto_energy=pareto.energy,
+        pareto_vs_prefix=pareto.energy / exact.energy - 1.0,
+        pareto_sound=bool(pareto.energy <= exact.energy + 1e-12),
+        frontier_states=fstats.frontier_states,
+        frontier_max=fstats.frontier_max,
+        dominance_pruned=fstats.dominance_pruned,
         cohort_s=t_cohort, cohort_energy=cohort.energy,
         cohort_energy_band=band,
+        cohort_pareto_s=t_cohort_pareto,
+        cohort_pareto_energy=cohort_pareto.energy,
+        cohort_energy_band_vs_pareto=band_pareto,
         cohort_speedup=t_exact / t_cohort if t_cohort > 0 else 0.0,
         incremental_seed_s=t_seed,
         arrive_s=t_arrive, arrive_refold_levels=arrive_levels,
@@ -153,6 +205,9 @@ def main(argv=None) -> int:
     ap.add_argument("--policy", default="slack",
                     choices=["immediate", "window", "slack", "lastcall"])
     ap.add_argument("--batch-window", type=float, default=0.0)
+    ap.add_argument("--plan-workers", type=int, default=2,
+                    help="plan-ahead threads for the pipelined section "
+                         "(0 skips it)")
     ap.add_argument("--planning-users", type=int, default=96,
                     help="planning-section fleet size (exact OG is "
                          "O(M^2) segments — keep it measurable, not "
@@ -183,11 +238,11 @@ def main(argv=None) -> int:
     print(f"{'M':>7} {'rate/s':>8} {'flushes':>7} {'batch μ/max':>11} "
           f"{'viol':>6} {'goodput/s':>9} {'J/req':>8} {'p50/p99 ms':>12} "
           f"{'wall':>7}")
-    online = []
+    online, pipelined = [], []
     for M in args.fleet_sizes:
-        r = run_online_scale(M, args.load, args.seed, arrival_seed,
-                             policy=args.policy,
-                             batch_window=args.batch_window)
+        r, res = run_online_scale(M, args.load, args.seed, arrival_seed,
+                                  policy=args.policy,
+                                  batch_window=args.batch_window)
         online.append(r)
         lat = r["plan_latency"]
         print(f"{M:>7} {r['rate_hz']:>8.0f} {r['n_flushes']:>7} "
@@ -196,13 +251,35 @@ def main(argv=None) -> int:
               f"{r['energy_per_request']:>8.5f} "
               f"{lat['p50_ms']:>5.1f}/{lat['p99_ms']:<6.1f} "
               f"{r['wall_s']:>6.1f}s")
+        if args.plan_workers > 0:
+            rp, resp = run_online_scale(M, args.load, args.seed,
+                                        arrival_seed, policy=args.policy,
+                                        batch_window=args.batch_window,
+                                        plan_workers=args.plan_workers)
+            rp["parity"] = _same_result(res, resp)
+            rp["pipeline_speedup"] = (r["wall_s"] / rp["wall_s"]
+                                      if rp["wall_s"] > 0 else 0.0)
+            pipelined.append(rp)
+            hits, misses = rp["plan_ahead_hits"], rp["plan_ahead_misses"]
+            hit_rate = hits / (hits + misses) if hits + misses else 0.0
+            print(f"{'':>7} pipelined x{args.plan_workers}: "
+                  f"wall {rp['wall_s']:.1f}s "
+                  f"({rp['pipeline_speedup']:.2f}x), plan-ahead "
+                  f"{hits}/{hits + misses} hit ({hit_rate:.0%}), "
+                  f"parity={'ok' if rp['parity'] else 'BROKEN'}")
 
     p = run_planning_scale(args.planning_users, args.cohort_size, args.seed)
     print(f"\nplanning at M={p['users']} (cohort C={p['cohort_size']}):")
-    print(f"  exact OG      {p['exact_s']:>8.2f}s  E={p['exact_energy']:.4f}")
+    print(f"  prefix OG     {p['exact_s']:>8.2f}s  E={p['exact_energy']:.4f}")
+    print(f"  pareto OG     {p['pareto_s']:>8.2f}s  "
+          f"E={p['pareto_energy']:.4f}  "
+          f"vs prefix {100 * p['pareto_vs_prefix']:+.2f}%  "
+          f"(frontier max {p['frontier_max']}, "
+          f"{p['dominance_pruned']} pruned)")
     print(f"  cohort OG     {p['cohort_s']:>8.2f}s  "
           f"E={p['cohort_energy']:.4f}  "
-          f"band {100 * p['cohort_energy_band']:+.2f}%  "
+          f"band {100 * p['cohort_energy_band']:+.2f}% vs prefix, "
+          f"{100 * p['cohort_energy_band_vs_pareto']:+.2f}% vs pareto  "
           f"speedup {p['cohort_speedup']:.1f}x")
     print(f"  incremental   seed {p['incremental_seed_s']:.2f}s, "
           f"tail arrive {p['arrive_s']:.3f}s "
@@ -211,17 +288,24 @@ def main(argv=None) -> int:
           f"mid depart {p['depart_s']:.2f}s "
           f"({p['depart_refold_levels']} levels)")
 
-    # internal acceptance: every online run healthy, the cohort band tight,
-    # the tail arrival actually incremental — one level re-folded and
-    # measurably faster than scratch (its single level still batch-solves
-    # M segments, so wall time shrinks less than the level count does)
-    # (dry-run: wiring only)
+    # internal acceptance: every online run healthy, every pipelined run
+    # bitwise-identical to its synchronous twin, the pareto DP sound
+    # (<= prefix, and the cohort chain banded ONE-SIDED against it), the
+    # prefix cohort band tight, the tail arrival actually incremental —
+    # one level re-folded and measurably faster than scratch (its single
+    # level still batch-solves M segments, so wall time shrinks less than
+    # the level count does) (dry-run: wiring only)
+    total = 2 * len(online) + 5 if args.plan_workers > 0 \
+        else len(online) + 5
     wins = (sum(r["healthy"] for r in online)
+            + sum(r["parity"] for r in pipelined)
+            + int(p["pareto_sound"])
+            + int(-1e-9 <= p["cohort_energy_band_vs_pareto"] <= 0.08)
             + int(abs(p["cohort_energy_band"]) <= 0.08)
             + int(p["tail_arrival_cheap"] and p["arrive_speedup"] > 1.3)
             + int(p["incremental_parity"]))
-    need = 1 if args.dry_run else len(online) + 3
-    print(f"scale acceptance: {wins}/{len(online) + 3} checks pass "
+    need = 1 if args.dry_run else total
+    print(f"scale acceptance: {wins}/{total} checks pass "
           f"(gate: >= {need})")
     if args.json:
         doc = dict(benchmark="scale_bench",
@@ -230,8 +314,9 @@ def main(argv=None) -> int:
                    platform=platform.platform(),
                    jax_platforms=os.environ.get("JAX_PLATFORMS", ""),
                    load_per_user_hz=args.load, policy=args.policy,
+                   plan_workers=args.plan_workers,
                    gate_wins=wins, gate_needed=need,
-                   online=online, planning=p)
+                   online=online, pipelined=pipelined, planning=p)
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.json} ({len(online)} online scales)")

@@ -11,9 +11,10 @@ from .jdob import (BatchedPlanner, ExecutableCache, PendingPlans,
 from .reference import jdob_reference
 from .baselines import (STRATEGIES, local_computing, ip_ssa,
                         jdob_no_edge_dvfs, jdob_binary, jdob_plus)
-from .planner_service import PlannerService, planner_spec
+from .planner_service import PlanAheadPool, PlannerService, planner_spec
 from .bruteforce import brute_force
-from .grouping import (GroupedSchedule, IncrementalOgState, optimal_grouping,
+from .grouping import (GroupedSchedule, IncrementalOgState,
+                       bruteforce_grouping, optimal_grouping,
                        optimal_grouping_reference, single_group)
 from .cohort import cohort_bounds, cohort_grouping
 from .timeline import (OCCUPANCY_MODES, GpuTimeline, Reservation,
@@ -40,10 +41,10 @@ __all__ = [
     "shared_executable_cache",
     "jdob_reference", "STRATEGIES", "local_computing", "ip_ssa",
     "jdob_no_edge_dvfs", "jdob_binary", "jdob_plus",
-    "PlannerService", "planner_spec",
+    "PlanAheadPool", "PlannerService", "planner_spec",
     "brute_force",
-    "GroupedSchedule", "IncrementalOgState", "optimal_grouping",
-    "optimal_grouping_reference", "single_group",
+    "GroupedSchedule", "IncrementalOgState", "bruteforce_grouping",
+    "optimal_grouping", "optimal_grouping_reference", "single_group",
     "cohort_bounds", "cohort_grouping",
     "OCCUPANCY_MODES", "GpuTimeline", "Reservation", "TimelineCursor",
     "rescale_edge_dvfs", "respeed_edge_dvfs",

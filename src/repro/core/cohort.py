@@ -24,11 +24,15 @@ the function literally delegates).  Above C the result matches the exact
 DP whenever no optimal group spans a cohort boundary; otherwise the merge
 DP repairs boundary-spanning groups and the energy stays within a measured
 band of exact (benchmarked in ``benchmarks/scale_bench.py``, banded in
-tests/core/test_scale.py).  The band is two-sided: the prefix DP keeps
-only the min-energy state per prefix while segment energy couples to the
-threaded occupancy cursor, so neither solver dominates — the coarser
-cohort chain has been observed BELOW "exact" (−5.25% at M=96, C=48)
-because a cheaper-but-later prefix poisoned the exact DP's suffix.
+tests/core/test_scale.py).  Under ``dp="prefix"`` the band is two-sided:
+the prefix DP keeps only the min-energy state per prefix while segment
+energy couples to the threaded occupancy cursor, so neither solver
+dominates — the coarser cohort chain has been observed BELOW "exact"
+(−5.25% at M=96, C=48) because a cheaper-but-later prefix poisoned the
+exact DP's suffix.  ``dp="pareto"`` closes that blind spot: the per-cohort
+solves and the merge DP all carry a Pareto frontier of (energy, cursor)
+states, so the hierarchical plan bands against a sound baseline again
+(one-sided above the frontier-exact energy, up to merge-window slack).
 
 Cost: O(M·C) segment solves in the shards plus O(M/C · merge_window) merge
 solves — linear in M at fixed C, versus exact OG's O(M²).
@@ -40,7 +44,8 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .cost_models import DeviceFleet
-from .grouping import GroupedSchedule, _collect_chain, optimal_grouping
+from .grouping import (GroupedSchedule, _collect_chain, _pareto_sweep,
+                       optimal_grouping)
 from .jdob import Schedule, jdob_schedule
 from .planner_service import PlannerService
 from .timeline import GpuTimeline, TimelineCursor
@@ -59,7 +64,9 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
                     t_free: float = 0.0, rho: float = 0.03e9,
                     cohort_size: int = 64, merge_window: int = 4,
                     service: PlannerService | None = None,
-                    timeline: GpuTimeline | None = None
+                    timeline: GpuTimeline | None = None,
+                    dp: str = "prefix", frontier_eps: float = 0.0,
+                    beam_width: int | None = None
                     ) -> GroupedSchedule:
     """Hierarchical OG over deadline-sorted cohorts of ≤ ``cohort_size``.
 
@@ -68,8 +75,11 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
     commit); delegates to it verbatim when the fleet fits one cohort.
     ``merge_window`` bounds how many consecutive per-cohort groups the
     top-level merge DP may fuse into one (1 disables boundary repair).
+    ``dp="pareto"`` runs the per-cohort solves and the merge DP over a
+    Pareto frontier of (energy, cursor) states (see grouping.py).
     """
     assert merge_window >= 1
+    assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
     if service is None:
         service = PlannerService(profile, edge, rho=rho)
     else:
@@ -80,7 +90,9 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
     if M <= cohort_size:
         # single cohort == the exact path, bit for bit
         return optimal_grouping(profile, fleet, edge, inner, t_free=t_free,
-                                rho=rho, service=service, timeline=timeline)
+                                rho=rho, service=service, timeline=timeline,
+                                dp=dp, frontier_eps=frontier_eps,
+                                beam_width=beam_width)
 
     spec = service.spec_for(inner)
     planner = None if spec is None else service.planner(**spec)
@@ -133,7 +145,9 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
     for lo, hi in cohort_bounds(M, cohort_size):
         og = optimal_grouping(profile, sorted_fleet.subset(np.arange(lo, hi)),
                               edge, inner, t_free=cursor.t_free, rho=rho,
-                              service=service)
+                              service=service, dp=dp,
+                              frontier_eps=frontier_eps,
+                              beam_width=beam_width)
         for g, s in zip(og.groups, og.schedules):
             i_abs, j_abs = lo + int(g[0]), lo + int(g[-1]) + 1
             cache[(i_abs, j_abs, round(cursor.t_free, 9))] = s
@@ -143,7 +157,55 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
     # ---- merge: top-level DP over atoms, fusing ≤ merge_window of them --
     K = len(atoms)
     INF = np.inf
-    dp: list[tuple[float, TimelineCursor, int]] = \
+
+    if dp == "pareto":
+        # frontier merge: each level keeps every non-dominated
+        # (energy, cursor) state, so a cheaper-but-later fuse cannot
+        # poison the suffix the way the single-state merge can
+        stats = None if planner is None else planner.stats
+        mdp: list[list[tuple[float, TimelineCursor, int, int]]] = \
+            [[(0.0, TimelineCursor(t_free), -1, 0)]]
+        for t in range(1, K + 1):
+            need, seen = [], set()
+            for s in range(max(0, t - merge_window), t):
+                i_abs, j_abs = atoms[s][0], atoms[t - 1][1]
+                if t - s > 1 and j_abs - i_abs > cohort_size:
+                    continue
+                for st in mdp[s]:
+                    if not np.isfinite(st[0]):
+                        continue
+                    key = (i_abs, j_abs, round(st[1].t_free, 9))
+                    if key not in cache and key not in seen:
+                        seen.add(key)
+                        need.append((i_abs, j_abs, st[1].t_free))
+            if need:
+                solve_many(need)
+            cands = []
+            for s in range(max(0, t - merge_window), t):
+                i_abs, j_abs = atoms[s][0], atoms[t - 1][1]
+                if t - s > 1 and j_abs - i_abs > cohort_size:
+                    continue
+                for si, st in enumerate(mdp[s]):
+                    if not np.isfinite(st[0]):
+                        continue
+                    sch = solve(i_abs, j_abs, st[1].t_free)
+                    cands.append((st[0] + sch.energy,
+                                  st[1].advance(sch), s, si))
+            front = _pareto_sweep(cands, frontier_eps, beam_width, stats)
+            if not front:
+                front = [(INF, TimelineCursor(t_free), t - 1, 0)]
+            mdp.append(front)
+        chain = []
+        t, si = K, 0
+        while t > 0:
+            st = mdp[t][si]
+            chain.append((atoms[st[2]][0], atoms[t - 1][1]))
+            t, si = st[2], st[3]
+        chain.reverse()
+        return _collect_chain(chain, order, solve, TimelineCursor(t_free),
+                              timeline)
+
+    sdp: list[tuple[float, TimelineCursor, int]] = \
         [(0.0, TimelineCursor(t_free), -1)]
     for t in range(1, K + 1):
         # warm the level's missing candidate solves in one batched dispatch
@@ -152,7 +214,7 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
             i_abs, j_abs = atoms[s][0], atoms[t - 1][1]
             if t - s > 1 and j_abs - i_abs > cohort_size:
                 continue
-            e_s, cur_s, _ = dp[s]
+            e_s, cur_s, _ = sdp[s]
             if np.isfinite(e_s) and \
                     (i_abs, j_abs, round(cur_s.t_free, 9)) not in cache:
                 need.append((i_abs, j_abs, cur_s.t_free))
@@ -163,19 +225,19 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
             i_abs, j_abs = atoms[s][0], atoms[t - 1][1]
             if t - s > 1 and j_abs - i_abs > cohort_size:
                 continue
-            e_s, cur_s, _ = dp[s]
+            e_s, cur_s, _ = sdp[s]
             if not np.isfinite(e_s):
                 continue
             sch = solve(i_abs, j_abs, cur_s.t_free)
             cand = e_s + sch.energy
             if cand < best[0]:
                 best = (cand, cur_s.advance(sch), s)
-        dp.append(best)
+        sdp.append(best)
 
-    chain: list[tuple[int, int]] = []
+    chain = []
     t = K
     while t > 0:
-        s = dp[t][2]
+        s = sdp[t][2]
         chain.append((atoms[s][0], atoms[t - 1][1]))
         t = s
     chain.reverse()

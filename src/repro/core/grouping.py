@@ -33,6 +33,20 @@ Note (documented deviation): the exact DP state would carry the continuous
 ``t_free``; like [10] we keep the scalar DP over prefixes — optimal when
 inner costs are monotone in ``t_free`` (they are: a later GPU start can
 only shrink the feasible set), and empirically tight in the paper's regime.
+
+That single-state prefix DP is NOT exact under occupancy coupling,
+however: segment energy depends on the threaded cursor, and a
+cheaper-but-later prefix can poison its suffix (a coarser cohort chain
+measured 5.25% BELOW "exact" at M=96 — the ROADMAP's blind spot).  Both
+entry points therefore take ``dp="pareto"``: :func:`_run_dp_pareto` keeps
+a **Pareto frontier** of (energy, t_free) states per prefix — a state
+survives only if no other state is at least as cheap AND at least as
+early — so a costlier-but-earlier prefix stays available to rescue the
+suffix.  ``frontier_eps`` (relative epsilon-dominance) and ``beam_width``
+bound the frontier when exactness can be traded for speed; the defaults
+(0, unbounded) match :func:`bruteforce_grouping` on every fleet small
+enough to enumerate (hypothesis-tested), and are never above the prefix
+DP by construction (the prefix DP's chain is always in the frontier).
 """
 from __future__ import annotations
 
@@ -111,6 +125,96 @@ def _run_dp(M: int, cursor: TimelineCursor, solve, level_prefetch=None,
     return chain
 
 
+def _pareto_sweep(cands: list, frontier_eps: float = 0.0,
+                  beam_width: int | None = None,
+                  stats=None) -> list:
+    """Deterministic Pareto reduction of DP candidate states.
+
+    ``cands`` entries are ``(energy, cursor, split, state_idx)``.  Sorted
+    ascending by (energy, t_free, split, state_idx), a candidate survives
+    only if its ``t_free`` is strictly below every kept state's — i.e. no
+    kept (cheaper-or-equal) state is also as early (weak dominance, with
+    the lowest-(energy, t_free) representative kept on exact ties, so the
+    sweep is order-independent).  ``frontier_eps`` > 0 additionally drops
+    candidates whose t_free improvement over the best kept state is below
+    a relative epsilon (bounded frontiers at bounded suboptimality);
+    ``beam_width`` hard-caps the frontier at the N cheapest survivors
+    (``beam_width=1`` collapses to the single min-energy state — the
+    prefix DP's view).  ``stats``, when given, accumulates
+    ``frontier_states`` / ``frontier_max`` / ``dominance_pruned`` onto a
+    :class:`~repro.core.jdob.PlannerStats`."""
+    cands = [c for c in cands if np.isfinite(c[0])]
+    n_in = len(cands)
+    cands.sort(key=lambda c: (c[0], c[1].t_free, c[2], c[3]))
+    front: list = []
+    best_tf = np.inf
+    for c in cands:
+        tf = c[1].t_free
+        if tf < best_tf * (1.0 - frontier_eps):
+            front.append(c)
+            best_tf = tf
+    if beam_width is not None and len(front) > beam_width:
+        front = front[:beam_width]
+    if stats is not None:
+        stats.frontier_states += len(front)
+        stats.frontier_max = max(stats.frontier_max, len(front))
+        stats.dominance_pruned += n_in - len(front)
+    return front
+
+
+def _run_dp_pareto(M: int, cursor: TimelineCursor, solve,
+                   level_prefetch=None, dp: list | None = None,
+                   frontier_eps: float = 0.0, beam_width: int | None = None,
+                   stats=None) -> list[tuple[int, int]]:
+    """The Pareto-frontier prefix DP: ``dp[j]`` is a LIST of frontier
+    states ``(energy, cursor, split i, state index into dp[i])``, sorted
+    ascending by energy, one list per prefix [0, j).  Where
+    :func:`_run_dp` keeps only the min-energy state — provably wrong
+    under occupancy coupling (a cheaper-but-later prefix poisons the
+    suffix) — this keeps every state no other state dominates in BOTH
+    energy and threaded ``t_free``, so the winning chain is extracted
+    from the true trade-off surface.  Same ``solve`` memo keys, same
+    ``level_prefetch`` contract (a batched backend warms one level's
+    (i, state, j) solves in one dispatch), same in-place ``dp`` resume
+    protocol as :func:`_run_dp` (the incremental path truncates past the
+    churn point and re-folds the suffix).  With every segment's
+    (energy, end) monotone in its start the frontier contains the exact
+    optimum; ``frontier_eps``/``beam_width`` trade that for bounded
+    state counts.  Returns the chain of the min-energy final state."""
+    if dp is None:
+        dp = [[(0.0, cursor, -1, 0)]]
+    start = len(dp)
+    for j in range(start, M + 1):
+        if level_prefetch is not None:
+            level_prefetch(j, dp)
+        cands = []
+        for i in range(j):
+            for si, st in enumerate(dp[i]):
+                e_i, cur_i = st[0], st[1]
+                if not np.isfinite(e_i):
+                    continue
+                s = solve(i, j, cur_i.t_free)
+                cands.append((e_i + s.energy, cur_i.advance(s), i, si))
+        front = _pareto_sweep(cands, frontier_eps, beam_width, stats)
+        if not front:
+            front = [(np.inf, cursor, 0, 0)]
+        dp.append(front)
+    chain: list[tuple[int, int]] = []
+    j, si = M, 0
+    while j > 0:
+        st = dp[j][si]
+        chain.append((st[2], j))
+        j, si = st[2], st[3]
+    chain.reverse()
+    return chain
+
+
+def _entry_states(entry):
+    """A DP level's states: the prefix DP keeps one tuple per level, the
+    Pareto DP a list of them — iterate either uniformly."""
+    return entry if isinstance(entry, list) else (entry,)
+
+
 def _collect_chain(chain, order, solve, cursor: TimelineCursor,
                    timeline: GpuTimeline | None = None) -> GroupedSchedule:
     """Walk the DP-selected chain threading the timeline cursor exactly
@@ -140,7 +244,9 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
                      max_groups: int | None = None,
                      planner: BatchedPlanner | None = None,
                      service: PlannerService | None = None,
-                     timeline: GpuTimeline | None = None
+                     timeline: GpuTimeline | None = None,
+                     dp: str = "prefix", frontier_eps: float = 0.0,
+                     beam_width: int | None = None
                      ) -> GroupedSchedule:
     """OG over the deadline-sorted fleet.  ``inner`` picks the per-group
     solver; the J-DOB family routes through the planner service (pass a
@@ -151,7 +257,12 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     picks the group count freely).  ``timeline`` plugs the DP into a GPU
     timeline: the starting occupancy is read from it and the winning
     chain's group occupancies are committed as reservations (serialized
-    semantics — the DP's threading IS Eq. 22's special case)."""
+    semantics — the DP's threading IS Eq. 22's special case).
+    ``dp="pareto"`` switches the recurrence to the Pareto-frontier DP
+    (:func:`_run_dp_pareto` — sound under occupancy coupling, never above
+    the prefix DP), with ``frontier_eps``/``beam_width`` bounding the
+    per-prefix frontier."""
+    assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
     if timeline is not None:
         t_free = max(t_free, timeline.t_free(0.0))
     if service is None:
@@ -166,7 +277,9 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
         # the sequential path, even when a prebuilt planner was supplied
         return optimal_grouping_reference(profile, fleet, edge, inner,
                                           t_free, rho, max_groups,
-                                          timeline=timeline)
+                                          timeline=timeline, dp=dp,
+                                          frontier_eps=frontier_eps,
+                                          beam_width=beam_width)
     if planner is None:
         planner = service.planner(**spec)
     else:
@@ -224,21 +337,29 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
             solve_many([(i, j, tf)])
         return cache[key]
 
-    def level_prefetch(j: int, dp) -> None:
+    def level_prefetch(j: int, states) -> None:
         # level-synchronous batching: when level j folds, dp[0..j-1] are
-        # final, so the threaded t_free of every candidate segment (i, j)
+        # final, so the threaded t_free of every candidate (i, state, j)
         # is known — warm all of the level's missing solves in ONE
-        # batched dispatch
-        need = []
+        # batched dispatch (the pareto DP's frontier states of one level
+        # can share a rounded t_free, hence the seen-set dedup)
+        need, seen = [], set()
         for i in range(j):
-            e_i, cur_i, _ = dp[i]
-            if np.isfinite(e_i) and (i, j, round(cur_i.t_free, 9)) \
-                    not in cache:
-                need.append((i, j, cur_i.t_free))
+            for st in _entry_states(states[i]):
+                key = (i, j, round(st[1].t_free, 9))
+                if np.isfinite(st[0]) and key not in cache \
+                        and key not in seen:
+                    seen.add(key)
+                    need.append((i, j, st[1].t_free))
         if need:
             solve_many(need)
 
-    chain = _run_dp(M, TimelineCursor(t_free), solve, level_prefetch)
+    if dp == "pareto":
+        chain = _run_dp_pareto(M, TimelineCursor(t_free), solve,
+                               level_prefetch, frontier_eps=frontier_eps,
+                               beam_width=beam_width, stats=planner.stats)
+    else:
+        chain = _run_dp(M, TimelineCursor(t_free), solve, level_prefetch)
     return _collect_chain(chain, order, solve, TimelineCursor(t_free),
                           timeline)
 
@@ -280,7 +401,10 @@ class IncrementalOgState:
     def __init__(self, profile, fleet: DeviceFleet, edge,
                  inner: Callable = jdob_schedule, t_free: float = 0.0,
                  rho: float = 0.03e9,
-                 service: PlannerService | None = None):
+                 service: PlannerService | None = None,
+                 dp: str = "prefix", frontier_eps: float = 0.0,
+                 beam_width: int | None = None):
+        assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
         if service is None:
             service = PlannerService(profile, edge, rho=rho)
         else:
@@ -293,13 +417,21 @@ class IncrementalOgState:
         self.t_free = float(t_free)
         self.service = service
         self.planner = service.planner(**spec)
+        #: which recurrence the re-fold runs: the prefix DP or the
+        #: Pareto-frontier DP — the truncate-past-the-churn-point resume
+        #: protocol is identical, only the per-level state differs
+        self.dp_mode = dp
+        self.frontier_eps = frontier_eps
+        self.beam_width = beam_width
         self.fleet = fleet                       # current fleet, append order
         #: deadline-sorted positions -> current-fleet indices (stable order)
         self._order = list(np.argsort(fleet.deadline, kind="stable"))
         self._sorted_fleet = fleet.subset(np.array(self._order, dtype=int))
         self._sub: dict[tuple[int, int], DeviceFleet] = {}
         self._cache: dict[tuple[int, int, float], Schedule] = {}
-        self._dp: list = [(0.0, TimelineCursor(self.t_free), -1)]
+        self._dp: list = ([[(0.0, TimelineCursor(self.t_free), -1, 0)]]
+                          if dp == "pareto"
+                          else [(0.0, TimelineCursor(self.t_free), -1)])
         #: levels re-folded by the last plan()/arrive()/depart() call —
         #: the bench's incrementality observable
         self.last_refold_levels = 0
@@ -339,13 +471,15 @@ class IncrementalOgState:
                 self._solve_many([(i, j, tf)], buckets)
             return self._cache[key]
 
-        def level_prefetch(j: int, dp) -> None:
-            need = []
+        def level_prefetch(j: int, states) -> None:
+            need, seen = [], set()
             for i in range(j):
-                e_i, cur_i, _ = dp[i]
-                if np.isfinite(e_i) and (i, j, round(cur_i.t_free, 9)) \
-                        not in self._cache:
-                    need.append((i, j, cur_i.t_free))
+                for st in _entry_states(states[i]):
+                    key = (i, j, round(st[1].t_free, 9))
+                    if np.isfinite(st[0]) and key not in self._cache \
+                            and key not in seen:
+                        seen.add(key)
+                        need.append((i, j, st[1].t_free))
             if need:
                 self._solve_many(need, buckets)
 
@@ -405,8 +539,15 @@ class IncrementalOgState:
         solve, level_prefetch = self._solver()
         self.last_refold_levels = M + 1 - len(self._dp)
         del self._dp[M + 1:]
-        chain = _run_dp(M, TimelineCursor(self.t_free), solve,
-                        level_prefetch, dp=self._dp)
+        if self.dp_mode == "pareto":
+            chain = _run_dp_pareto(M, TimelineCursor(self.t_free), solve,
+                                   level_prefetch, dp=self._dp,
+                                   frontier_eps=self.frontier_eps,
+                                   beam_width=self.beam_width,
+                                   stats=self.planner.stats)
+        else:
+            chain = _run_dp(M, TimelineCursor(self.t_free), solve,
+                            level_prefetch, dp=self._dp)
         order = np.array(self._order, dtype=int)
         return _collect_chain(chain, order, solve,
                               TimelineCursor(self.t_free))
@@ -416,11 +557,17 @@ def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
                                inner: Callable = jdob_schedule,
                                t_free: float = 0.0, rho: float = 0.03e9,
                                max_groups: int | None = None,
-                               timeline: GpuTimeline | None = None
+                               timeline: GpuTimeline | None = None,
+                               dp: str = "prefix",
+                               frontier_eps: float = 0.0,
+                               beam_width: int | None = None
                                ) -> GroupedSchedule:
     """The seed's sequential DP: one ``inner`` dispatch per (segment,
     t_free) with per-prefix t_free threading.  O(M²) dispatches — kept as
-    the benchmark baseline / oracle and the arbitrary-``inner`` fallback."""
+    the benchmark baseline / oracle and the arbitrary-``inner`` fallback.
+    ``dp="pareto"`` runs the Pareto-frontier recurrence sequentially (the
+    arbitrary-``inner`` route to frontier-sound plans)."""
+    assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
     M = fleet.M
     order = np.argsort(fleet.deadline, kind="stable")
     sorted_fleet = fleet.subset(order)
@@ -437,9 +584,54 @@ def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
 
     if timeline is not None:
         t_free = max(t_free, timeline.t_free(0.0))
-    chain = _run_dp(M, TimelineCursor(t_free), solve)
+    if dp == "pareto":
+        chain = _run_dp_pareto(M, TimelineCursor(t_free), solve,
+                               frontier_eps=frontier_eps,
+                               beam_width=beam_width)
+    else:
+        chain = _run_dp(M, TimelineCursor(t_free), solve)
     return _collect_chain(chain, order, solve, TimelineCursor(t_free),
                           timeline)
+
+
+def bruteforce_grouping(profile, fleet: DeviceFleet, edge,
+                        inner: Callable = jdob_schedule,
+                        t_free: float = 0.0, rho: float = 0.03e9
+                        ) -> GroupedSchedule:
+    """Exhaustive grouping oracle: every one of the 2^(M-1) contiguous
+    partitions of the deadline-sorted fleet, each evaluated left to right
+    with the occupancy cursor threaded exactly as the DPs thread it (and
+    energies summed in the same left-to-right order, so a DP that finds
+    the same chain reproduces the same float).  Exponential — the
+    hypothesis oracle for :func:`_run_dp_pareto` at M ≤ ~8, nothing
+    more."""
+    M = fleet.M
+    assert M <= 16, "bruteforce_grouping is 2^(M-1) — oracle sizes only"
+    order = np.argsort(fleet.deadline, kind="stable")
+    sorted_fleet = fleet.subset(order)
+    cache: dict = {}
+
+    def solve(i: int, j: int, tf: float) -> Schedule:
+        key = (i, j, round(tf, 9))
+        if key not in cache:
+            cache[key] = inner(profile, sorted_fleet.subset(np.arange(i, j)),
+                               edge, t_free=tf, rho=rho)
+        return cache[key]
+
+    best_e, best_chain = np.inf, [(0, M)]
+    for mask in range(1 << max(M - 1, 0)):
+        bounds = [0] + [b + 1 for b in range(M - 1)
+                        if (mask >> b) & 1] + [M]
+        cursor = TimelineCursor(t_free)
+        total = 0.0
+        chain = list(zip(bounds[:-1], bounds[1:]))
+        for (i, j) in chain:
+            s = solve(i, j, cursor.t_free)
+            total = total + s.energy
+            cursor = cursor.advance(s)
+        if total < best_e:
+            best_e, best_chain = total, chain
+    return _collect_chain(best_chain, order, solve, TimelineCursor(t_free))
 
 
 def single_group(profile, fleet, edge, inner=jdob_schedule,

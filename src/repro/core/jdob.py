@@ -322,7 +322,14 @@ class PlannerStats:
     without an external profiler.  The sample list is deterministically
     decimated (every other sample dropped) past ``LATENCY_CAP`` entries —
     percentile estimates stay representative while a 100k-flush run stays
-    bounded; ``plan_calls`` and min/max remain exact."""
+    bounded; ``plan_calls`` and min/max remain exact.
+
+    ``frontier_states``/``frontier_max``/``dominance_pruned`` instrument the
+    Pareto grouping DP (total surviving states across levels, largest single
+    frontier, candidates discarded by the dominance sweep); all zero under
+    the prefix DP.  ``plan_ahead_hits``/``plan_ahead_misses`` count how
+    often a pipelined event loop consumed a speculative plan vs fell back
+    to a synchronous solve."""
 
     hits: int = 0
     misses: int = 0
@@ -333,6 +340,11 @@ class PlannerStats:
     plan_ns_min: int = 0
     plan_ns_max: int = 0
     plan_ns: list = dataclasses.field(default_factory=list)
+    frontier_states: int = 0
+    frontier_max: int = 0
+    dominance_pruned: int = 0
+    plan_ahead_hits: int = 0
+    plan_ahead_misses: int = 0
 
     LATENCY_CAP = 8192
 
@@ -371,6 +383,10 @@ class PlannerStats:
             *(getattr(self, f) + getattr(other, f)
               for f in ("hits", "misses", "evictions", "dispatches",
                         "groups_planned", "plan_calls")))
+        for f in ("frontier_states", "dominance_pruned",
+                  "plan_ahead_hits", "plan_ahead_misses"):
+            setattr(out, f, getattr(self, f) + getattr(other, f))
+        out.frontier_max = max(self.frontier_max, other.frontier_max)
         out.plan_ns = self.plan_ns + other.plan_ns
         if self.plan_calls and other.plan_calls:
             out.plan_ns_min = min(self.plan_ns_min, other.plan_ns_min)

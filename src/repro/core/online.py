@@ -189,9 +189,11 @@ class OnlineScheduler:
                  channel_replan_limit: int = 1,
                  dvfs_slack_frac: float = 0.0,
                  dvfs_quiescent: bool = True,
-                 batch_window: float = 0.0):
+                 batch_window: float = 0.0,
+                 plan_workers: int = 0):
         assert policy in POLICIES, f"unknown policy {policy!r}"
         assert batch_window >= 0.0
+        assert plan_workers >= 0
         assert occupancy in OCCUPANCY_MODES, \
             f"unknown occupancy mode {occupancy!r}"
         assert 0.0 <= dvfs_slack_frac <= 1.0
@@ -247,6 +249,16 @@ class OnlineScheduler:
         #: :meth:`run_batched` bit-identical to the event-at-a-time
         #: :meth:`run` — the parity the scale tests pin.
         self.batch_window = batch_window
+        #: plan-ahead workers for :meth:`run_batched` (0 = synchronous):
+        #: while batch k's flush finishes its bookkeeping, a pool worker
+        #: speculatively solves the PREDICTED flush k+1; the event loop
+        #: consumes the result only on an exact prediction match, so
+        #: results are bit-identical at every worker count (parity-gated)
+        self.plan_workers = plan_workers
+        self._plan_ahead = None                   # PlanAheadPool while piped
+        self._mirror = None                       # sorted arrival-pop replay
+        self._mirror_pos = 0
+        self._spec_key = None                     # outstanding speculation
         self._seq = itertools.count()
         self._arrivals: list = []                 # heap of pending arrivals
         self._timers: list = []                   # heap of gpu-free events
@@ -319,6 +331,15 @@ class OnlineScheduler:
         self._unstretch_tail(arrival.arrival)
         heapq.heappush(self._arrivals,
                        (arrival.arrival, next(self._seq), arrival))
+        if self._mirror is not None:
+            # a mid-run submission invalidates the pop-order replay the
+            # plan-ahead prediction walks; disable speculation (results
+            # are unchanged — every flush falls back to the synchronous
+            # solve) rather than track live heap edits
+            self._mirror = None
+            if self._plan_ahead is not None and self._spec_key is not None:
+                self._plan_ahead.discard(self._spec_key)
+                self._spec_key = None
 
     def _unstretch_tail(self, t: float) -> None:
         """ROADMAP timeline follow-up (a): a quiescent-tail DVFS stretch
@@ -349,7 +370,11 @@ class OnlineScheduler:
     # ---- policy --------------------------------------------------------
     def _policy_time(self) -> float:
         """The armed flush time for the current (non-empty) queue."""
-        q = self._queue
+        return self._policy_time_of(self._queue)
+
+    def _policy_time_of(self, q: list) -> float:
+        """:meth:`_policy_time` over an explicit queue (the plan-ahead
+        prediction replays policy math over hypothetical queues)."""
         if self.policy == "immediate":
             return q[-1].arrival
         if self.policy == "window":
@@ -431,6 +456,9 @@ class OnlineScheduler:
                     return s
         tf = self._t_free(now, sub, arrivals)
         self._slot_tf = tf
+        s = self._take_plan_ahead(now, arrivals, tf)
+        if s is not None:
+            return s
         return self._plan(sub, tf)
 
     def _min_busy_bound(self, sub: DeviceFleet, tf: float) -> float:
@@ -551,6 +579,11 @@ class OnlineScheduler:
                                upload_planned=ev.upload_planned,
                                upload_actual=ev.upload_actual)
         self.gpu_free = self.timeline.horizon
+        # booking done → the next flush's occupancy snapshot is (usually)
+        # final: launch its speculative solve so it overlaps the rest of
+        # this flush's bookkeeping + the next arrival drain.  No-op when
+        # pipelining is off.
+        self._speculate()
 
     # ---- channel actualization -----------------------------------------
     def _upload_geometry(self, s: Schedule, users: np.ndarray, at: float):
@@ -889,6 +922,7 @@ class OnlineScheduler:
                 self._fire_timers(np.inf)
                 return None
             t, _, a = heapq.heappop(self._arrivals)
+            self._mirror_pos += 1
             self._fire_timers(t)
             self.now = t
             self._queue.append(a)
@@ -896,6 +930,7 @@ class OnlineScheduler:
         t_policy = self._policy_time()
         if self._arrivals and self._arrivals[0][0] <= t_policy:
             t, _, a = heapq.heappop(self._arrivals)
+            self._mirror_pos += 1
             self._fire_timers(t)
             self.now = t
             self._queue.append(a)
@@ -951,6 +986,7 @@ class OnlineScheduler:
             if gate is not None and not gate(t):
                 return None                         # arbitration capped
             t, _, a = heapq.heappop(arr)
+            self._mirror_pos += 1
             self._fire_timers(t)
             self.now = t
             q.append(a)
@@ -998,10 +1034,145 @@ class OnlineScheduler:
         """Drain every pending event through the batched loop and
         summarize.  Bit-identical to :meth:`run` at ``batch_window=0``
         (parity-gated in tests/core/test_scale.py); an epsilon window
-        trades a bounded flush deferral for larger batches under load."""
-        while self.step_batch() is not None:
-            pass
+        trades a bounded flush deferral for larger batches under load.
+
+        With ``plan_workers > 0`` the loop pipelines: after each flush
+        books its reservation, a pool worker speculatively solves the
+        PREDICTED next flush (queue membership + fire time replayed from
+        the arrival heap's pop order, occupancy read from the timeline)
+        while the main thread drains the next arrival run; the flush
+        consumes the speculative plan only when its exact (members,
+        fire-time, t_free) key matches reality — any divergence (gap
+        fill, preemption what-if, admission removal, channel actualization,
+        mid-run ``submit()``) falls back to the synchronous solve.  The
+        planner is deterministic for identical inputs, so consumed plans
+        are bitwise the ones the synchronous path would have computed —
+        pipelining changes wall-clock only, never results."""
+        if self.plan_workers <= 0 or self._planner is None:
+            while self.step_batch() is not None:
+                pass
+            return self.result()
+        pool = self.service.plan_pool(self.plan_workers)
+        self._pipeline_begin(pool)
+        try:
+            while self.step_batch() is not None:
+                pass
+        finally:
+            self._pipeline_end()
+            pool.flush()
         return self.result()
+
+    # ---- pipelined planning (plan/execute overlap) ----------------------
+    def _pipeline_begin(self, pool) -> None:
+        """Arm plan-ahead speculation: snapshot the arrival heap's pop
+        order (heap entries are ``(t, seq, a)`` with unique ``seq``, so
+        ascending sort IS the exact pop order) and launch the first
+        speculative solve."""
+        self._plan_ahead = pool
+        self._mirror = sorted(self._arrivals)
+        self._mirror_pos = 0
+        self._spec_key = None
+        self._speculate()
+
+    def _pipeline_end(self) -> None:
+        if self._plan_ahead is not None and self._spec_key is not None:
+            self._plan_ahead.discard(self._spec_key)
+        self._plan_ahead = None
+        self._mirror = None
+        self._mirror_pos = 0
+        self._spec_key = None
+
+    def _peek_next_run(self):
+        """Pure replay of :meth:`_drain_arrivals` over the pop-order
+        mirror: the queue and fire time the next flush WILL have, or
+        ``None`` when nothing is left.  No state is touched — timers,
+        gates and admission run only in the real drain (their absence
+        here just turns a wrong prediction into a key miss)."""
+        arr, pos = self._mirror, self._mirror_pos
+        q = list(self._queue)
+        pol, eps = self.policy, self.batch_window
+        t_policy = self._policy_time_of(q) if q else None
+        while True:
+            if pos >= len(arr):
+                if not q:
+                    return None
+                return q, max(t_policy, q[-1].arrival)
+            t = arr[pos][0]
+            if q and t > t_policy + eps:
+                return q, max(t_policy, q[-1].arrival)
+            a = arr[pos][2]
+            pos += 1
+            q.append(a)
+            if t_policy is None:
+                t_policy = self._policy_time_of(q)
+            elif pol == "immediate":
+                t_policy = t
+            elif pol == "slack":
+                t_policy = min(t_policy, a.arrival +
+                               (1.0 - self.keep_frac) * a.rel_deadline)
+            elif pol == "lastcall":
+                t_policy = min(t_policy, a.abs_deadline
+                               - float(self._l_min[a.user]) - 1e-6)
+
+    def _speculate(self) -> None:
+        """Predict the next flush and submit its solve to the plan-ahead
+        pool.  Never speculates under a live contended/fading channel in
+        channel-aware mode: the effective-rate snapshot depends on uploads
+        in flight at the flush instant, which the key cannot pin."""
+        pool = self._plan_ahead
+        if pool is None or self._mirror is None or self._planner is None:
+            return
+        if (self.channel is not None and not self.channel.static
+                and self.channel_aware):
+            return
+        nxt = self._peek_next_run()
+        if nxt is None:
+            if self._spec_key is not None:
+                pool.discard(self._spec_key)
+                self._spec_key = None
+            return
+        q, t_fire = nxt
+        tf = self.timeline.t_free(t_fire)
+        # exact floats, never rounded: the plan is consumed only when the
+        # flush's inputs are bitwise the predicted ones
+        key = (id(self), tuple(id(a) for a in q), t_fire, tf)
+        if key == self._spec_key:
+            return
+        if self._spec_key is not None:
+            pool.discard(self._spec_key)
+        self._spec_key = key
+        idx = np.array([a.user for a in q])
+        rel = np.array([a.abs_deadline - t_fire for a in q])
+        sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
+        planner = self._planner
+        pool.submit(key, lambda: planner.plan([sub], [tf])[0])
+
+    def _take_plan_ahead(self, now: float, arrivals: list,
+                         tf: float) -> Schedule | None:
+        """The speculative plan for THIS flush, or ``None`` (synchronous
+        fallback).  Consumed only on an exact key match; the tenancy
+        layer's preemption what-if plants ``_trial_plan`` for
+        :meth:`_plan` to consume, which this must never bypass."""
+        pool = self._plan_ahead
+        if pool is None or self._spec_key is None:
+            return None
+        if getattr(self, "_trial_plan", None) is not None:
+            return None
+        stats = self._planner.stats if self._planner is not None else None
+        key = (id(self), tuple(id(a) for a in arrivals), now, tf)
+        if key != self._spec_key:
+            if stats is not None:
+                stats.plan_ahead_misses += 1
+            return None
+        s = pool.take(key)
+        self._spec_key = None
+        if s is None:
+            if stats is not None:
+                stats.plan_ahead_misses += 1
+            return None
+        if stats is not None:
+            stats.plan_ahead_hits += 1
+        return s
 
     def result(self) -> OnlineResult:
         return OnlineResult(float(self.per_user_energy.sum()),

@@ -31,12 +31,92 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
+from concurrent.futures import CancelledError, ThreadPoolExecutor
 from typing import Callable, Sequence
 
 from .cost_models import EdgeProfile
 from .jdob import (BatchedPlanner, ExecutableCache, PlannerStats, _bucket,
                    shared_executable_cache)
 from .task_model import TaskProfile
+
+
+class PlanAheadPool:
+    """Bounded speculative-plan worker pool for pipelined event loops.
+
+    The batched event loop (:meth:`repro.core.online.OnlineScheduler.\\
+    run_batched` at ``plan_workers > 0``) submits the PREDICTED next flush
+    here keyed by its exact inputs (queue membership, fire time, occupancy
+    snapshot) while the current batch executes, then consumes the result
+    only on an exact key match — any divergence between prediction and
+    reality is a miss and the loop falls back to the synchronous solve, so
+    results are bit-identical at every worker count.  The backlog is
+    bounded at ``2 * workers``: on overflow the OLDEST pending entry is
+    evicted (stale speculations self-clean instead of pinning workers).
+
+    Same lifecycle contract as the :class:`~repro.core.jdob.\\
+    ExecutableCache` prefetch pool: lazy thread start, idempotent
+    :meth:`shutdown`, and a worker exception surfaces as a ``None`` take
+    (synchronous fallback) rather than propagating into the event loop.
+    """
+
+    def __init__(self, workers: int = 2):
+        assert workers >= 1
+        self.workers = workers
+        self._pool: ThreadPoolExecutor | None = None
+        self._pending: dict = {}     # key -> Future (insertion-ordered)
+        self.submits = 0
+        self.evictions = 0
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.workers,
+                thread_name_prefix="repro-plan-ahead")
+        return self._pool
+
+    def submit(self, key, fn: Callable) -> None:
+        """Speculatively run ``fn()`` for ``key``; duplicate keys are
+        dropped (the first submission is already in flight)."""
+        if key in self._pending:
+            return
+        while len(self._pending) >= 2 * self.workers:
+            old_key = next(iter(self._pending))
+            self._pending.pop(old_key).cancel()
+            self.evictions += 1
+        self.submits += 1
+        self._pending[key] = self._ensure_pool().submit(fn)
+
+    def take(self, key):
+        """The completed (blocking if still in flight) result for ``key``,
+        or ``None`` when it was never submitted, was evicted, or its
+        worker raised — callers treat ``None`` as a synchronous fallback."""
+        fut = self._pending.pop(key, None)
+        if fut is None:
+            return None
+        try:
+            return fut.result()
+        except CancelledError:
+            return None
+        except Exception:
+            return None
+
+    def discard(self, key) -> None:
+        """Drop a stale speculation (best-effort cancel)."""
+        fut = self._pending.pop(key, None)
+        if fut is not None:
+            fut.cancel()
+
+    def flush(self) -> None:
+        """Drop every pending speculation (end-of-run cleanup)."""
+        for fut in self._pending.values():
+            fut.cancel()
+        self._pending.clear()
+
+    def shutdown(self, wait: bool = True) -> None:
+        self.flush()
+        if self._pool is not None:
+            self._pool.shutdown(wait=wait, cancel_futures=True)
+            self._pool = None
 
 
 def planner_spec(inner: Callable, profile: TaskProfile) -> dict | None:
@@ -88,8 +168,11 @@ class PlannerService:
                  single_bucket_max: int = 64,
                  max_cached_shapes: int | None = None,
                  cache: ExecutableCache | None = None,
-                 default_cohort_size: int | None = None):
+                 default_cohort_size: int | None = None,
+                 default_planner: str = "prefix"):
         assert max_level_buckets >= 1 and bucket_stride >= 2
+        assert default_planner in ("prefix", "pareto"), \
+            f"unknown planner mode {default_planner!r}"
         self.profile = profile
         self.edge = edge
         self.rho = rho
@@ -102,6 +185,9 @@ class PlannerService:
         #: fleets above this size route through hierarchical cohort
         #: planning in :meth:`plan_fleet`; None = always exact OG
         self.default_cohort_size = default_cohort_size
+        #: grouping-DP mode :meth:`plan_fleet` uses when the call does not
+        #: name one: "prefix" (seed recurrence) or "pareto" (frontier)
+        self.default_planner = default_planner
         self._owns_cache = cache is None and max_cached_shapes is not None
         if cache is not None:
             self.cache = cache
@@ -120,6 +206,9 @@ class PlannerService:
         #: (one coherent stats/cache view across tenants)
         self._family: dict[tuple, "PlannerService"] = {
             (id(profile), id(edge)): self}
+        #: family-shared plan-ahead pool box ({workers: PlanAheadPool}) —
+        #: one speculative-plan pool serves every tenant of a deployment
+        self._pool_box: dict[int, PlanAheadPool] = {}
 
     # ---- construction --------------------------------------------------
     def spec_for(self, inner: Callable) -> dict | None:
@@ -146,8 +235,10 @@ class PlannerService:
                 max_level_buckets=self.max_level_buckets,
                 bucket_stride=self.bucket_stride,
                 single_bucket_max=self.single_bucket_max, cache=self.cache,
-                default_cohort_size=self.default_cohort_size)
+                default_cohort_size=self.default_cohort_size,
+                default_planner=self.default_planner)
             svc._family = self._family
+            svc._pool_box = self._pool_box
             self._family[key] = svc
         return svc
 
@@ -175,29 +266,41 @@ class PlannerService:
 
     def plan_fleet(self, fleet, inner: Callable | None = None, *,
                    t_free: float = 0.0, cohort_size: int | None = None,
-                   merge_window: int = 4, timeline=None):
+                   merge_window: int = 4, timeline=None,
+                   planner: str | None = None, frontier_eps: float = 0.0,
+                   beam_width: int | None = None):
         """Fleet-size-aware OG entry point: exact
         :func:`~repro.core.grouping.optimal_grouping` when the fleet fits a
         single cohort (or no cohort size is configured), hierarchical
         :func:`~repro.core.cohort.cohort_grouping` above it.  The cohort
         threshold is ``cohort_size`` when given, else this service's
         ``default_cohort_size``; ``None`` for both means always-exact.
-        This is THE planning call the serving layer makes — it inherits the
-        service's rho, shape policy and compile cache."""
+        ``planner`` selects the grouping DP — ``"prefix"`` (seed) or
+        ``"pareto"`` (frontier of (energy, cursor) states; see grouping.py)
+        — defaulting to this service's ``default_planner``;
+        ``frontier_eps``/``beam_width`` bound the frontier.  This is THE
+        planning call the serving layer makes — it inherits the service's
+        rho, shape policy and compile cache."""
         # local imports: grouping/cohort import this module at top level
         from .cohort import cohort_grouping
         from .grouping import optimal_grouping
         from .jdob import jdob_schedule
         inner = jdob_schedule if inner is None else inner
+        dp = self.default_planner if planner is None else planner
+        assert dp in ("prefix", "pareto"), f"unknown planner mode {dp!r}"
         C = self.default_cohort_size if cohort_size is None else cohort_size
         if C is None or fleet.M <= C:
             return optimal_grouping(self.profile, fleet, self.edge, inner,
                                     t_free=t_free, rho=self.rho,
-                                    service=self, timeline=timeline)
+                                    service=self, timeline=timeline, dp=dp,
+                                    frontier_eps=frontier_eps,
+                                    beam_width=beam_width)
         return cohort_grouping(self.profile, fleet, self.edge, inner,
                                t_free=t_free, rho=self.rho, cohort_size=C,
                                merge_window=merge_window, service=self,
-                               timeline=timeline)
+                               timeline=timeline, dp=dp,
+                               frontier_eps=frontier_eps,
+                               beam_width=beam_width)
 
     # ---- shape-bucket policy -------------------------------------------
     @staticmethod
@@ -277,11 +380,14 @@ class PlannerService:
     def level_group_pad(self, buckets: Sequence[int], count: int
                         ) -> int | None:
         """Group padding for a level dispatch: single-bucket fleets keep
-        one fixed (seed-style) group shape; bucketed fleets pad to the
-        ``group_pad`` series."""
+        one fixed (seed-style) group shape while the level fits it (the
+        pareto DP's frontier states can overflow a level past M candidate
+        solves — those fall back to the ``group_pad`` series); bucketed
+        fleets always pad to the series."""
         if len(buckets) == 1:
-            return min(buckets[0], self.group_chunk) \
-                if count <= self.group_chunk else None
+            pad = min(buckets[0], self.group_chunk)
+            if count <= pad:
+                return pad
         return self.group_pad(count)
 
     # ---- observability -------------------------------------------------
@@ -303,11 +409,30 @@ class PlannerService:
     def cached_shapes(self) -> int:
         return len(self.cache)
 
+    # ---- pipelined planning --------------------------------------------
+    def plan_pool(self, workers: int) -> PlanAheadPool:
+        """The family-shared :class:`PlanAheadPool` for speculative
+        next-flush planning (memoized per worker count; every tenant of a
+        deployment funnels through the same pool so total speculative
+        concurrency stays bounded).  The pool is shut down by
+        :meth:`close` and, as a safety net, by a last-reference
+        finalizer."""
+        pool = self._pool_box.get(workers)
+        if pool is None:
+            pool = PlanAheadPool(workers)
+            self._pool_box[workers] = pool
+            weakref.finalize(self, PlanAheadPool.shutdown, pool, False)
+        return pool
+
     # ---- lifecycle -----------------------------------------------------
     def close(self) -> None:
         """Shut down the private compile cache's prefetch pool (no-op for
         services on the shared process-wide cache — that pool outlives any
-        one service by design).  Idempotent."""
+        one service by design) and any plan-ahead pools this family
+        started.  Idempotent."""
+        for pool in self._pool_box.values():
+            pool.shutdown(wait=True)
+        self._pool_box.clear()
         if self._owns_cache:
             self.cache.shutdown(wait=True)
 

@@ -134,7 +134,8 @@ class _TenantScheduler(OnlineScheduler):
                          channel_stagger=arbiter.channel_stagger,
                          dvfs_slack_frac=arbiter.dvfs_slack_frac,
                          dvfs_quiescent=arbiter.dvfs_quiescent,
-                         batch_window=arbiter.batch_window)
+                         batch_window=arbiter.batch_window,
+                         plan_workers=arbiter.plan_workers)
         self.arbiter = arbiter
         self.tid = self.tenant_id = tid
         self._pending_preempt: list[Reservation] | None = None
@@ -357,10 +358,11 @@ class MultiTenantScheduler:
                  channel: ChannelModel | None = None,
                  channel_aware: bool = True, channel_stagger: bool = False,
                  dvfs_slack_frac: float = 0.0, dvfs_quiescent: bool = True,
-                 batch_window: float = 0.0,
+                 batch_window: float = 0.0, plan_workers: int = 0,
                  on_flush=None, on_replan=None, on_gpu_free=None,
                  on_degrade=None):
         assert len(tenants) >= 1
+        assert plan_workers >= 0
         assert admission in ADMISSION_POLICIES, \
             f"unknown admission policy {admission!r}"
         assert occupancy in OCCUPANCY_MODES, \
@@ -386,6 +388,10 @@ class MultiTenantScheduler:
         #: every tenant scheduler (0 keeps :meth:`run_batched`
         #: bit-identical to :meth:`run`)
         self.batch_window = batch_window
+        #: plan-ahead workers for :meth:`run_batched`, threaded to every
+        #: tenant scheduler (0 = synchronous; must be set before the
+        #: tenant schedulers read it below)
+        self.plan_workers = plan_workers
         self.timeline = GpuTimeline(mode=occupancy)
         self.ledger = self.timeline          # PR-3 name, same object
         self.on_degrade = on_degrade
@@ -696,15 +702,41 @@ class MultiTenantScheduler:
             if gate(t_fire):
                 sch._fire_timers(t_fire)
                 ev = sch._flush(t_fire)
+                if self.plan_workers > 0:
+                    # the SHARED timeline moved: every other tenant's
+                    # speculative occupancy snapshot is stale, and the
+                    # flusher's own may be too (its post-booking
+                    # speculation ran before victim re-plans / scrubs) —
+                    # refresh them all (cheap key-equality no-op when
+                    # nothing changed)
+                    for s in self.schedulers:
+                        s._speculate()
         self.now = max(self.now, sch.now)
         return best_k, ev
 
     def run_batched(self) -> MultiTenantResult:
         """Drain every tenant through the batched loop and summarize —
         bit-identical to :meth:`run` at ``batch_window == 0`` (parity-
-        gated in tests/core/test_scale.py)."""
-        while self.step_batch() is not None:
-            pass
+        gated in tests/core/test_scale.py).  ``plan_workers > 0``
+        pipelines every tenant's next-flush solve through one shared
+        plan-ahead pool (see :meth:`OnlineScheduler.run_batched`);
+        consumption is still gated on exact prediction matches, so
+        results stay bit-identical at any worker count."""
+        pipelined = [sch for sch in self.schedulers
+                     if self.plan_workers > 0 and sch._planner is not None]
+        pool = None
+        if pipelined:
+            pool = self.service.plan_pool(self.plan_workers)
+            for sch in pipelined:
+                sch._pipeline_begin(pool)
+        try:
+            while self.step_batch() is not None:
+                pass
+        finally:
+            for sch in pipelined:
+                sch._pipeline_end()
+            if pool is not None:
+                pool.flush()
         return self.result()
 
     def result(self) -> MultiTenantResult:

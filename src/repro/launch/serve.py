@@ -60,19 +60,30 @@ def _verify(report_logits, executor, reqs) -> float:
 
 
 def _plan_latency_line(service) -> None:
-    lat = service.stats().plan_latency()
+    stats = service.stats()
+    lat = stats.plan_latency()
     if lat["count"]:
         print(f"plan latency: {lat['count']} dispatch(es), "
               f"min {lat['min_ms']:.2f} ms / p50 {lat['p50_ms']:.2f} ms / "
               f"p99 {lat['p99_ms']:.2f} ms / max {lat['max_ms']:.2f} ms")
+    if stats.frontier_states:
+        print(f"pareto DP: {stats.frontier_states} frontier state(s) "
+              f"(max {stats.frontier_max}/level), "
+              f"{stats.dominance_pruned} dominance-pruned")
+    if stats.plan_ahead_hits or stats.plan_ahead_misses:
+        total = stats.plan_ahead_hits + stats.plan_ahead_misses
+        print(f"plan-ahead: {stats.plan_ahead_hits}/{total} speculative "
+              f"plan(s) consumed")
 
 
 def _serve_offline(server, fleet, profile, edge, reqs, args) -> dict:
     t0 = time.perf_counter()
-    report = server.serve(reqs, cohort_size=args.cohort_size)
+    report = server.serve(reqs, cohort_size=args.cohort_size,
+                          planner=args.planner)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
+          f"planner={args.planner}  "
           f"(planned+served in {serve_s:.2f}s via planner service)")
     for g, s in zip(report.groups, report.schedules):
         print(f"  group {list(g)}: partition ñ={s.partition}, "
@@ -84,6 +95,7 @@ def _serve_offline(server, fleet, profile, edge, reqs, args) -> dict:
     err = _verify(report.logits, server.executor, reqs)
     print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
     assert err < 1e-3
+    _plan_latency_line(server.service)
     return dict(energy=report.energy, lc=lc.energy, err=err)
 
 
@@ -96,7 +108,8 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
                                  channel_aware=not args.channel_nominal,
                                  channel_stagger=args.channel_stagger,
                                  batch_window=args.batch_window,
-                                 batch_events=args.batch_events)
+                                 batch_events=args.batch_events,
+                                 plan_workers=args.plan_workers)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
@@ -176,7 +189,8 @@ def _serve_tenants(args) -> dict:
                                channel=_build_channel(args),
                                channel_aware=not args.channel_nominal,
                                channel_stagger=args.channel_stagger,
-                               batch_window=args.batch_window)
+                               batch_window=args.batch_window,
+                               plan_workers=args.plan_workers)
     t0 = time.perf_counter()
     report = server.serve_online(streams, batch_events=args.batch_events)
     serve_s = time.perf_counter() - t0
@@ -258,6 +272,17 @@ def main(argv=None) -> dict:
                          "than this split into deadline-sorted cohorts "
                          "merged by a boundary DP (offline serving; "
                          "None = always-exact OG)")
+    ap.add_argument("--planner", default="prefix",
+                    choices=["prefix", "pareto"],
+                    help="grouping DP: prefix = the seed's one-state-per-"
+                         "prefix recurrence; pareto = frontier of "
+                         "(energy, cursor) states — sound under occupancy "
+                         "coupling, never above prefix (offline serving)")
+    ap.add_argument("--plan-workers", type=int, default=0,
+                    help="plan-ahead workers for --batch-events: overlap "
+                         "the next flush's speculative solve with the "
+                         "current batch (0 = synchronous; results are "
+                         "bit-identical at any count)")
     ap.add_argument("--batch-events", action="store_true",
                     help="drain the event queue through the fleet-scale "
                          "batched loop (bit-identical at "

@@ -158,8 +158,8 @@ class CoInferenceServer:
                                requests, sched)
 
     def serve(self, requests: list[Request], t_free: float = 0.0, *,
-              cohort_size: int | None = None, merge_window: int = 4
-              ) -> ServeReport:
+              cohort_size: int | None = None, merge_window: int = 4,
+              planner: str | None = None) -> ServeReport:
         """One-shot wave: OG-group, plan and execute every request.
 
         ``cohort_size`` bounds the exact OG problem size: fleets larger
@@ -167,13 +167,16 @@ class CoInferenceServer:
         boundary-merge DP — :func:`~repro.core.cohort.cohort_grouping`);
         fleets that fit stay on the exact path, bit-identical to the
         previous releases.  ``None`` defers to the planner service's
-        ``default_cohort_size``."""
+        ``default_cohort_size``.  ``planner`` picks the grouping DP —
+        ``"prefix"`` or ``"pareto"`` (occupancy-coupling-sound frontier
+        DP) — defaulting to the service's ``default_planner``."""
         fleet = dataclasses.replace(
             self.fleet,
             deadline=np.asarray([r.deadline for r in requests]))
         grouped = self.service.plan_fleet(fleet, self.inner, t_free=t_free,
                                           cohort_size=cohort_size,
-                                          merge_window=merge_window)
+                                          merge_window=merge_window,
+                                          planner=planner)
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)
@@ -193,7 +196,7 @@ class CoInferenceServer:
                   channel: ChannelModel | None = None,
                   channel_aware: bool = True,
                   channel_stagger: bool = False,
-                  batch_window: float = 0.0,
+                  batch_window: float = 0.0, plan_workers: int = 0,
                   on_flush=None, on_gpu_free=None) -> OnlineScheduler:
         """An event-driven scheduler wired to this server's fleet and
         planner service (compiled shapes shared with ``serve``).
@@ -213,6 +216,7 @@ class CoInferenceServer:
                                channel_aware=channel_aware,
                                channel_stagger=channel_stagger,
                                batch_window=batch_window,
+                               plan_workers=plan_workers,
                                on_flush=on_flush, on_gpu_free=on_gpu_free)
 
     def serve_online(self, requests: list[Request], *,
@@ -223,7 +227,8 @@ class CoInferenceServer:
                      channel_aware: bool = True,
                      channel_stagger: bool = False,
                      batch_window: float = 0.0,
-                     batch_events: bool = False) -> OnlineServeReport:
+                     batch_events: bool = False,
+                     plan_workers: int = 0) -> OnlineServeReport:
         """Serve requests arriving over time (``Request.arrival``).
 
         Each policy flush executes its planned batch on the model the
@@ -236,7 +241,9 @@ class CoInferenceServer:
         (:meth:`~repro.core.OnlineScheduler.run_batched`): events sharing
         a timestamp — or falling inside ``batch_window`` seconds — drain
         in one pass; at ``batch_window=0`` the outcome is bit-identical to
-        the event-at-a-time loop."""
+        the event-at-a-time loop.  ``plan_workers > 0`` (batched loop
+        only) pipelines each flush's solve against the previous flush's
+        execution — results stay bit-identical at any worker count."""
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)
@@ -252,6 +259,8 @@ class CoInferenceServer:
                                channel=channel, channel_aware=channel_aware,
                                channel_stagger=channel_stagger,
                                batch_window=batch_window,
+                               plan_workers=plan_workers if batch_events
+                               else 0,
                                on_flush=execute)
         for row, r in enumerate(requests):
             sched.submit(OnlineArrival(r.user, r.arrival, r.deadline,
@@ -340,7 +349,7 @@ class MultiTenantServer:
                  channel: ChannelModel | None = None,
                  channel_aware: bool = True,
                  channel_stagger: bool = False,
-                 batch_window: float = 0.0):
+                 batch_window: float = 0.0, plan_workers: int = 0):
         assert len(models) >= 1
         self.models = list(models)
         self.executors = [BlockwiseExecutor(m.cfg, m.params)
@@ -357,6 +366,7 @@ class MultiTenantServer:
         self.channel_aware = channel_aware
         self.channel_stagger = channel_stagger
         self.batch_window = batch_window
+        self.plan_workers = plan_workers
         self.service = (service if service is not None
                         else PlannerService(self.models[0].profile,
                                             self.models[0].edge, rho=rho))
@@ -400,6 +410,7 @@ class MultiTenantServer:
             channel=self.channel, channel_aware=self.channel_aware,
             channel_stagger=self.channel_stagger,
             batch_window=self.batch_window,
+            plan_workers=self.plan_workers if batch_events else 0,
             on_flush=execute, on_replan=execute, on_degrade=degrade)
         for tid, reqs in enumerate(requests):
             order = sorted(range(len(reqs)), key=lambda i: reqs[i].arrival)

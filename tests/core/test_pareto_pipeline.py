@@ -1,0 +1,351 @@
+"""Pareto-frontier grouping DP (soundness under occupancy coupling) and
+the pipelined plan/execute overlap of the batched event loop (bitwise
+parity at every worker count)."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (IncrementalOgState, MultiTenantScheduler,
+                        OnlineArrival, OnlineScheduler, PlanAheadPool,
+                        PlannerService, Tenant, bruteforce_grouping,
+                        cohort_grouping, make_edge_profile, make_fleet,
+                        mobilenet_v2_profile, optimal_grouping,
+                        optimal_grouping_reference, poisson_arrivals)
+
+PROF = mobilenet_v2_profile()
+EDGE = make_edge_profile(PROF)
+PROF2 = mobilenet_v2_profile(input_res=160)
+EDGE2 = make_edge_profile(PROF2)
+
+POLICIES = ("immediate", "window", "slack", "lastcall")
+
+#: one service per module: compiled planner shapes amortize across tests
+SVC = PlannerService(PROF, EDGE)
+
+
+def _assert_same_plan(a, b):
+    assert a.energy == b.energy
+    assert [list(g) for g in a.groups] == [list(g) for g in b.groups]
+    np.testing.assert_array_equal(a.per_user_energy, b.per_user_energy)
+    assert a.t_free_end == b.t_free_end
+
+
+def _assert_same_result(a, b):
+    assert a.energy == b.energy
+    assert a.n_flushes == b.n_flushes
+    assert a.batch_sizes == b.batch_sizes
+    assert a.violations == b.violations
+    assert a.flush_times == b.flush_times
+    assert a.f_edges == b.f_edges
+    np.testing.assert_array_equal(a.per_user_energy, b.per_user_energy)
+
+
+# ---------------------------------------------------------------------------
+# pareto DP: <= prefix everywhere, == bruteforce at oracle sizes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(M=st.integers(2, 6), beta_lo=st.floats(3.0, 10.0),
+       spread=st.floats(1.0, 30.0), seed=st.integers(0, 99),
+       t_free=st.floats(0.0, 0.05))
+def test_property_pareto_matches_bruteforce(M, beta_lo, spread, seed,
+                                            t_free):
+    """The frontier DP is exact at oracle sizes: bitwise the exhaustive
+    2^(M-1)-partition minimum, including under nonzero starting occupancy
+    (where energy couples to the threaded cursor and the prefix DP is
+    only a heuristic)."""
+    fleet = make_fleet(M, PROF, EDGE, beta=(beta_lo, beta_lo + spread),
+                       seed=seed)
+    pa = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                          t_free=t_free)
+    bf = bruteforce_grouping(PROF, fleet, EDGE, t_free=t_free)
+    assert pa.energy == bf.energy
+
+
+@settings(max_examples=12, deadline=None)
+@given(M=st.integers(3, 10), beta_lo=st.floats(3.0, 10.0),
+       spread=st.floats(1.0, 40.0), seed=st.integers(0, 99),
+       t_free=st.floats(0.0, 0.08))
+def test_property_pareto_never_above_prefix(M, beta_lo, spread, seed,
+                                            t_free):
+    """The prefix DP's single state per prefix is one member of the
+    frontier, so the pareto chain's energy can never exceed it."""
+    fleet = make_fleet(M, PROF, EDGE, beta=(beta_lo, beta_lo + spread),
+                       seed=seed)
+    ex = optimal_grouping(PROF, fleet, EDGE, service=SVC, t_free=t_free)
+    pa = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                          t_free=t_free)
+    assert pa.energy <= ex.energy
+
+
+def test_pareto_strictly_below_prefix_on_blind_spot():
+    """The M=96 occupancy-coupled case PR 6 exposed: a cheaper-but-later
+    prefix poisons the prefix DP's suffix, and the frontier DP must land
+    strictly below it."""
+    fleet = make_fleet(96, PROF, EDGE, beta=(4.0, 30.0), seed=7)
+    ex = optimal_grouping(PROF, fleet, EDGE, service=SVC)
+    pa = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto")
+    assert pa.energy < ex.energy
+    assert sorted(u for g in pa.groups for u in g) == list(range(96))
+
+
+def test_pareto_reference_path_matches_batched():
+    """The sequential reference recurrence (arbitrary-``inner`` fallback)
+    and the batched-service path agree bitwise in pareto mode."""
+    fleet = make_fleet(7, PROF, EDGE, beta=(4.0, 25.0), seed=11)
+    _assert_same_plan(
+        optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto"),
+        optimal_grouping_reference(PROF, fleet, EDGE, dp="pareto"))
+
+
+def test_beam_width_one_recovers_min_energy_greedy():
+    """beam_width=1 keeps only the cheapest state per prefix — the prefix
+    DP's view — so its energy can never beat the full frontier's."""
+    fleet = make_fleet(12, PROF, EDGE, beta=(4.0, 30.0), seed=5)
+    full = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto")
+    beam = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                            beam_width=1)
+    assert full.energy <= beam.energy
+
+
+def test_frontier_eps_bounds_quality_loss():
+    """Epsilon dominance trades frontier width for a bounded quality
+    loss; the pruned plan stays a valid partition."""
+    fleet = make_fleet(16, PROF, EDGE, beta=(4.0, 30.0), seed=9)
+    full = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto")
+    eps = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                           frontier_eps=0.05)
+    assert eps.energy >= full.energy
+    assert sorted(u for g in eps.groups for u in g) == list(range(16))
+
+
+def test_pareto_frontier_counters_recorded():
+    svc = PlannerService(PROF, EDGE)
+    fleet = make_fleet(10, PROF, EDGE, beta=(4.0, 30.0), seed=1)
+    optimal_grouping(PROF, fleet, EDGE, service=svc, dp="pareto")
+    st_ = svc.stats()
+    assert st_.frontier_states > 0
+    assert st_.frontier_max >= 1
+    assert st_.dominance_pruned >= 0
+    # the prefix DP must leave them untouched
+    svc2 = PlannerService(PROF, EDGE)
+    optimal_grouping(PROF, fleet, EDGE, service=svc2)
+    assert svc2.stats().frontier_states == 0
+
+
+# ---------------------------------------------------------------------------
+# incremental pareto: re-fold bit-identical to scratch under churn
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(M=st.integers(3, 8), beta_lo=st.floats(4.0, 10.0),
+       spread=st.floats(1.0, 30.0), seed=st.integers(0, 99),
+       new_beta=st.floats(2.0, 50.0))
+def test_property_incremental_pareto_matches_scratch(M, beta_lo, spread,
+                                                     seed, new_beta):
+    """Arrival then departure, each re-folding only the frontier suffix,
+    bit-identical to the from-scratch pareto DP on the mutated fleet."""
+    fleet = make_fleet(M, PROF, EDGE, beta=(beta_lo, beta_lo + spread),
+                       seed=seed)
+    state = IncrementalOgState(PROF, fleet, EDGE, service=SVC, dp="pareto")
+    _assert_same_plan(state.plan(),
+                      optimal_grouping(PROF, fleet, EDGE, service=SVC,
+                                       dp="pareto"))
+    row = make_fleet(1, PROF, EDGE, beta=new_beta, seed=seed + 1)
+    _assert_same_plan(state.arrive(row),
+                      optimal_grouping(PROF, state.fleet, EDGE, service=SVC,
+                                       dp="pareto"))
+    gone = seed % state.M
+    _assert_same_plan(state.depart(gone),
+                      optimal_grouping(PROF, state.fleet, EDGE, service=SVC,
+                                       dp="pareto"))
+
+
+# ---------------------------------------------------------------------------
+# hierarchical cohorts band against the sound pareto baseline
+# ---------------------------------------------------------------------------
+
+def test_cohort_pareto_bands_one_sided():
+    """With the frontier DP underneath, the hierarchical plan can only sit
+    ABOVE the frontier-exact energy (merge-window slack), never below —
+    the sound-baseline banding the prefix DP could not give."""
+    fleet = make_fleet(96, PROF, EDGE, beta=(4.0, 30.0), seed=7)
+    pa = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto")
+    coh = cohort_grouping(PROF, fleet, EDGE, cohort_size=48, service=SVC,
+                          dp="pareto")
+    assert coh.energy >= pa.energy - 1e-12
+    assert coh.energy <= pa.energy * 1.10
+    assert sorted(u for g in coh.groups for u in g) == list(range(96))
+
+
+def test_plan_fleet_routes_planner_mode():
+    svc = PlannerService(PROF, EDGE, default_planner="pareto")
+    fleet = make_fleet(8, PROF, EDGE, beta=(4.0, 25.0), seed=2)
+    _assert_same_plan(svc.plan_fleet(fleet),
+                      optimal_grouping(PROF, fleet, EDGE, service=svc,
+                                       dp="pareto"))
+    # per-call override beats the default
+    _assert_same_plan(svc.plan_fleet(fleet, planner="prefix"),
+                      optimal_grouping(PROF, fleet, EDGE, service=svc))
+
+
+# ---------------------------------------------------------------------------
+# pipelined event loop: plan_workers>0 bit-identical to synchronous
+# ---------------------------------------------------------------------------
+
+def _online_pair(policy, M, rate, seed, workers=2, **kw):
+    fleet = make_fleet(M, PROF, EDGE, beta=20.0, seed=seed)
+    arrivals = sorted(poisson_arrivals(M, rate, fleet, seed=seed),
+                      key=lambda a: a.arrival)
+    out = []
+    for w in (0, workers):
+        s = OnlineScheduler(PROF, fleet, EDGE, policy=policy, window=0.02,
+                            service=SVC, plan_workers=w, **kw)
+        s.submit_many(list(arrivals))
+        out.append(s.run_batched())
+    return out
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("rate,seed", [(40.0, 0), (800.0, 1)])
+def test_pipelined_bit_identical_single_tenant(policy, rate, seed):
+    sync, piped = _online_pair(policy, 10, rate, seed)
+    _assert_same_result(sync, piped)
+
+
+@pytest.mark.parametrize("occupancy", ["serialized", "interleaved"])
+def test_pipelined_parity_both_occupancy_modes(occupancy):
+    sync, piped = _online_pair("immediate", 8, 500.0, 2,
+                               occupancy=occupancy)
+    _assert_same_result(sync, piped)
+
+
+def test_pipelined_parity_against_event_at_a_time_run():
+    """plan_workers>0 run_batched equals the event-at-a-time run() loop,
+    not just the synchronous batched loop."""
+    fleet = make_fleet(10, PROF, EDGE, beta=20.0, seed=4)
+    arrivals = sorted(poisson_arrivals(10, 300.0, fleet, seed=4),
+                      key=lambda a: a.arrival)
+    s0 = OnlineScheduler(PROF, fleet, EDGE, policy="slack", service=SVC)
+    s0.submit_many(list(arrivals))
+    s1 = OnlineScheduler(PROF, fleet, EDGE, policy="slack", service=SVC,
+                         plan_workers=3)
+    s1.submit_many(list(arrivals))
+    _assert_same_result(s0.run(), s1.run_batched())
+
+
+def test_pipelined_speculation_hits_recorded():
+    svc = PlannerService(PROF, EDGE)
+    fleet = make_fleet(12, PROF, EDGE, beta=20.0, seed=6)
+    s = OnlineScheduler(PROF, fleet, EDGE, policy="slack", service=svc,
+                        plan_workers=2)
+    s.submit_many(sorted(poisson_arrivals(12, 100.0, fleet, seed=6),
+                         key=lambda a: a.arrival))
+    s.run_batched()
+    st_ = svc.stats()
+    assert st_.plan_ahead_hits + st_.plan_ahead_misses > 0
+    assert st_.plan_ahead_hits > 0       # static channel: predictions land
+
+
+def _mts_pair(policies, rate, seed, workers=2, **kw):
+    tA = Tenant(PROF, make_fleet(8, PROF, EDGE, beta=20.0, seed=seed),
+                EDGE, name="A", policy=policies[0], window=0.02)
+    tB = Tenant(PROF2, make_fleet(6, PROF2, EDGE2, beta=25.0, seed=seed + 1),
+                EDGE2, name="B", policy=policies[1], window=0.02)
+    trA = poisson_arrivals(8, rate, tA.fleet, seed=seed)
+    trB = poisson_arrivals(6, rate, tB.fleet, seed=seed + 1)
+    out = []
+    for w in (0, workers):
+        mts = MultiTenantScheduler([tA, tB], plan_workers=w, **kw)
+        mts.submit_traces([list(trA), list(trB)])
+        out.append(mts.run_batched())
+    return out
+
+
+@pytest.mark.parametrize("policies", [("immediate", "slack"),
+                                      ("window", "lastcall")])
+def test_pipelined_bit_identical_multi_tenant(policies):
+    a, b = _mts_pair(policies, 300.0, 0)
+    assert a.energy == b.energy
+    assert a.violations == b.violations
+    assert a.preemptions == b.preemptions
+    for ta, tb in zip(a.tenants, b.tenants):
+        _assert_same_result(ta.result, tb.result)
+
+
+@pytest.mark.parametrize("admission", ["degrade", "reject"])
+def test_pipelined_parity_with_admission_control(admission):
+    a, b = _mts_pair(("immediate", "immediate"), 2000.0, 1,
+                     admission=admission)
+    assert a.energy == b.energy
+    for ta, tb in zip(a.tenants, b.tenants):
+        assert ta.degraded == tb.degraded and ta.rejected == tb.rejected
+        _assert_same_result(ta.result, tb.result)
+
+
+def test_pipelined_parity_under_forced_preemption():
+    """Tenant B's tight-deadline flush preempts A's queued booking; the
+    preemption what-if plants ``_trial_plan``, which plan-ahead must never
+    bypass — every downstream number must match the synchronous loop."""
+    fleetA = make_fleet(8, PROF, EDGE, beta=30.0, seed=0)
+    fleetB = make_fleet(2, PROF, EDGE, beta=3.0, seed=1)
+    trA = ([OnlineArrival(m, 0.0, float(fleetA.deadline[m]))
+            for m in range(4)]
+           + [OnlineArrival(m, 1e-4, float(fleetA.deadline[m]))
+              for m in range(4, 8)])
+    trB = [OnlineArrival(0, 2e-4, 0.06)]
+    out = []
+    for w in (0, 2):
+        A = Tenant(PROF, fleetA, EDGE, name="A", policy="immediate")
+        B = Tenant(PROF, fleetB, EDGE, name="B", policy="immediate")
+        mts = MultiTenantScheduler([A, B], preemption=True, plan_workers=w)
+        mts.submit_traces([list(trA), list(trB)])
+        out.append(mts.run_batched())
+    a, b = out
+    assert a.preemptions == b.preemptions >= 1
+    assert a.energy == b.energy
+    for ta, tb in zip(a.tenants, b.tenants):
+        _assert_same_result(ta.result, tb.result)
+
+
+# ---------------------------------------------------------------------------
+# PlanAheadPool mechanics
+# ---------------------------------------------------------------------------
+
+def test_plan_ahead_pool_backlog_evicts_oldest():
+    pool = PlanAheadPool(workers=1)
+    try:
+        import threading
+        release = threading.Event()
+        pool.submit("block", release.wait)          # occupies the worker
+        for k in range(4):
+            pool.submit(("spec", k), lambda k=k: k)
+        # backlog cap is 2*workers: oldest speculations evicted
+        assert pool.evictions > 0
+        release.set()
+        assert pool.take(("spec", 3)) == 3          # newest survived
+        assert pool.take("gone") is None
+    finally:
+        pool.shutdown(wait=False)
+
+
+def test_plan_ahead_pool_worker_exception_is_a_miss():
+    pool = PlanAheadPool(workers=1)
+    try:
+        def boom():
+            raise RuntimeError("planner exploded")
+        pool.submit("k", boom)
+        assert pool.take("k") is None               # sync fallback, no raise
+    finally:
+        pool.shutdown(wait=False)
+
+
+def test_service_plan_pool_shared_and_closed():
+    svc = PlannerService(PROF, EDGE)
+    pool = svc.plan_pool(2)
+    assert svc.plan_pool(2) is pool                 # memoized
+    sibling = svc.for_profile(PROF2, EDGE2)
+    assert sibling.plan_pool(2) is pool             # family-shared
+    svc.close()                                     # shuts the pool
+    assert pool._pool is None
