@@ -33,9 +33,14 @@ soundness invariants are gated absolutely: the Pareto-frontier DP's
 energy must be ``<=`` the prefix DP's, and the hierarchical cohort chain
 must band ONE-SIDED against the pareto baseline (the prefix band is
 two-sided by construction — the prefix DP is itself unsound under
-occupancy coupling — so it is reported, not gated).  Wall times and
-planner latency percentiles are reported, never gated — they measure
-the CI host.
+occupancy coupling — so it is reported, not gated).  The ``traced``
+rows (the same online runs with the telemetry stack attached) gate
+three ways: bitwise parity with the untraced twin and a schema-clean
+trace are correctness failures, traced goodput is held to the baseline
+``online`` rows at ``--scale-tolerance``, and the wall-clock tracing
+overhead ratio is bounded by ``--trace-overhead-max``.  Other wall
+times and planner latency percentiles are reported, never gated — they
+measure the CI host.
 
 Cases are keyed by (M, scenario) / (tenants, users) / scenario name;
 cases present in only one file are reported but never fail the gate
@@ -199,6 +204,54 @@ def _gate_scale_section(section: str, base_doc: dict, fresh_doc: dict,
     return failures
 
 
+def _gate_scale_traced(base_doc: dict, fresh_doc: dict, tolerance: float,
+                       overhead_max: float) -> int:
+    """Telemetry gates on the fresh ``traced`` rows: bitwise parity with
+    the untraced twin and a clean trace schema are correctness (fail
+    outright); traced goodput is gated against the BASELINE ``online``
+    rows (tracing must not cost simulated throughput — it cannot, given
+    parity, so this pins the whole chain); the wall-clock
+    ``trace_overhead`` ratio is gated at ``overhead_max`` (design target
+    is < 5%; the default band is wider to ride out shared-CI timer
+    noise on short runs)."""
+    base = {r["users"]: r for r in base_doc.get("online", [])}
+    fresh = {r["users"]: r for r in fresh_doc.get("traced", [])}
+    if not fresh:
+        print("no traced scale cases in fresh run; nothing to gate")
+        return 0
+    failures = 0
+    print(f"\n{'traced case':<28} {'baseline':>12} {'fresh':>12} "
+          f"{'delta':>8}  verdict")
+    for M in sorted(fresh):
+        row = fresh[M]
+        if not row.get("parity", True):
+            print(f"M={M:<7} traced run DIVERGED from untraced loop",
+                  file=sys.stderr)
+            failures += 1
+        if not row.get("trace_clean", True):
+            print(f"M={M:<7} traced run emitted a schema-invalid trace",
+                  file=sys.stderr)
+            failures += 1
+        if M in base:
+            b, f_ = base[M]["goodput_rps"], row["goodput_rps"]
+            ok = f_ >= b * (1.0 - tolerance)
+            delta = f_ / b - 1.0 if b else 0.0
+            verdict = "ok" if ok else f"SCALE REGRESSION > {tolerance:.0%}"
+            print(f"M={M:<7} {'goodput_rps':<18} {b:>12.5g} {f_:>12.5g} "
+                  f"{delta:>+7.1%}  {verdict}")
+            failures += not ok
+        else:
+            print(f"M={M}: new traced scale case, not in baseline online")
+        ov = row.get("trace_overhead", 0.0)
+        ok = ov <= overhead_max
+        verdict = ("ok" if ok
+                   else f"TRACING OVERHEAD > {overhead_max:.0%}")
+        print(f"M={M:<7} {'trace_overhead':<18} {'—':>12} {ov:>+11.1%} "
+              f"{'':>8}  {verdict}")
+        failures += not ok
+    return failures
+
+
 def _gate_scale_planning(fresh_doc: dict) -> int:
     """Soundness invariants of the fresh planning section: the
     Pareto-frontier DP never above the prefix DP, and the hierarchical
@@ -228,7 +281,8 @@ def _gate_scale_planning(fresh_doc: dict) -> int:
     return failures
 
 
-def _gate_scale(baseline: str, fresh_path: str, tolerance: float) -> int:
+def _gate_scale(baseline: str, fresh_path: str, tolerance: float,
+                overhead_max: float) -> int:
     with open(baseline) as f:
         base_doc = json.load(f)
     with open(fresh_path) as f:
@@ -236,6 +290,8 @@ def _gate_scale(baseline: str, fresh_path: str, tolerance: float) -> int:
     failures = _gate_scale_section("online", base_doc, fresh_doc, tolerance)
     failures += _gate_scale_section("pipelined", base_doc, fresh_doc,
                                     tolerance)
+    failures += _gate_scale_traced(base_doc, fresh_doc, tolerance,
+                                   overhead_max)
     failures += _gate_scale_planning(fresh_doc)
     if fresh_doc.get("gate_wins", 0) < fresh_doc.get("gate_needed", 0):
         print(f"fresh scale run failed its own gate "
@@ -280,6 +336,12 @@ def main(argv=None) -> int:
     ap.add_argument("--scale-tolerance", type=float, default=0.05,
                     help="max allowed fractional goodput drop / "
                          "energy-per-request growth per fleet size")
+    ap.add_argument("--trace-overhead-max", type=float, default=0.15,
+                    help="max allowed wall-clock overhead of the traced "
+                         "scale rows vs their untraced twins (design "
+                         "target < 0.05; the default band absorbs "
+                         "shared-CI timer noise — sim-side goodput is "
+                         "gated at --scale-tolerance regardless)")
     args = ap.parse_args(argv)
     if (args.fresh is None and args.tenancy_fresh is None
             and args.timeline_fresh is None and args.channel_fresh is None
@@ -305,7 +367,8 @@ def main(argv=None) -> int:
     if args.scale_fresh is not None:
         failures += _gate_scale(
             args.scale_baseline or "BENCH_scale.json",
-            args.scale_fresh, args.scale_tolerance)
+            args.scale_fresh, args.scale_tolerance,
+            args.trace_overhead_max)
     if failures:
         print(f"{failures} case(s) regressed beyond tolerance",
               file=sys.stderr)

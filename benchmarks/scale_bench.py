@@ -21,6 +21,13 @@ Two sections, one JSON document (``BENCH_scale.json``):
   the only thing that may move is wall time: ``pipeline_speedup`` and the
   plan-ahead hit rate are reported per M.
 
+* **traced** — the same online runs with the full telemetry stack
+  attached (event tracer + metrics registry + per-request lifecycle
+  records).  Sim results are asserted bitwise-equal to the untraced
+  twin — tracing observes, never perturbs — so the only number that may
+  move is wall time: ``trace_overhead`` is the ratio the nightly
+  regression gate bounds (``check_regression.py --trace-overhead-max``).
+
 * **planning** — the one-shot OG problem at a fleet size where the exact
   O(M²)-segment DP is measurably expensive: prefix-exact vs the
   Pareto-frontier DP (sound under occupancy coupling; energy must come
@@ -60,12 +67,15 @@ def _build(M: int, seed: int):
 def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
                      policy: str = "slack",
                      batch_window: float = 0.0,
-                     plan_workers: int = 0):
+                     plan_workers: int = 0,
+                     telemetry=None):
     """One sustained-load run at fleet size M through the batched loop.
 
     Returns ``(row, result)`` — the JSON row plus the raw
     :class:`OnlineResult` so the pipelined run can be asserted bitwise
-    equal to the synchronous one."""
+    equal to the synchronous one.  ``telemetry`` attaches a
+    :class:`~repro.core.Telemetry` sink (the traced section measures its
+    overhead and asserts result parity against the untraced twin)."""
     from repro.core import OnlineScheduler, PlannerService, poisson_arrivals
     profile, edge, fleet = _build(M, seed)
     rate = load_hz * M
@@ -74,7 +84,8 @@ def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
     sched = OnlineScheduler(profile, fleet, edge, policy=policy,
                             keep_frac=0.7, service=service,
                             batch_window=batch_window,
-                            plan_workers=plan_workers)
+                            plan_workers=plan_workers,
+                            telemetry=telemetry)
     sched.submit_many(sorted(arrivals, key=lambda a: a.arrival))
     t0 = time.perf_counter()
     res = sched.run_batched()
@@ -238,7 +249,7 @@ def main(argv=None) -> int:
     print(f"{'M':>7} {'rate/s':>8} {'flushes':>7} {'batch μ/max':>11} "
           f"{'viol':>6} {'goodput/s':>9} {'J/req':>8} {'p50/p99 ms':>12} "
           f"{'wall':>7}")
-    online, pipelined = [], []
+    online, pipelined, traced = [], [], []
     for M in args.fleet_sizes:
         r, res = run_online_scale(M, args.load, args.seed, arrival_seed,
                                   policy=args.policy,
@@ -267,6 +278,32 @@ def main(argv=None) -> int:
                   f"({rp['pipeline_speedup']:.2f}x), plan-ahead "
                   f"{hits}/{hits + misses} hit ({hit_rate:.0%}), "
                   f"parity={'ok' if rp['parity'] else 'BROKEN'}")
+        # traced twin: same run with the full telemetry stack on (tracer,
+        # metrics, per-request records).  Sim results MUST be bitwise
+        # identical (observers never perturb); the wall-time ratio is the
+        # tracing overhead the nightly regression gate bounds.
+        from repro.core import Telemetry, validate_events
+        tel = Telemetry()
+        rt, rest = run_online_scale(M, args.load, args.seed, arrival_seed,
+                                    policy=args.policy,
+                                    batch_window=args.batch_window,
+                                    telemetry=tel)
+        overhead = (rt["wall_s"] / r["wall_s"] - 1.0
+                    if r["wall_s"] > 0 else 0.0)
+        traced.append(dict(
+            users=M, wall_s=rt["wall_s"],
+            goodput_rps=rt["goodput_rps"],
+            energy_per_request=rt["energy_per_request"],
+            parity=_same_result(res, rest),
+            trace_overhead=overhead,
+            trace_events=len(tel.tracer.events),
+            trace_clean=not validate_events(tel.tracer.events)))
+        t = traced[-1]
+        print(f"{'':>7} traced: wall {t['wall_s']:.1f}s "
+              f"({100 * t['trace_overhead']:+.1f}%), "
+              f"{t['trace_events']} event(s), "
+              f"parity={'ok' if t['parity'] else 'BROKEN'}, "
+              f"schema={'ok' if t['trace_clean'] else 'BROKEN'}")
 
     p = run_planning_scale(args.planning_users, args.cohort_size, args.seed)
     print(f"\nplanning at M={p['users']} (cohort C={p['cohort_size']}):")
@@ -289,16 +326,18 @@ def main(argv=None) -> int:
           f"({p['depart_refold_levels']} levels)")
 
     # internal acceptance: every online run healthy, every pipelined run
-    # bitwise-identical to its synchronous twin, the pareto DP sound
+    # bitwise-identical to its synchronous twin, every traced run
+    # bitwise-identical AND schema-clean, the pareto DP sound
     # (<= prefix, and the cohort chain banded ONE-SIDED against it), the
     # prefix cohort band tight, the tail arrival actually incremental —
     # one level re-folded and measurably faster than scratch (its single
     # level still batch-solves M segments, so wall time shrinks less than
     # the level count does) (dry-run: wiring only)
-    total = 2 * len(online) + 5 if args.plan_workers > 0 \
-        else len(online) + 5
+    total = len(online) + len(pipelined) + 2 * len(traced) + 5
     wins = (sum(r["healthy"] for r in online)
             + sum(r["parity"] for r in pipelined)
+            + sum(r["parity"] for r in traced)
+            + sum(r["trace_clean"] for r in traced)
             + int(p["pareto_sound"])
             + int(-1e-9 <= p["cohort_energy_band_vs_pareto"] <= 0.08)
             + int(abs(p["cohort_energy_band"]) <= 0.08)
@@ -316,7 +355,8 @@ def main(argv=None) -> int:
                    load_per_user_hz=args.load, policy=args.policy,
                    plan_workers=args.plan_workers,
                    gate_wins=wins, gate_needed=need,
-                   online=online, pipelined=pipelined, planning=p)
+                   online=online, pipelined=pipelined, traced=traced,
+                   planning=p)
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.json} ({len(online)} online scales)")

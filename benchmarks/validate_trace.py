@@ -1,0 +1,38 @@
+#!/usr/bin/env python
+"""Validate Chrome trace-event JSON files produced by ``--trace``.
+
+Checks the schema the telemetry exporter guarantees (and Perfetto /
+chrome://tracing require to load a file at all): every event carries
+``ph/ts/pid/tid/name``, complete (``X``) spans have a non-negative
+``dur``, and ``B``/``E`` pairs nest monotonically per track.  CI runs
+this over the serve-CLI smoke trace and the committed example trace.
+
+  PYTHONPATH=src python benchmarks/validate_trace.py trace.json [...]
+
+Exit status 0 when every file is clean, 1 otherwise (problems listed
+one per line, prefixed with the offending file).
+"""
+import argparse
+import sys
+
+from repro.core.telemetry import validate_trace_file
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", help="trace JSON file(s) to check")
+    args = ap.parse_args(argv)
+    bad = 0
+    for path in args.paths:
+        problems = validate_trace_file(path)
+        for p in problems:
+            print(f"{path}: {p}")
+        if problems:
+            bad += 1
+        else:
+            print(f"{path}: ok")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

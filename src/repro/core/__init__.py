@@ -1,4 +1,8 @@
 """The paper's contribution: J-DOB scheduling for multiuser co-inference."""
+from .telemetry import (NULL_TRACER, Histogram, MetricsRegistry, NullTracer,
+                        Telemetry, Tracer, aggregate_counter_fields,
+                        note_runtime_event, runtime_events, tenant_tid,
+                        validate_events, validate_trace_file)
 from .task_model import TaskProfile, mobilenet_v2_profile, profile_from_arch
 from .channel import (CHANNEL_KINDS, ChannelModel, SharedUplink,
                       StaticChannel, TraceChannel, UploadSession, UploadSpan,
@@ -55,4 +59,7 @@ __all__ = [
     "ADMISSION_POLICIES", "Booking", "GpuLedger", "MultiTenantResult",
     "MultiTenantScheduler", "ReplanRecord", "Tenant", "TenantResult",
     "min_offload_completion", "naive_fifo", "single_tenant_oracle",
+    "NULL_TRACER", "Histogram", "MetricsRegistry", "NullTracer", "Telemetry",
+    "Tracer", "aggregate_counter_fields", "note_runtime_event",
+    "runtime_events", "tenant_tid", "validate_events", "validate_trace_file",
 ]

@@ -48,6 +48,7 @@ from .grouping import (GroupedSchedule, _collect_chain, _pareto_sweep,
                        optimal_grouping)
 from .jdob import Schedule, jdob_schedule
 from .planner_service import PlannerService
+from .telemetry import NULL_TRACER, TID_PLANNER
 from .timeline import GpuTimeline, TimelineCursor
 
 
@@ -66,7 +67,7 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
                     service: PlannerService | None = None,
                     timeline: GpuTimeline | None = None,
                     dp: str = "prefix", frontier_eps: float = 0.0,
-                    beam_width: int | None = None
+                    beam_width: int | None = None, tracer=None
                     ) -> GroupedSchedule:
     """Hierarchical OG over deadline-sorted cohorts of ≤ ``cohort_size``.
 
@@ -77,6 +78,10 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
     top-level merge DP may fuse into one (1 disables boundary repair).
     ``dp="pareto"`` runs the per-cohort solves and the merge DP over a
     Pareto frontier of (energy, cursor) states (see grouping.py).
+    ``tracer`` (a :class:`~repro.core.telemetry.Tracer`) gets one
+    ``cohort.shard`` instant per cohort and a ``cohort.merge`` instant
+    after the merge DP, timestamped in simulation time on the planner
+    track.
     """
     assert merge_window >= 1
     assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
@@ -140,9 +145,11 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
         return cache[key]
 
     # ---- shard + plan: exact OG inside each cohort, cursor threaded ----
+    tr = NULL_TRACER if tracer is None else tracer
     atoms: list[tuple[int, int]] = []
     cursor = TimelineCursor(t_free)
     for lo, hi in cohort_bounds(M, cohort_size):
+        shard_t = cursor.t_free
         og = optimal_grouping(profile, sorted_fleet.subset(np.arange(lo, hi)),
                               edge, inner, t_free=cursor.t_free, rho=rho,
                               service=service, dp=dp,
@@ -153,6 +160,9 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
             cache[(i_abs, j_abs, round(cursor.t_free, 9))] = s
             atoms.append((i_abs, j_abs))
             cursor = cursor.advance(s)
+        if tr.enabled:
+            tr.instant("cohort.shard", shard_t, TID_PLANNER,
+                       {"lo": lo, "hi": hi, "groups": len(og.groups)})
 
     # ---- merge: top-level DP over atoms, fusing ≤ merge_window of them --
     K = len(atoms)
@@ -202,6 +212,10 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
             chain.append((atoms[st[2]][0], atoms[t - 1][1]))
             t, si = st[2], st[3]
         chain.reverse()
+        if tr.enabled:
+            tr.instant("cohort.merge", t_free, TID_PLANNER,
+                       {"atoms": K, "groups": len(chain),
+                        "fused": K - len(chain)})
         return _collect_chain(chain, order, solve, TimelineCursor(t_free),
                               timeline)
 
@@ -241,5 +255,9 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
         chain.append((atoms[s][0], atoms[t - 1][1]))
         t = s
     chain.reverse()
+    if tr.enabled:
+        tr.instant("cohort.merge", t_free, TID_PLANNER,
+                   {"atoms": K, "groups": len(chain),
+                    "fused": K - len(chain)})
     return _collect_chain(chain, order, solve, TimelineCursor(t_free),
                           timeline)

@@ -329,7 +329,14 @@ class PlannerStats:
     frontier, candidates discarded by the dominance sweep); all zero under
     the prefix DP.  ``plan_ahead_hits``/``plan_ahead_misses`` count how
     often a pipelined event loop consumed a speculative plan vs fell back
-    to a synchronous solve."""
+    to a synchronous solve.
+
+    :meth:`merge` and :meth:`as_dict` derive from ``dataclasses.fields``
+    — a new counter is summed across planners and exported by default
+    (override with ``metadata={"merge": "max"|"min_counted"}`` or
+    ``metadata={"export": False}``), so it can never be silently dropped
+    from aggregated summaries or bench JSON
+    (tests/core/test_telemetry.py round-trips every field)."""
 
     hits: int = 0
     misses: int = 0
@@ -337,11 +344,13 @@ class PlannerStats:
     dispatches: int = 0
     groups_planned: int = 0
     plan_calls: int = 0
-    plan_ns_min: int = 0
-    plan_ns_max: int = 0
-    plan_ns: list = dataclasses.field(default_factory=list)
+    plan_ns_min: int = dataclasses.field(
+        default=0, metadata={"merge": "min_counted"})
+    plan_ns_max: int = dataclasses.field(default=0, metadata={"merge": "max"})
+    plan_ns: list = dataclasses.field(
+        default_factory=list, metadata={"export": False})
     frontier_states: int = 0
-    frontier_max: int = 0
+    frontier_max: int = dataclasses.field(default=0, metadata={"merge": "max"})
     dominance_pruned: int = 0
     plan_ahead_hits: int = 0
     plan_ahead_misses: int = 0
@@ -374,26 +383,32 @@ class PlannerStats:
 
     def as_dict(self) -> dict:
         out = {f.name: getattr(self, f.name)
-               for f in dataclasses.fields(self) if f.name != "plan_ns"}
+               for f in dataclasses.fields(self)
+               if f.metadata.get("export", True)}
         out["plan_latency"] = self.plan_latency()
         return out
 
     def merge(self, other: "PlannerStats") -> "PlannerStats":
-        out = PlannerStats(
-            *(getattr(self, f) + getattr(other, f)
-              for f in ("hits", "misses", "evictions", "dispatches",
-                        "groups_planned", "plan_calls")))
-        for f in ("frontier_states", "dominance_pruned",
-                  "plan_ahead_hits", "plan_ahead_misses"):
-            setattr(out, f, getattr(self, f) + getattr(other, f))
-        out.frontier_max = max(self.frontier_max, other.frontier_max)
-        out.plan_ns = self.plan_ns + other.plan_ns
-        if self.plan_calls and other.plan_calls:
-            out.plan_ns_min = min(self.plan_ns_min, other.plan_ns_min)
-        else:
-            out.plan_ns_min = (self.plan_ns_min if self.plan_calls
-                               else other.plan_ns_min)
-        out.plan_ns_max = max(self.plan_ns_max, other.plan_ns_max)
+        """Field-driven merge: sum by default (``+`` also concatenates the
+        latency sample lists), ``max`` / ``min_counted`` per metadata —
+        adding a counter field needs no merge-list edit."""
+        out = PlannerStats()
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            how = f.metadata.get("merge", "sum")
+            if how == "sum":
+                v = a + b
+            elif how == "max":
+                v = max(a, b)
+            elif how == "min_counted":
+                # meaningful only for a side that ever recorded a latency
+                if self.plan_calls and other.plan_calls:
+                    v = min(a, b)
+                else:
+                    v = a if self.plan_calls else b
+            else:                                  # pragma: no cover
+                raise ValueError(f"unknown merge mode {how!r} for {f.name}")
+            setattr(out, f.name, v)
         return out
 
 

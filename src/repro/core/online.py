@@ -70,6 +70,8 @@ from .grouping import optimal_grouping
 from .jdob import BatchedPlanner, Schedule
 from .planner_service import PlannerService, planner_spec
 from .task_model import TaskProfile
+from .telemetry import (NULL_TRACER, TID_GPU, TID_PLANNER, TID_UPLINK,
+                        Telemetry, tenant_tid)
 from .timeline import (OCCUPANCY_MODES, GpuTimeline, rescale_edge_dvfs,
                        respeed_edge_dvfs)
 
@@ -104,15 +106,24 @@ class OnlineResult:
     #: static one): summed |realized − planned| upload completion (s),
     #: bounded actualization re-plans taken when realized rates diverged,
     #: and offloaded requests whose REALIZED batch end slipped past their
-    #: deadline (on top of the flush-time ``violations`` count)
-    upload_error: float = 0.0
-    channel_replans: int = 0
-    realized_late: int = 0
+    #: deadline (on top of the flush-time ``violations`` count).
+    #: ``metadata={"aggregate": True}`` marks a counter for automatic
+    #: cross-scheduler summation (telemetry.aggregate_counter_fields —
+    #: the tenancy layer and bench emitters derive their merge lists from
+    #: it, so a new counter cannot be silently dropped)
+    upload_error: float = dataclasses.field(
+        default=0.0, metadata={"aggregate": True})
+    channel_replans: int = dataclasses.field(
+        default=0, metadata={"aggregate": True})
+    realized_late: int = dataclasses.field(
+        default=0, metadata={"aggregate": True})
     #: flushes re-priced against staggered upload starts (``channel_stagger``)
-    stagger_replans: int = 0
+    stagger_replans: int = dataclasses.field(
+        default=0, metadata={"aggregate": True})
     #: gap probes skipped because the per-batch busy-time lower bound
     #: could not fit the idle window (ROADMAP timeline follow-up (b))
-    pruned_probes: int = 0
+    pruned_probes: int = dataclasses.field(
+        default=0, metadata={"aggregate": True})
 
 
 @dataclasses.dataclass(eq=False)
@@ -190,7 +201,8 @@ class OnlineScheduler:
                  dvfs_slack_frac: float = 0.0,
                  dvfs_quiescent: bool = True,
                  batch_window: float = 0.0,
-                 plan_workers: int = 0):
+                 plan_workers: int = 0,
+                 telemetry: Telemetry | None = None):
         assert policy in POLICIES, f"unknown policy {policy!r}"
         assert batch_window >= 0.0
         assert plan_workers >= 0
@@ -271,6 +283,17 @@ class OnlineScheduler:
         self.timeline = (timeline if timeline is not None
                          else GpuTimeline(mode=occupancy))
         self.tenant_id = 0
+        #: telemetry (None = disabled): emission sites are read-only
+        #: observers guarded on ``self._tr.enabled`` — results are
+        #: bit-identical with tracing on vs off, and the null tracer is
+        #: allocation-free on the hot paths (tests/core/test_telemetry.py)
+        self.telemetry = telemetry
+        self._tr = telemetry.tracer if telemetry is not None else NULL_TRACER
+        if self._tr.enabled:
+            self.timeline.tracer = self._tr
+            self._tr.name_track(TID_GPU, "GPU")
+            self._tr.name_track(TID_UPLINK, "uplink")
+            self._tr.name_track(TID_PLANNER, "planner")
         #: per-flush DVFS aggressiveness while traffic is still pending:
         #: the fraction of a TAIL slot's residual slack the edge-frequency
         #: rescale may consume.  Stretching the tail extends the horizon
@@ -367,6 +390,19 @@ class OnlineScheduler:
         for a in arrivals:
             self.submit(a)
 
+    # ---- telemetry emission (read-only observers) ----------------------
+    def _ttid(self) -> int:
+        """This scheduler's tenant track id (named lazily — the tenancy
+        layer assigns ``tenant_id`` after construction)."""
+        tid = tenant_tid(self.tenant_id)
+        self._tr.name_track(tid, f"tenant {self.tenant_id}")
+        return tid
+
+    def _trace_arrival(self, a: OnlineArrival) -> None:
+        self._tr.instant("arrival", a.arrival, self._ttid(),
+                         {"user": int(a.user), "deadline": a.abs_deadline})
+        self.telemetry.metrics.inc("loop.arrivals")
+
     # ---- policy --------------------------------------------------------
     def _policy_time(self) -> float:
         """The armed flush time for the current (non-empty) queue."""
@@ -390,6 +426,13 @@ class OnlineScheduler:
     def _plan(self, sub: DeviceFleet, t_free: float) -> Schedule:
         """Plan one (sub-fleet, t_free) batch through the shared service
         (sequential fallback for arbitrary ``inner`` callables)."""
+        if self._tr.enabled:
+            # sim-time dispatch marker; the wall-clock materialization
+            # latency lives in PlannerStats' perf_counter_ns histogram
+            self._tr.instant("plan.dispatch", self.now, TID_PLANNER,
+                             {"tenant": self.tenant_id,
+                              "batch": int(sub.M), "t_free": t_free})
+            self.telemetry.metrics.inc("planner.dispatches")
         if self._planner is not None:
             return self._planner.plan([sub], [t_free])[0]
         return self.inner(self.profile, sub, self.edge, t_free=t_free,
@@ -511,6 +554,13 @@ class OnlineScheduler:
             self.timeline.dvfs_rescales += 1
             self.timeline.dvfs_energy_saved += saved
             self._slot_saved = saved        # booked onto the reservation
+            if self._tr.enabled:
+                self._tr.instant(
+                    "dvfs.rescale", now, TID_GPU,
+                    {"tenant": self.tenant_id, "saved_j": saved,
+                     "f_edge_ghz": s.f_edge / 1e9, "quiescent": quiet})
+                self.telemetry.metrics.inc("dvfs.rescales")
+                self.telemetry.metrics.inc("dvfs.energy_saved_j", saved)
             if quiet:
                 # snapshot the unstretched plan so a submit() arriving
                 # before this reservation starts can roll the stretch
@@ -669,6 +719,12 @@ class OnlineScheduler:
                 rates_obs[off] = nbytes / np.maximum(real_fin - comp, 1e-12)
                 sub2 = dataclasses.replace(sub, rate=rates_obs)
                 self.channel_replans += 1
+                if self._tr.enabled:
+                    self._tr.instant(
+                        "channel.replan", now, TID_UPLINK,
+                        {"tenant": self.tenant_id, "depth": depth + 1,
+                         "planned": up_plan, "realized": up_real})
+                    self.telemetry.metrics.inc("channel.replans")
                 self._flush_rates = rates_obs
                 s2 = self._plan(sub2, self._slot_tf)
                 return self._actualize(now, arrivals, idx, sub2, s2,
@@ -683,6 +739,13 @@ class OnlineScheduler:
                 shifted, extra = respeed_edge_dvfs(shifted,
                                                    window=limit - g_real,
                                                    f_max=self.edge.f_max)
+                if extra > 0.0 and self._tr.enabled:
+                    self._tr.instant(
+                        "dvfs.respeed", now, TID_GPU,
+                        {"tenant": self.tenant_id, "extra_j": extra,
+                         "f_edge_ghz": shifted.f_edge / 1e9})
+                    self.telemetry.metrics.inc("dvfs.respeeds")
+                    self.telemetry.metrics.inc("dvfs.energy_extra_j", extra)
                 if extra > 0.0 and self._slot_saved > 0.0:
                     # the speed-up eats into the per-flush stretch this
                     # same flush was credited with — the reports must not
@@ -740,11 +803,18 @@ class OnlineScheduler:
         if err > 1e-12:
             end = now + s.t_free_end
             if end > deadline + 1e-9:
-                self.realized_late += sum(
+                late = sum(
                     1 for a, o in zip(arrivals, s.offload)
                     if o and end > a.abs_deadline + 1e-9
                     and (a.abs_deadline - now
                          >= self._l_min[a.user] - 1e-12))
+                self.realized_late += late
+                if late and self._tr.enabled:
+                    self._tr.instant(
+                        "realized.late", now, TID_UPLINK,
+                        {"tenant": self.tenant_id, "count": late,
+                         "end": end})
+                    self.telemetry.metrics.inc("channel.realized_late", late)
         return s
 
     # ---- event processing ----------------------------------------------
@@ -810,6 +880,8 @@ class OnlineScheduler:
         self.flushes.append(ev)
         if self.history is not None and len(self.flushes) > self.history:
             del self.flushes[:-self.history]
+        if self._tr.enabled:
+            self._trace_flush(now, q, sub, s, ev)
         self._after_flush(ev)
         if self.on_flush is not None:
             self.on_flush(ev)
@@ -818,6 +890,59 @@ class OnlineScheduler:
                            (gpu_free, next(self._seq), GpuFreeEvent(gpu_free,
                                                                     ev)))
         return ev
+
+    def _trace_flush(self, now: float, q: list, sub: DeviceFleet,
+                     s: Schedule, ev: FlushEvent) -> None:
+        """Emit one flush's telemetry: the flush instant, the realized
+        upload span, and every member's request-lifecycle span + record
+        (arrival → flush → gpu_start → done, slack at completion).  A
+        read-only observer — called only when tracing is enabled and
+        never touching scheduler state."""
+        tr = self._tr
+        met = self.telemetry.metrics
+        ttid = self._ttid()
+        n_off = int(s.offload.sum())
+        args = {"seq": ev.seq, "users": len(q), "batch": n_off,
+                "partition": int(s.partition), "energy_j": float(s.energy),
+                "late": ev.violations, "t_free": self._slot_tf}
+        if n_off:
+            args["f_edge_ghz"] = float(s.f_edge) / 1e9
+        tr.instant("flush", now, ttid, args)
+        if ev.upload_actual == ev.upload_actual:          # not NaN
+            tr.span(f"upload b{ev.seq}", now, ev.upload_actual, TID_UPLINK,
+                    {"tenant": self.tenant_id,
+                     "planned": ev.upload_planned,
+                     "realized": ev.upload_actual,
+                     "err_s": abs(ev.upload_actual - ev.upload_planned)})
+        met.inc("loop.flushes")
+        met.inc("loop.violations", ev.violations)
+        met.observe("loop.batch_size", n_off)
+        for term, joules in s.terms.items():
+            met.inc(f"energy.{term}_j", float(joules))
+        done_off = now + float(s.t_free_end)
+        g_start = now + float(s.gpu_start)
+        v_tot = float(self.profile.v()[-1])
+        edge_share = (float(s.terms.get("edge", 0.0)) / n_off if n_off
+                      else 0.0)
+        record = (self.telemetry.record_request
+                  if self.telemetry.request_log else None)
+        for i, a in enumerate(q):
+            off_i = bool(s.offload[i])
+            done = (done_off if off_i else
+                    now + float(sub.zeta[i]) * v_tot / float(s.f_device[i]))
+            slack = a.abs_deadline - done
+            tr.span(f"req u{a.user}", a.arrival, done, ttid,
+                    {"user": int(a.user), "offloaded": off_i,
+                     "slack_s": slack})
+            met.observe("loop.slack_s", slack)
+            if record is not None:
+                record({"tenant": self.tenant_id, "user": int(a.user),
+                        "arrival": a.arrival, "flushed": now,
+                        "gpu_start": g_start if off_i else None,
+                        "done": done, "slack": slack, "offloaded": off_i,
+                        "flush_seq": ev.seq,
+                        "energy_j": float(s.per_user_energy[i])
+                        + (edge_share if off_i else 0.0)})
 
     def replan_flush(self, ev: FlushEvent, t_free: float,
                      idle_gpu_free: float | None = None,
@@ -856,6 +981,13 @@ class OnlineScheduler:
         ev.schedule = s
         ev.gpu_free = gpu_free
         ev.replanned += 1
+        if self._tr.enabled:
+            self._tr.instant(
+                "flush.replan", max(self.now, ev.time), self._ttid(),
+                {"seq": ev.seq, "replanned": ev.replanned,
+                 "energy_j": float(s.energy),
+                 "delta_j": float(s.energy - old.energy)})
+            self.telemetry.metrics.inc("loop.flush_replans")
         if 0 <= ev.seq < len(self._batches):
             self._batches[ev.seq] = int(s.offload.sum())
         if 0 <= ev.seq < len(self._f_edges):
@@ -926,6 +1058,8 @@ class OnlineScheduler:
             self._fire_timers(t)
             self.now = t
             self._queue.append(a)
+            if self._tr.enabled:
+                self._trace_arrival(a)
             return a
         t_policy = self._policy_time()
         if self._arrivals and self._arrivals[0][0] <= t_policy:
@@ -934,6 +1068,8 @@ class OnlineScheduler:
             self._fire_timers(t)
             self.now = t
             self._queue.append(a)
+            if self._tr.enabled:
+                self._trace_arrival(a)
             return a
         t_fire = max(t_policy, self._queue[-1].arrival)
         self._fire_timers(t_fire)
@@ -990,6 +1126,8 @@ class OnlineScheduler:
             self._fire_timers(t)
             self.now = t
             q.append(a)
+            if self._tr.enabled:
+                self._trace_arrival(a)
             if admit is not None and not admit(a):
                 q.pop()                             # admission fallback
                 t_policy = self._policy_time() if q else None
@@ -1130,6 +1268,10 @@ class OnlineScheduler:
             if self._spec_key is not None:
                 pool.discard(self._spec_key)
                 self._spec_key = None
+                if self._tr.enabled:
+                    self._tr.instant("spec.evict", self.now, TID_PLANNER,
+                                     {"tenant": self.tenant_id})
+                    self.telemetry.metrics.inc("spec.evictions")
             return
         q, t_fire = nxt
         tf = self.timeline.t_free(t_fire)
@@ -1140,12 +1282,21 @@ class OnlineScheduler:
             return
         if self._spec_key is not None:
             pool.discard(self._spec_key)
+            if self._tr.enabled:
+                self._tr.instant("spec.evict", self.now, TID_PLANNER,
+                                 {"tenant": self.tenant_id})
+                self.telemetry.metrics.inc("spec.evictions")
         self._spec_key = key
         idx = np.array([a.user for a in q])
         rel = np.array([a.abs_deadline - t_fire for a in q])
         sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
         planner = self._planner
         pool.submit(key, lambda: planner.plan([sub], [tf])[0])
+        if self._tr.enabled:
+            self._tr.instant("spec.start", self.now, TID_PLANNER,
+                             {"tenant": self.tenant_id, "batch": len(q),
+                              "t_fire": t_fire, "t_free": tf})
+            self.telemetry.metrics.inc("spec.starts")
 
     def _take_plan_ahead(self, now: float, arrivals: list,
                          tf: float) -> Schedule | None:
@@ -1163,15 +1314,28 @@ class OnlineScheduler:
         if key != self._spec_key:
             if stats is not None:
                 stats.plan_ahead_misses += 1
+            if self._tr.enabled:
+                self._tr.instant("spec.miss", now, TID_PLANNER,
+                                 {"tenant": self.tenant_id, "why": "key"})
+                self.telemetry.metrics.inc("spec.misses")
             return None
         s = pool.take(key)
         self._spec_key = None
         if s is None:
             if stats is not None:
                 stats.plan_ahead_misses += 1
+            if self._tr.enabled:
+                self._tr.instant("spec.miss", now, TID_PLANNER,
+                                 {"tenant": self.tenant_id, "why": "taken"})
+                self.telemetry.metrics.inc("spec.misses")
             return None
         if stats is not None:
             stats.plan_ahead_hits += 1
+        if self._tr.enabled:
+            self._tr.instant("spec.hit", now, TID_PLANNER,
+                             {"tenant": self.tenant_id,
+                              "batch": len(arrivals)})
+            self.telemetry.metrics.inc("spec.hits")
         return s
 
     def result(self) -> OnlineResult:

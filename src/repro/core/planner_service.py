@@ -268,7 +268,7 @@ class PlannerService:
                    t_free: float = 0.0, cohort_size: int | None = None,
                    merge_window: int = 4, timeline=None,
                    planner: str | None = None, frontier_eps: float = 0.0,
-                   beam_width: int | None = None):
+                   beam_width: int | None = None, tracer=None):
         """Fleet-size-aware OG entry point: exact
         :func:`~repro.core.grouping.optimal_grouping` when the fleet fits a
         single cohort (or no cohort size is configured), hierarchical
@@ -278,7 +278,9 @@ class PlannerService:
         ``planner`` selects the grouping DP — ``"prefix"`` (seed) or
         ``"pareto"`` (frontier of (energy, cursor) states; see grouping.py)
         — defaulting to this service's ``default_planner``;
-        ``frontier_eps``/``beam_width`` bound the frontier.  This is THE
+        ``frontier_eps``/``beam_width`` bound the frontier.  ``tracer``
+        (a :class:`~repro.core.telemetry.Tracer`) receives cohort
+        shard/merge instants from the hierarchical path.  This is THE
         planning call the serving layer makes — it inherits the service's
         rho, shape policy and compile cache."""
         # local imports: grouping/cohort import this module at top level
@@ -300,7 +302,7 @@ class PlannerService:
                                merge_window=merge_window, service=self,
                                timeline=timeline, dp=dp,
                                frontier_eps=frontier_eps,
-                               beam_width=beam_width)
+                               beam_width=beam_width, tracer=tracer)
 
     # ---- shape-bucket policy -------------------------------------------
     @staticmethod

@@ -66,6 +66,7 @@ from .cost_models import DeviceFleet, EdgeProfile
 from .online import FlushEvent, OnlineArrival, OnlineResult, OnlineScheduler
 from .planner_service import PlannerService
 from .task_model import TaskProfile
+from .telemetry import NULL_TRACER, Telemetry, aggregate_counter_fields
 from .timeline import OCCUPANCY_MODES, GpuTimeline, Reservation
 
 ADMISSION_POLICIES = ("admit", "degrade", "reject")
@@ -135,7 +136,8 @@ class _TenantScheduler(OnlineScheduler):
                          dvfs_slack_frac=arbiter.dvfs_slack_frac,
                          dvfs_quiescent=arbiter.dvfs_quiescent,
                          batch_window=arbiter.batch_window,
-                         plan_workers=arbiter.plan_workers)
+                         plan_workers=arbiter.plan_workers,
+                         telemetry=arbiter.telemetry)
         self.arbiter = arbiter
         self.tid = self.tenant_id = tid
         self._pending_preempt: list[Reservation] | None = None
@@ -189,6 +191,12 @@ class _TenantScheduler(OnlineScheduler):
             s0 = super()._plan(sub, t0)
             s1 = super()._plan(sub, t1)
         if s1.batch_size <= s0.batch_size:
+            if self._tr.enabled:
+                self._tr.instant(
+                    "preempt.whatif", now, self._ttid(),
+                    {"victims": len(victims), "granted": False,
+                     "why": "no-batch-gain"})
+                self.telemetry.metrics.inc("preempt.whatifs")
             self._trial_plan = (t0, s0)
             return t0
         # cost-benefit: the preemptor's gain must exceed the victims'
@@ -209,11 +217,26 @@ class _TenantScheduler(OnlineScheduler):
             if s_new.offload.any():
                 horizon = max(horizon, b.flush.time + s_new.t_free_end)
         if (s0.energy - s1.energy) <= penalty:
+            if self._tr.enabled:
+                self._tr.instant(
+                    "preempt.whatif", now, self._ttid(),
+                    {"victims": len(victims), "granted": False,
+                     "why": "cost-benefit", "gain_j": s0.energy - s1.energy,
+                     "penalty_j": penalty})
+                self.telemetry.metrics.inc("preempt.whatifs")
             self._trial_plan = (t0, s0)
             return t0
         self._pending_preempt = victims
         self._victim_trials = trials
         tl.remove(victims)
+        if self._tr.enabled:
+            self._tr.instant(
+                "preempt.commit", now, self._ttid(),
+                {"victims": len(victims),
+                 "gain_j": s0.energy - s1.energy, "penalty_j": penalty})
+            self.telemetry.metrics.inc("preempt.whatifs")
+            self.telemetry.metrics.inc("preempt.commits")
+            self.telemetry.metrics.inc("preempt.victims", len(victims))
         self._trial_plan = (t1, s1)
         return t1
 
@@ -360,7 +383,7 @@ class MultiTenantScheduler:
                  dvfs_slack_frac: float = 0.0, dvfs_quiescent: bool = True,
                  batch_window: float = 0.0, plan_workers: int = 0,
                  on_flush=None, on_replan=None, on_gpu_free=None,
-                 on_degrade=None):
+                 on_degrade=None, telemetry: Telemetry | None = None):
         assert len(tenants) >= 1
         assert plan_workers >= 0
         assert admission in ADMISSION_POLICIES, \
@@ -394,6 +417,12 @@ class MultiTenantScheduler:
         self.plan_workers = plan_workers
         self.timeline = GpuTimeline(mode=occupancy)
         self.ledger = self.timeline          # PR-3 name, same object
+        #: telemetry bundle, threaded into every tenant scheduler (and the
+        #: shared timeline's tracer); None disables emission entirely
+        self.telemetry = telemetry
+        self._tr = telemetry.tracer if telemetry is not None else NULL_TRACER
+        if self._tr.enabled:
+            self.timeline.tracer = self._tr
         self.on_degrade = on_degrade
         root = (service if service is not None
                 else PlannerService(tenants[0].profile, tenants[0].edge,
@@ -480,6 +509,14 @@ class MultiTenantScheduler:
         request is a violation in :class:`MultiTenantResult`)."""
         if self.admission == "reject":
             self.rejected[tid] += 1
+            if self._tr.enabled:
+                self._tr.instant(
+                    "admission.reject",
+                    arrival.arrival if now is None else now,
+                    self.schedulers[tid]._ttid(),
+                    {"user": int(arrival.user),
+                     "deadline": arrival.abs_deadline})
+                self.telemetry.metrics.inc("admission.rejected")
             return
         t = self.tenants[tid]
         now = arrival.arrival if now is None else now
@@ -490,6 +527,13 @@ class MultiTenantScheduler:
         e = float(t.fleet.kappa[arrival.user] * t.profile.u()[-1] * f ** 2)
         self.degraded[tid] += 1
         self.degraded_energy[tid][arrival.user] += e
+        if self._tr.enabled:
+            self._tr.instant(
+                "admission.degrade", now, self.schedulers[tid]._ttid(),
+                {"user": int(arrival.user), "energy_j": e,
+                 "deadline": arrival.abs_deadline})
+            self.telemetry.metrics.inc("admission.degraded")
+            self.telemetry.metrics.inc("admission.degraded_energy_j", e)
         if self.on_degrade is not None:
             self.on_degrade(tid, arrival, e)
 
@@ -570,6 +614,13 @@ class MultiTenantScheduler:
                 t_free=t_free, schedule=s, energy_delta=delta))
             self.preempt_tax_suffered[b.tenant] += delta
             self.preempt_tax_inflicted[preemptor] += delta
+            if self._tr.enabled:
+                self._tr.instant(
+                    "preempt.victim", self.schedulers[preemptor].now,
+                    sch._ttid(),
+                    {"preemptor": preemptor, "flush_seq": b.flush.seq,
+                     "tax_j": delta})
+                self.telemetry.metrics.inc("preempt.tax_j", delta)
             if s.offload.any():
                 self.timeline.book(b.tenant, b.flush)
             sch.gpu_free = self.timeline.horizon
@@ -593,6 +644,12 @@ class MultiTenantScheduler:
                 if self._no_feasible_slot(tid, a, now=now):
                     self.admitted[tid] -= 1
                     self.scrubbed[tid] += 1
+                    if self._tr.enabled:
+                        self._tr.instant(
+                            "admission.scrub", now, sch._ttid(),
+                            {"user": int(a.user),
+                             "deadline": a.abs_deadline})
+                        self.telemetry.metrics.inc("admission.scrubbed")
                     self._fallback(tid, a, now=now)
                 else:
                     keep.append(a)
@@ -740,17 +797,25 @@ class MultiTenantScheduler:
         return self.result()
 
     def result(self) -> MultiTenantResult:
+        tenants = [TenantResult(
+            name=t.name or f"tenant{k}",
+            result=self.schedulers[k].result(),
+            admitted=self.admitted[k], degraded=self.degraded[k],
+            rejected=self.rejected[k],
+            degraded_energy=self.degraded_energy[k].copy(),
+            scrubbed=self.scrubbed[k],
+            preempt_tax_inflicted=self.preempt_tax_inflicted[k],
+            preempt_tax_suffered=self.preempt_tax_suffered[k])
+            for k, t in enumerate(self.tenants)]
+        # per-scheduler loop counters aggregate field-driven: every
+        # OnlineResult field marked metadata={"aggregate": True} sums
+        # across tenants into the same-named MultiTenantResult field
+        # (test_telemetry round-trips the field lists, so a new counter
+        # cannot be silently dropped from the arbiter's summary)
+        agg = aggregate_counter_fields(OnlineResult,
+                                       [t.result for t in tenants])
         return MultiTenantResult(
-            tenants=[TenantResult(
-                name=t.name or f"tenant{k}",
-                result=self.schedulers[k].result(),
-                admitted=self.admitted[k], degraded=self.degraded[k],
-                rejected=self.rejected[k],
-                degraded_energy=self.degraded_energy[k].copy(),
-                scrubbed=self.scrubbed[k],
-                preempt_tax_inflicted=self.preempt_tax_inflicted[k],
-                preempt_tax_suffered=self.preempt_tax_suffered[k])
-                for k, t in enumerate(self.tenants)],
+            tenants=tenants,
             preemptions=self.timeline.total_preempted,
             bookings=self.timeline.total_bookings,
             gpu_busy_until=self.timeline.horizon,
@@ -762,14 +827,8 @@ class MultiTenantScheduler:
             replan_trial_misses=self.replan_trial_misses,
             channel=(self.channel.name if self.channel is not None
                      else "static"),
-            upload_error=sum(s.upload_error for s in self.schedulers),
-            channel_replans=sum(s.channel_replans
-                                for s in self.schedulers),
-            realized_late=sum(s.realized_late for s in self.schedulers),
-            stagger_replans=sum(s.stagger_replans
-                                for s in self.schedulers),
-            pruned_probes=sum(s.probe_prunes for s in self.schedulers),
-            unstretches=self.timeline.unstretches)
+            unstretches=self.timeline.unstretches,
+            **agg)
 
 
 def naive_fifo(tenants: Sequence[Tenant],

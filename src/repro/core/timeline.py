@@ -60,6 +60,8 @@ from typing import Sequence
 
 import numpy as np
 
+from .telemetry import NULL_TRACER, TID_GPU
+
 OCCUPANCY_MODES = ("serialized", "interleaved")
 
 _INF = float("inf")
@@ -167,6 +169,10 @@ class GpuTimeline:
         #: quiescent-tail stretches rolled back because traffic arrived
         #: before the stretched reservation started (follow-up (a))
         self.unstretches = 0
+        #: telemetry tracer (read-only observer: emits one GPU-track span
+        #: per reservation, instants on preempt/unstretch; the owning
+        #: scheduler installs a live tracer, NULL_TRACER costs nothing)
+        self.tracer = NULL_TRACER
 
     # ---- ledger-compatible surface (serialized semantics) ---------------
     @property
@@ -240,6 +246,16 @@ class GpuTimeline:
         self.reservations.append(r)
         self.horizon = max(self.horizon, r.end)
         self.total_bookings += 1
+        tr = self.tracer
+        if tr.enabled:
+            args = {"tenant": tenant, "queue_start": start}
+            if math.isfinite(f_edge):
+                args["f_edge_ghz"] = f_edge / 1e9
+            if math.isfinite(deadline):
+                args["deadline"] = deadline
+            if flush is not None:
+                args["seq"] = getattr(flush, "seq", None)
+            tr.span(f"batch t{tenant}", r.gpu_start, r.end, TID_GPU, args)
         return r
 
     def preemption_candidates(self, now: float, tenant: int,
@@ -266,10 +282,14 @@ class GpuTimeline:
                              if r not in victims]
         self.horizon = max((r.end for r in self.reservations), default=0.0)
         self.total_preempted += len(victims)
+        tr = self.tracer
         for r in victims:
             if r.dvfs_saved > 0.0:
                 self.dvfs_rescales -= 1
                 self.dvfs_energy_saved -= r.dvfs_saved
+            if tr.enabled:
+                tr.instant("reservation.preempted", r.gpu_start, TID_GPU,
+                           {"tenant": r.tenant, "end": r.end})
 
     def unstretch(self, r: Reservation, *, end: float, f_edge: float
                   ) -> None:
@@ -290,6 +310,16 @@ class GpuTimeline:
         r.stretched_from = None
         self.horizon = max((x.end for x in self.reservations), default=0.0)
         self.unstretches += 1
+        tr = self.tracer
+        if tr.enabled:
+            # corrective span: the reservation's final geometry replaces
+            # the stretched one emitted at booking
+            args = {"tenant": r.tenant, "unstretched": True}
+            if math.isfinite(f_edge):
+                args["f_edge_ghz"] = f_edge / 1e9
+            tr.instant("dvfs.unstretch", r.gpu_start, TID_GPU,
+                       {"tenant": r.tenant})
+            tr.span(f"batch t{r.tenant}", r.gpu_start, r.end, TID_GPU, args)
 
     # ---- interleaved occupancy shape -----------------------------------
     def gaps(self, now: float) -> list[tuple[float, float]]:

@@ -28,6 +28,15 @@ def _warn_once(key: str, msg: str) -> None:
         return
     _WARNED.add(key)
     warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    try:
+        # mirror into the telemetry runtime-event registry so fallback
+        # degradations surface in --metrics-json dumps, not just stderr
+        # (lazy import: kernels must stay importable without core)
+        from repro.core.telemetry import note_runtime_event
+        note_runtime_event(f"kernels.compat.{key}", msg,
+                           category="runtime-warning")
+    except Exception:
+        pass
 
 
 def tpu_compiler_params(*, dimension_semantics: tuple[str, ...] | None = None,

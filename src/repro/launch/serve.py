@@ -27,6 +27,12 @@ each tenant's flushes executing on its own model:
 contention / Markov fading; ``--channel-nominal`` plans at solo rates on a
 contended channel — the bench baseline); the report then includes the
 realized-vs-planned upload error and actualization replan counts.
+
+``--trace out.json`` records the whole run as a Perfetto-loadable Chrome
+trace (simulation-time tracks for each tenant, the GPU, the uplink and the
+planner); ``--metrics-json out.json`` dumps the metrics registry +
+per-request lifecycle records.  Both observe without perturbing: results
+are bit-identical with telemetry on or off.
 """
 from __future__ import annotations
 
@@ -37,8 +43,9 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import (local_computing, make_channel, make_edge_profile,
-                        make_fleet, profile_from_arch)
+from repro.core import (Telemetry, local_computing, make_channel,
+                        make_edge_profile, make_fleet, profile_from_arch)
+from repro.core.telemetry import TID_RUN
 from repro.models import init_params
 from repro.serving import (CoInferenceServer, MultiTenantServer, Request,
                            TenantModel)
@@ -76,10 +83,36 @@ def _plan_latency_line(service) -> None:
               f"plan(s) consumed")
 
 
-def _serve_offline(server, fleet, profile, edge, reqs, args) -> dict:
+def _begin_run(telemetry) -> None:
+    """Open the run-level ``serve`` B/E pair on the run track (closed by
+    :func:`_finish_telemetry` at the simulated end of service)."""
+    if telemetry is None:
+        return
+    telemetry.tracer.name_track(TID_RUN, "run")
+    telemetry.tracer.begin("serve", 0.0, TID_RUN)
+
+
+def _finish_telemetry(telemetry, args, service, end_t: float) -> None:
+    """Close the run span and write ``--trace`` / ``--metrics-json``."""
+    if telemetry is None:
+        return
+    telemetry.tracer.end("serve", max(0.0, end_t), TID_RUN)
+    if args.trace:
+        telemetry.export_trace(args.trace)
+        print(f"trace: {len(telemetry.tracer.events)} event(s) -> "
+              f"{args.trace} (chrome://tracing / ui.perfetto.dev)")
+    if args.metrics_json:
+        telemetry.export_metrics(args.metrics_json,
+                                 planner_stats=service.stats())
+        print(f"metrics -> {args.metrics_json}")
+
+
+def _serve_offline(server, fleet, profile, edge, reqs, args,
+                   telemetry=None) -> dict:
+    _begin_run(telemetry)
     t0 = time.perf_counter()
     report = server.serve(reqs, cohort_size=args.cohort_size,
-                          planner=args.planner)
+                          planner=args.planner, telemetry=telemetry)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
@@ -96,10 +129,13 @@ def _serve_offline(server, fleet, profile, edge, reqs, args) -> dict:
     print(f"co-inference vs monolithic max |Δlogit| = {err:.2e}")
     assert err < 1e-3
     _plan_latency_line(server.service)
+    _finish_telemetry(telemetry, args, server.service, report.t_free_end)
     return dict(energy=report.energy, lc=lc.energy, err=err)
 
 
-def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
+def _serve_online(server, fleet, profile, edge, reqs, args,
+                  telemetry=None) -> dict:
+    _begin_run(telemetry)
     t0 = time.perf_counter()
     report = server.serve_online(reqs, policy=args.policy,
                                  window=args.window,
@@ -109,7 +145,8 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
                                  channel_stagger=args.channel_stagger,
                                  batch_window=args.batch_window,
                                  batch_events=args.batch_events,
-                                 plan_workers=args.plan_workers)
+                                 plan_workers=args.plan_workers,
+                                 telemetry=telemetry)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
@@ -151,12 +188,14 @@ def _serve_online(server, fleet, profile, edge, reqs, args) -> dict:
           f"{stats.hits} cache hits / {stats.misses} compiles / "
           f"{stats.evictions} evictions")
     _plan_latency_line(server.service)
+    _finish_telemetry(telemetry, args, server.service,
+                      report.gpu_busy_until)
     return dict(energy=report.energy, lc=lc.energy, err=err,
                 violations=report.violations,
                 n_flushes=len(report.flushes))
 
 
-def _serve_tenants(args) -> dict:
+def _serve_tenants(args, telemetry=None) -> dict:
     """N tenants with distinct profiles/deadlines on one shared GPU."""
     import jax.numpy as jnp
     rng = np.random.default_rng(args.seed)
@@ -190,7 +229,9 @@ def _serve_tenants(args) -> dict:
                                channel_aware=not args.channel_nominal,
                                channel_stagger=args.channel_stagger,
                                batch_window=args.batch_window,
-                               plan_workers=args.plan_workers)
+                               plan_workers=args.plan_workers,
+                               telemetry=telemetry)
+    _begin_run(telemetry)
     t0 = time.perf_counter()
     report = server.serve_online(streams, batch_events=args.batch_events)
     serve_s = time.perf_counter() - t0
@@ -244,6 +285,8 @@ def _serve_tenants(args) -> dict:
     print(f"planner service family: {stats.dispatches} dispatches, "
           f"{stats.hits} cache hits / {stats.misses} compiles")
     _plan_latency_line(server.service)
+    _finish_telemetry(telemetry, args, server.service,
+                      report.gpu_busy_until)
     return dict(energy=report.energy, violations=report.violations,
                 preemptions=report.preemptions, err=max_err,
                 tenants=args.tenants)
@@ -323,10 +366,24 @@ def main(argv=None) -> dict:
                     help="plan at the nominal solo rates even on a "
                          "contended channel (the baseline the channel "
                          "bench measures channel-aware planning against)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON timeline of the "
+                         "run (load in chrome://tracing or "
+                         "ui.perfetto.dev): one track per tenant plus "
+                         "GPU / uplink / planner tracks, all timestamps "
+                         "in SIMULATION time; enabling tracing never "
+                         "changes results (tested bit-identical)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the telemetry metrics registry (counters, "
+                         "gauges, latency digests), per-request lifecycle "
+                         "records and planner stats as JSON; the only "
+                         "wall-clock numbers are under the explicitly "
+                         "labeled 'wall_time' section")
     args = ap.parse_args(argv)
 
+    telemetry = (Telemetry() if args.trace or args.metrics_json else None)
     if args.tenants > 1:
-        return _serve_tenants(args)
+        return _serve_tenants(args, telemetry)
 
     cfg = ARCHS[args.arch].reduced()
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -351,7 +408,8 @@ def main(argv=None) -> dict:
             for m in range(args.users)]
 
     if args.online:
-        return _serve_online(server, fleet, profile, edge, reqs, args)
+        return _serve_online(server, fleet, profile, edge, reqs, args,
+                             telemetry)
     if args.occupancy != "serialized":
         # the one-shot OG path threads the serialized DP cursor only
         # (ROADMAP timeline follow-up d) — don't let the flag silently
@@ -363,7 +421,8 @@ def main(argv=None) -> dict:
         # realized channel divergence is an online phenomenon
         print("NOTE: --channel applies to --online/--tenants serving; "
               "offline OG serving prices the static solo rates")
-    return _serve_offline(server, fleet, profile, edge, reqs, args)
+    return _serve_offline(server, fleet, profile, edge, reqs, args,
+                          telemetry)
 
 
 if __name__ == "__main__":

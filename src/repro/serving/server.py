@@ -36,8 +36,8 @@ from repro.configs.base import ArchConfig
 from repro.core import (ChannelModel, DeviceFleet, EdgeProfile, FlushEvent,
                         MultiTenantResult, MultiTenantScheduler,
                         OnlineArrival, OnlineResult, OnlineScheduler,
-                        PlannerService, Schedule, TaskProfile, Tenant,
-                        jdob_plus, jdob_schedule)
+                        PlannerService, Schedule, TaskProfile, Telemetry,
+                        Tenant, jdob_plus, jdob_schedule)
 from .engine import BlockwiseExecutor
 
 
@@ -159,7 +159,8 @@ class CoInferenceServer:
 
     def serve(self, requests: list[Request], t_free: float = 0.0, *,
               cohort_size: int | None = None, merge_window: int = 4,
-              planner: str | None = None) -> ServeReport:
+              planner: str | None = None,
+              telemetry: Telemetry | None = None) -> ServeReport:
         """One-shot wave: OG-group, plan and execute every request.
 
         ``cohort_size`` bounds the exact OG problem size: fleets larger
@@ -173,10 +174,10 @@ class CoInferenceServer:
         fleet = dataclasses.replace(
             self.fleet,
             deadline=np.asarray([r.deadline for r in requests]))
-        grouped = self.service.plan_fleet(fleet, self.inner, t_free=t_free,
-                                          cohort_size=cohort_size,
-                                          merge_window=merge_window,
-                                          planner=planner)
+        grouped = self.service.plan_fleet(
+            fleet, self.inner, t_free=t_free, cohort_size=cohort_size,
+            merge_window=merge_window, planner=planner,
+            tracer=None if telemetry is None else telemetry.tracer)
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)
@@ -197,7 +198,8 @@ class CoInferenceServer:
                   channel_aware: bool = True,
                   channel_stagger: bool = False,
                   batch_window: float = 0.0, plan_workers: int = 0,
-                  on_flush=None, on_gpu_free=None) -> OnlineScheduler:
+                  on_flush=None, on_gpu_free=None,
+                  telemetry: Telemetry | None = None) -> OnlineScheduler:
         """An event-driven scheduler wired to this server's fleet and
         planner service (compiled shapes shared with ``serve``).
         ``occupancy`` picks the GPU timeline mode: ``"serialized"`` is the
@@ -217,7 +219,8 @@ class CoInferenceServer:
                                channel_stagger=channel_stagger,
                                batch_window=batch_window,
                                plan_workers=plan_workers,
-                               on_flush=on_flush, on_gpu_free=on_gpu_free)
+                               on_flush=on_flush, on_gpu_free=on_gpu_free,
+                               telemetry=telemetry)
 
     def serve_online(self, requests: list[Request], *,
                      policy: str = "slack", window: float = 0.0,
@@ -228,7 +231,8 @@ class CoInferenceServer:
                      channel_stagger: bool = False,
                      batch_window: float = 0.0,
                      batch_events: bool = False,
-                     plan_workers: int = 0) -> OnlineServeReport:
+                     plan_workers: int = 0,
+                     telemetry: Telemetry | None = None) -> OnlineServeReport:
         """Serve requests arriving over time (``Request.arrival``).
 
         Each policy flush executes its planned batch on the model the
@@ -261,7 +265,7 @@ class CoInferenceServer:
                                batch_window=batch_window,
                                plan_workers=plan_workers if batch_events
                                else 0,
-                               on_flush=execute)
+                               on_flush=execute, telemetry=telemetry)
         for row, r in enumerate(requests):
             sched.submit(OnlineArrival(r.user, r.arrival, r.deadline,
                                        payload=(row, r)))
@@ -349,7 +353,8 @@ class MultiTenantServer:
                  channel: ChannelModel | None = None,
                  channel_aware: bool = True,
                  channel_stagger: bool = False,
-                 batch_window: float = 0.0, plan_workers: int = 0):
+                 batch_window: float = 0.0, plan_workers: int = 0,
+                 telemetry: Telemetry | None = None):
         assert len(models) >= 1
         self.models = list(models)
         self.executors = [BlockwiseExecutor(m.cfg, m.params)
@@ -367,6 +372,7 @@ class MultiTenantServer:
         self.channel_stagger = channel_stagger
         self.batch_window = batch_window
         self.plan_workers = plan_workers
+        self.telemetry = telemetry
         self.service = (service if service is not None
                         else PlannerService(self.models[0].profile,
                                             self.models[0].edge, rho=rho))
@@ -411,7 +417,8 @@ class MultiTenantServer:
             channel_stagger=self.channel_stagger,
             batch_window=self.batch_window,
             plan_workers=self.plan_workers if batch_events else 0,
-            on_flush=execute, on_replan=execute, on_degrade=degrade)
+            on_flush=execute, on_replan=execute, on_degrade=degrade,
+            telemetry=self.telemetry)
         for tid, reqs in enumerate(requests):
             order = sorted(range(len(reqs)), key=lambda i: reqs[i].arrival)
             for row in order:
