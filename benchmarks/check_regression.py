@@ -278,6 +278,70 @@ def _gate_scale_planning(fresh_doc: dict) -> int:
     else:
         print(f"planning: pareto {p['pareto_vs_prefix']:+.2%} vs prefix, "
               f"cohort band {band:+.2%} vs pareto (one-sided)  ok")
+    if "adaptive_energy" in p:
+        # the adaptive beam's anchor invariant makes <= prefix a HARD
+        # guarantee; the win fraction and wall gates hold it to >= 90% of
+        # the full-frontier energy win at no more than 1.1x its wall time
+        # (wall vs the PREFIX DP is reported, not gated: any frontier wide
+        # enough to recover the win does ~width x the prefix's solves)
+        if not p.get("adaptive_sound", False):
+            print(f"adaptive beam ABOVE prefix DP "
+                  f"({p['adaptive_energy']:.6f} > {p['exact_energy']:.6f}) "
+                  f"— anchor invariant broken", file=sys.stderr)
+            failures += 1
+        if p.get("adaptive_win_frac", 0.0) < 0.9:
+            print(f"adaptive beam recovers only "
+                  f"{p['adaptive_win_frac']:.0%} of the full-frontier "
+                  f"win (need >= 90%)", file=sys.stderr)
+            failures += 1
+        if p.get("adaptive_vs_pareto_wall", 0.0) > 1.1:
+            print(f"adaptive beam wall {p['adaptive_vs_pareto_wall']:.2f}x "
+                  f"the full frontier (need <= 1.1x)", file=sys.stderr)
+            failures += 1
+        if not p.get("pareto_churn_repeat_memoized", True):
+            print("churn-free repeat plan() re-folded levels "
+                  "(fast path broken)", file=sys.stderr)
+            failures += 1
+        if not p.get("pareto_churn_parity", True):
+            print("incremental pareto churn diverged from the "
+                  "from-scratch adaptive solve", file=sys.stderr)
+            failures += 1
+        if failures == 0:
+            print(f"planning: adaptive win frac "
+                  f"{p['adaptive_win_frac']:.2f}, "
+                  f"wall {p['adaptive_vs_pareto_wall']:.2f}x pareto "
+                  f"({p.get('adaptive_vs_prefix_wall', 0.0):.2f}x prefix, "
+                  f"reported ungated), churn memo+parity ok")
+    return failures
+
+
+def _gate_scale_dynamic(fresh_doc: dict) -> int:
+    """Dynamic-channel speculation invariants: the SharedUplink pipelined
+    run must stay bitwise against its synchronous twin, actually consume
+    speculative plans (hit rate > 0 — the digest keying working), and win
+    wall time."""
+    dyn = (fresh_doc.get("dynamic") or {}).get("pipelined")
+    if not dyn:
+        print("no dynamic-channel section in fresh run; nothing to gate")
+        return 0
+    failures = 0
+    if not dyn.get("parity", False):
+        print("dynamic-channel pipelined run diverged from its "
+              "synchronous twin", file=sys.stderr)
+        failures += 1
+    if dyn.get("plan_ahead_hits", 0) <= 0:
+        print("dynamic-channel speculation never hit "
+              "(digest keying dead)", file=sys.stderr)
+        failures += 1
+    if dyn.get("pipeline_speedup", 0.0) <= 1.0:
+        print(f"dynamic-channel pipelining did not win wall time "
+              f"({dyn.get('pipeline_speedup', 0.0):.2f}x)",
+              file=sys.stderr)
+        failures += 1
+    if failures == 0:
+        h, m = dyn["plan_ahead_hits"], dyn["plan_ahead_misses"]
+        print(f"dynamic channel: {dyn['pipeline_speedup']:.2f}x speedup, "
+              f"plan-ahead {h}/{h + m} hit, parity ok")
     return failures
 
 
@@ -293,6 +357,7 @@ def _gate_scale(baseline: str, fresh_path: str, tolerance: float,
     failures += _gate_scale_traced(base_doc, fresh_doc, tolerance,
                                    overhead_max)
     failures += _gate_scale_planning(fresh_doc)
+    failures += _gate_scale_dynamic(fresh_doc)
     if fresh_doc.get("gate_wins", 0) < fresh_doc.get("gate_needed", 0):
         print(f"fresh scale run failed its own gate "
               f"({fresh_doc['gate_wins']}/{fresh_doc['gate_needed']} wins)",

@@ -21,6 +21,14 @@ Two sections, one JSON document (``BENCH_scale.json``):
   the only thing that may move is wall time: ``pipeline_speedup`` and the
   plan-ahead hit rate are reported per M.
 
+* **dynamic** — one SharedUplink channel-aware run (sync + pipelined
+  twin) at M = min(10k, max fleet): channel-keyed speculation must land
+  (nonzero plan-ahead hits), win wall time, and stay bitwise against the
+  synchronous twin — the configuration PR 7 had to disable outright.
+  Runs in a fresh interpreter (``--dynamic-only`` spawn) so its sync
+  twin carries the cold compile like every per-M pipelined comparison,
+  without warming the parent's caches under the traced-overhead rows.
+
 * **traced** — the same online runs with the full telemetry stack
   attached (event tracer + metrics registry + per-request lifecycle
   records).  Sim results are asserted bitwise-equal to the untraced
@@ -31,7 +39,10 @@ Two sections, one JSON document (``BENCH_scale.json``):
 * **planning** — the one-shot OG problem at a fleet size where the exact
   O(M²)-segment DP is measurably expensive: prefix-exact vs the
   Pareto-frontier DP (sound under occupancy coupling; energy must come
-  out ``<=`` prefix) vs hierarchical :func:`~repro.core.cohort_grouping`
+  out ``<=`` prefix) vs the adaptive self-sizing beam
+  (``beam_width="auto"``: energy ``<=`` prefix by the anchor invariant,
+  ``>= 90%`` of the full-frontier win at lower wall time) vs
+  hierarchical :func:`~repro.core.cohort_grouping`
   (wall time + energy band — banded against BOTH baselines; only the
   pareto band is one-sided), and :class:`~repro.core.IncrementalOgState`
   fleet churn (a late-deadline arrival re-folds O(1) DP levels; a mid
@@ -68,6 +79,8 @@ def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
                      policy: str = "slack",
                      batch_window: float = 0.0,
                      plan_workers: int = 0,
+                     plan_depth: int = 1,
+                     channel: str | None = None,
                      telemetry=None):
     """One sustained-load run at fleet size M through the batched loop.
 
@@ -75,8 +88,13 @@ def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
     :class:`OnlineResult` so the pipelined run can be asserted bitwise
     equal to the synchronous one.  ``telemetry`` attaches a
     :class:`~repro.core.Telemetry` sink (the traced section measures its
-    overhead and asserts result parity against the untraced twin)."""
-    from repro.core import OnlineScheduler, PlannerService, poisson_arrivals
+    overhead and asserts result parity against the untraced twin).
+    ``channel`` names a :func:`~repro.core.make_channel` kind for a
+    channel-aware run (the dynamic-channel pipelined section exercises
+    digest-keyed speculation); ``plan_depth`` sets the speculation chain
+    depth when ``plan_workers > 0``."""
+    from repro.core import (OnlineScheduler, PlannerService, make_channel,
+                            poisson_arrivals)
     profile, edge, fleet = _build(M, seed)
     rate = load_hz * M
     arrivals = poisson_arrivals(M, rate, fleet, seed=arrival_seed)
@@ -85,6 +103,9 @@ def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
                             keep_frac=0.7, service=service,
                             batch_window=batch_window,
                             plan_workers=plan_workers,
+                            plan_depth=plan_depth,
+                            channel=(make_channel(channel)
+                                     if channel else None),
                             telemetry=telemetry)
     sched.submit_many(sorted(arrivals, key=lambda a: a.arrival))
     t0 = time.perf_counter()
@@ -97,7 +118,8 @@ def run_online_scale(M: int, load_hz: float, seed: int, arrival_seed: int,
     row = dict(
         users=M, rate_hz=rate, policy=policy, seed=seed,
         arrival_seed=arrival_seed, batch_window=batch_window,
-        plan_workers=plan_workers,
+        plan_workers=plan_workers, plan_depth=plan_depth,
+        channel=channel,
         n_flushes=res.n_flushes,
         mean_batch=float(np.mean(res.batch_sizes)) if res.batch_sizes else 0.0,
         max_batch=max(res.batch_sizes) if res.batch_sizes else 0,
@@ -148,6 +170,15 @@ def run_planning_scale(M: int, cohort_size: int, seed: int) -> dict:
                               dp="pareto")
     t_pareto = time.perf_counter() - t0
     fstats = service.stats()
+    bw0 = fstats.beam_widenings
+    t0 = time.perf_counter()
+    adaptive = optimal_grouping(profile, fleet, edge, service=service,
+                                dp="pareto", beam_width="auto")
+    t_adaptive = time.perf_counter() - t0
+    beam_widenings = service.stats().beam_widenings - bw0
+    full_win = exact.energy - pareto.energy
+    adaptive_win_frac = ((exact.energy - adaptive.energy) / full_win
+                         if full_win > 1e-12 else 1.0)
     t0 = time.perf_counter()
     cohort = cohort_grouping(profile, fleet, edge, cohort_size=cohort_size,
                              service=service)
@@ -179,12 +210,45 @@ def run_planning_scale(M: int, cohort_size: int, seed: int) -> dict:
     t_scratch = time.perf_counter() - t0
     assert p_depart.energy == scratch.energy, \
         "incremental OG diverged from the from-scratch solve"
+
+    # churn fast path under the adaptive-beam pareto DP: a churn-free
+    # repeat plan() must be memoized (zero levels re-folded, same object)
+    # and arrive/depart must rewind the beam history and still match the
+    # from-scratch adaptive solve bitwise
+    pstate = IncrementalOgState(profile, fleet, edge, service=service,
+                                dp="pareto", beam_width="auto")
+    t0 = time.perf_counter()
+    pp_seed = pstate.plan()
+    t_pseed = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pp_repeat = pstate.plan()
+    t_prepeat = time.perf_counter() - t0
+    repeat_memoized = bool(pp_repeat is pp_seed
+                           and pstate.last_refold_levels == 0)
+    t0 = time.perf_counter()
+    pstate.arrive(tail_row)
+    t_parrive = time.perf_counter() - t0
+    parrive_levels = pstate.last_refold_levels
+    t0 = time.perf_counter()
+    pp_depart = pstate.depart(pstate.M // 2)
+    t_pdepart = time.perf_counter() - t0
+    pscratch = optimal_grouping(profile, pstate.fleet, edge,
+                                service=service, dp="pareto",
+                                beam_width="auto")
     return dict(
         users=M, cohort_size=cohort_size, seed=seed,
         exact_s=t_exact, exact_energy=exact.energy,
         pareto_s=t_pareto, pareto_energy=pareto.energy,
         pareto_vs_prefix=pareto.energy / exact.energy - 1.0,
         pareto_sound=bool(pareto.energy <= exact.energy + 1e-12),
+        adaptive_s=t_adaptive, adaptive_energy=adaptive.energy,
+        adaptive_win_frac=adaptive_win_frac,
+        adaptive_sound=bool(adaptive.energy <= exact.energy + 1e-12),
+        adaptive_vs_pareto_wall=(t_adaptive / t_pareto
+                                 if t_pareto > 0 else 0.0),
+        adaptive_vs_prefix_wall=(t_adaptive / t_exact
+                                 if t_exact > 0 else 0.0),
+        beam_widenings=beam_widenings,
         frontier_states=fstats.frontier_states,
         frontier_max=fstats.frontier_max,
         dominance_pruned=fstats.dominance_pruned,
@@ -201,7 +265,70 @@ def run_planning_scale(M: int, cohort_size: int, seed: int) -> dict:
         arrive_speedup=t_scratch / t_arrive if t_arrive > 0 else 0.0,
         incremental_parity=bool(p_depart.energy == scratch.energy),
         tail_arrival_cheap=bool(arrive_levels <= 2),
+        pareto_churn_seed_s=t_pseed,
+        pareto_churn_repeat_s=t_prepeat,
+        pareto_churn_repeat_memoized=repeat_memoized,
+        pareto_arrive_s=t_parrive,
+        pareto_arrive_refold_levels=parrive_levels,
+        pareto_depart_s=t_pdepart,
+        pareto_churn_parity=bool(pp_depart.energy == pscratch.energy),
     )
+
+
+_DYNAMIC_MARK = "DYNAMIC_JSON: "
+
+
+def run_dynamic_channel(m_dyn: int, load: float, seed: int,
+                        arrival_seed: int, policy: str,
+                        batch_window: float, plan_workers: int,
+                        plan_depth: int) -> dict:
+    """The dynamic-channel pipelined pair: a SharedUplink channel-aware
+    sync run and its plan-ahead twin.  PR 7 disabled speculation outright
+    under a dynamic channel-aware snapshot; the channel-keyed digest
+    re-enables it, so this run must show nonzero plan-ahead hits AND a
+    wall-time win, still bitwise against the synchronous twin.  Meant to
+    run in a FRESH process (``--dynamic-only``) so the sync twin carries
+    the cold compile — the same convention as the per-M pipelined rows
+    (overlapping first-dispatch compiles is the win) — without warming
+    the parent's caches and skewing its traced-overhead rows."""
+    rd, resd = run_online_scale(m_dyn, load, seed, arrival_seed,
+                                policy=policy, batch_window=batch_window,
+                                channel="shared")
+    rdp, resdp = run_online_scale(m_dyn, load, seed, arrival_seed,
+                                  policy=policy, batch_window=batch_window,
+                                  plan_workers=plan_workers,
+                                  plan_depth=plan_depth,
+                                  channel="shared")
+    rdp["parity"] = _same_result(resd, resdp)
+    rdp["pipeline_speedup"] = (rd["wall_s"] / rdp["wall_s"]
+                               if rdp["wall_s"] > 0 else 0.0)
+    return dict(sync=rd, pipelined=rdp)
+
+
+def _spawn_dynamic(args, arrival_seed: int) -> dict | None:
+    """Run the dynamic-channel section in a fresh interpreter and parse
+    its marker line (falls back to in-process on spawn failure)."""
+    import subprocess
+    cmd = [sys.executable, os.path.abspath(__file__), "--dynamic-only",
+           "--load", str(args.load), "--policy", args.policy,
+           "--batch-window", str(args.batch_window),
+           "--seed", str(args.seed), "--arrival-seed", str(arrival_seed),
+           "--plan-workers", str(args.plan_workers),
+           "--plan-depth", str(args.plan_depth),
+           "--fleet-sizes"] + [str(m) for m in args.fleet_sizes]
+    try:
+        out = subprocess.run(cmd, capture_output=True, text=True,
+                             check=True).stdout
+        for line in out.splitlines():
+            if line.startswith(_DYNAMIC_MARK):
+                return json.loads(line[len(_DYNAMIC_MARK):])
+    except (subprocess.SubprocessError, OSError, ValueError) as e:
+        print(f"dynamic-channel subprocess failed ({e}); "
+              f"running in-process (sync twin will be warm)")
+    return run_dynamic_channel(min(10_000, max(args.fleet_sizes)),
+                               args.load, args.seed, arrival_seed,
+                               args.policy, args.batch_window,
+                               args.plan_workers, args.plan_depth)
 
 
 def main(argv=None) -> int:
@@ -219,6 +346,9 @@ def main(argv=None) -> int:
     ap.add_argument("--plan-workers", type=int, default=2,
                     help="plan-ahead threads for the pipelined section "
                          "(0 skips it)")
+    ap.add_argument("--plan-depth", type=int, default=2,
+                    help="speculation chain depth for the pipelined and "
+                         "dynamic-channel sections")
     ap.add_argument("--planning-users", type=int, default=96,
                     help="planning-section fleet size (exact OG is "
                          "O(M^2) segments — keep it measurable, not "
@@ -232,6 +362,10 @@ def main(argv=None) -> int:
                     help="machine-readable output path ('' disables)")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny axes for CI (wiring + gate only)")
+    ap.add_argument("--dynamic-only", action="store_true",
+                    help="(internal) run just the dynamic-channel pair "
+                         "and emit its JSON marker line — spawned in a "
+                         "fresh process so the sync twin stays cold")
     args = ap.parse_args(argv)
     arrival_seed = args.seed if args.arrival_seed is None else \
         args.arrival_seed
@@ -245,6 +379,14 @@ def main(argv=None) -> int:
             args.planning_users = 24
         if args.cohort_size == ap.get_default("cohort_size"):
             args.cohort_size = 8
+
+    if args.dynamic_only:
+        dyn = run_dynamic_channel(min(10_000, max(args.fleet_sizes)),
+                                  args.load, args.seed, arrival_seed,
+                                  args.policy, args.batch_window,
+                                  args.plan_workers, args.plan_depth)
+        print(_DYNAMIC_MARK + json.dumps(dyn))
+        return 0
 
     print(f"{'M':>7} {'rate/s':>8} {'flushes':>7} {'batch μ/max':>11} "
           f"{'viol':>6} {'goodput/s':>9} {'J/req':>8} {'p50/p99 ms':>12} "
@@ -266,15 +408,16 @@ def main(argv=None) -> int:
             rp, resp = run_online_scale(M, args.load, args.seed,
                                         arrival_seed, policy=args.policy,
                                         batch_window=args.batch_window,
-                                        plan_workers=args.plan_workers)
+                                        plan_workers=args.plan_workers,
+                                        plan_depth=args.plan_depth)
             rp["parity"] = _same_result(res, resp)
             rp["pipeline_speedup"] = (r["wall_s"] / rp["wall_s"]
                                       if rp["wall_s"] > 0 else 0.0)
             pipelined.append(rp)
             hits, misses = rp["plan_ahead_hits"], rp["plan_ahead_misses"]
             hit_rate = hits / (hits + misses) if hits + misses else 0.0
-            print(f"{'':>7} pipelined x{args.plan_workers}: "
-                  f"wall {rp['wall_s']:.1f}s "
+            print(f"{'':>7} pipelined x{args.plan_workers} "
+                  f"d{args.plan_depth}: wall {rp['wall_s']:.1f}s "
                   f"({rp['pipeline_speedup']:.2f}x), plan-ahead "
                   f"{hits}/{hits + misses} hit ({hit_rate:.0%}), "
                   f"parity={'ok' if rp['parity'] else 'BROKEN'}")
@@ -305,6 +448,18 @@ def main(argv=None) -> int:
               f"parity={'ok' if t['parity'] else 'BROKEN'}, "
               f"schema={'ok' if t['trace_clean'] else 'BROKEN'}")
 
+    dynamic = None
+    if args.plan_workers > 0:
+        dynamic = _spawn_dynamic(args, arrival_seed)
+        rdp = dynamic["pipelined"]
+        h, ms = rdp["plan_ahead_hits"], rdp["plan_ahead_misses"]
+        print(f"\ndynamic channel (shared uplink) at M={rdp['users']}: "
+              f"sync {dynamic['sync']['wall_s']:.1f}s, pipelined "
+              f"x{args.plan_workers} d{args.plan_depth} "
+              f"{rdp['wall_s']:.1f}s ({rdp['pipeline_speedup']:.2f}x), "
+              f"plan-ahead {h}/{h + ms} hit, "
+              f"parity={'ok' if rdp['parity'] else 'BROKEN'}")
+
     p = run_planning_scale(args.planning_users, args.cohort_size, args.seed)
     print(f"\nplanning at M={p['users']} (cohort C={p['cohort_size']}):")
     print(f"  prefix OG     {p['exact_s']:>8.2f}s  E={p['exact_energy']:.4f}")
@@ -313,6 +468,12 @@ def main(argv=None) -> int:
           f"vs prefix {100 * p['pareto_vs_prefix']:+.2f}%  "
           f"(frontier max {p['frontier_max']}, "
           f"{p['dominance_pruned']} pruned)")
+    print(f"  adaptive OG   {p['adaptive_s']:>8.2f}s  "
+          f"E={p['adaptive_energy']:.4f}  "
+          f"win frac {p['adaptive_win_frac']:.2f}  "
+          f"wall {p['adaptive_vs_pareto_wall']:.2f}x pareto / "
+          f"{p['adaptive_vs_prefix_wall']:.2f}x prefix  "
+          f"({p['beam_widenings']} widenings)")
     print(f"  cohort OG     {p['cohort_s']:>8.2f}s  "
           f"E={p['cohort_energy']:.4f}  "
           f"band {100 * p['cohort_energy_band']:+.2f}% vs prefix, "
@@ -324,6 +485,13 @@ def main(argv=None) -> int:
           f"{p['arrive_speedup']:.0f}x vs {p['scratch_s']:.2f}s scratch), "
           f"mid depart {p['depart_s']:.2f}s "
           f"({p['depart_refold_levels']} levels)")
+    print(f"  pareto churn  seed {p['pareto_churn_seed_s']:.2f}s, "
+          f"repeat {1e3 * p['pareto_churn_repeat_s']:.2f}ms "
+          f"({'memoized' if p['pareto_churn_repeat_memoized'] else 'NOT MEMOIZED'}), "
+          f"tail arrive {p['pareto_arrive_s']:.3f}s "
+          f"({p['pareto_arrive_refold_levels']} level(s)), "
+          f"mid depart {p['pareto_depart_s']:.2f}s, "
+          f"parity={'ok' if p['pareto_churn_parity'] else 'BROKEN'}")
 
     # internal acceptance: every online run healthy, every pipelined run
     # bitwise-identical to its synchronous twin, every traced run
@@ -333,16 +501,26 @@ def main(argv=None) -> int:
     # one level re-folded and measurably faster than scratch (its single
     # level still batch-solves M segments, so wall time shrinks less than
     # the level count does) (dry-run: wiring only)
-    total = len(online) + len(pipelined) + 2 * len(traced) + 5
+    dyn_checks = 3 if dynamic is not None else 0
+    total = len(online) + len(pipelined) + 2 * len(traced) + dyn_checks + 10
     wins = (sum(r["healthy"] for r in online)
             + sum(r["parity"] for r in pipelined)
             + sum(r["parity"] for r in traced)
             + sum(r["trace_clean"] for r in traced)
             + int(p["pareto_sound"])
+            + int(p["adaptive_sound"])
+            + int(p["adaptive_win_frac"] >= 0.9)
+            + int(p["adaptive_vs_pareto_wall"] <= 1.1)
             + int(-1e-9 <= p["cohort_energy_band_vs_pareto"] <= 0.08)
             + int(abs(p["cohort_energy_band"]) <= 0.08)
             + int(p["tail_arrival_cheap"] and p["arrive_speedup"] > 1.3)
-            + int(p["incremental_parity"]))
+            + int(p["incremental_parity"])
+            + int(p["pareto_churn_repeat_memoized"])
+            + int(p["pareto_churn_parity"]))
+    if dynamic is not None:
+        wins += (int(dynamic["pipelined"]["parity"])
+                 + int(dynamic["pipelined"]["plan_ahead_hits"] > 0)
+                 + int(dynamic["pipelined"]["pipeline_speedup"] > 1.0))
     need = 1 if args.dry_run else total
     print(f"scale acceptance: {wins}/{total} checks pass "
           f"(gate: >= {need})")
@@ -354,9 +532,10 @@ def main(argv=None) -> int:
                    jax_platforms=os.environ.get("JAX_PLATFORMS", ""),
                    load_per_user_hz=args.load, policy=args.policy,
                    plan_workers=args.plan_workers,
+                   plan_depth=args.plan_depth,
                    gate_wins=wins, gate_needed=need,
                    online=online, pipelined=pipelined, traced=traced,
-                   planning=p)
+                   dynamic=dynamic, planning=p)
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.json} ({len(online)} online scales)")

@@ -131,6 +131,17 @@ class ChannelModel:
     def reset(self) -> None:
         """Drop all state (fresh run)."""
 
+    def state_digest(self) -> tuple:
+        """Cheap hashable fingerprint of every piece of channel state that
+        :meth:`effective_rates` can read.  Two calls with equal digests and
+        equal ``(solo, now, keys)`` return bit-identical rates, which is
+        what lets the plan-ahead pipeline speculate under dynamic channels:
+        a plan keyed by the digest is consumed only when the channel state
+        at flush time is exactly the state it was priced against.  Models
+        whose rates are a pure function of ``(key, now)`` return a
+        constant."""
+        return ()
+
 
 class StaticChannel(ChannelModel):
     """Constant per-device rates — the seed's Eqs. 3-4, bit for bit."""
@@ -266,6 +277,15 @@ class SharedUplink(ChannelModel):
     def reset(self):
         self._spans = []
 
+    def state_digest(self):
+        """The committed span books, in order: who is (or will be) on the
+        medium, when, and at what weight — exactly the state
+        :meth:`effective_rates` folds into ``w_busy``.  ``nbytes`` is
+        deliberately excluded: a span's remaining bytes never feed the
+        concurrent-rate snapshot, only its interval and weight do."""
+        return tuple((s.key, s.start, s.finish, s.weight)
+                     for s in self._spans)
+
 
 class TraceChannel(ChannelModel):
     """Time-varying rates from piecewise-constant gain traces.
@@ -346,6 +366,14 @@ class TraceChannel(ChannelModel):
         fin = np.array([self._finish(k, float(r), float(s), nb)
                         for k, r, s in zip(keys, solo, starts)])
         return nb / np.maximum(fin - starts, _EPS)
+
+    def state_digest(self):
+        """``times``/``gains`` are frozen at construction and
+        :meth:`effective_rates` is a pure function of ``(key, now)`` over
+        them — the fire time already pins the active trace segment (and
+        hence the gain vector) through the speculation key, so the digest
+        only needs to identify the table itself."""
+        return (id(self.times), id(self.gains))
 
 
 def markov_fading_gains(n_traces: int, horizon: float, dt: float = 0.005, *,

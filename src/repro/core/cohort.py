@@ -45,7 +45,7 @@ import numpy as np
 
 from .cost_models import DeviceFleet
 from .grouping import (GroupedSchedule, _collect_chain, _pareto_sweep,
-                       optimal_grouping)
+                       _resolve_beam, optimal_grouping)
 from .jdob import Schedule, jdob_schedule
 from .planner_service import PlannerService
 from .telemetry import NULL_TRACER, TID_PLANNER
@@ -67,7 +67,7 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
                     service: PlannerService | None = None,
                     timeline: GpuTimeline | None = None,
                     dp: str = "prefix", frontier_eps: float = 0.0,
-                    beam_width: int | None = None, tracer=None
+                    beam_width: int | str | None = None, tracer=None
                     ) -> GroupedSchedule:
     """Hierarchical OG over deadline-sorted cohorts of ≤ ``cohort_size``.
 
@@ -173,6 +173,9 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
         # (energy, cursor) state, so a cheaper-but-later fuse cannot
         # poison the suffix the way the single-state merge can
         stats = None if planner is None else planner.stats
+        # "auto" gets its own merge-level adaptive beam (the per-cohort
+        # inner DPs each resolved a fresh one inside optimal_grouping)
+        merge_beam = _resolve_beam(beam_width)
         mdp: list[list[tuple[float, TimelineCursor, int, int]]] = \
             [[(0.0, TimelineCursor(t_free), -1, 0)]]
         for t in range(1, K + 1):
@@ -201,7 +204,7 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
                     sch = solve(i_abs, j_abs, st[1].t_free)
                     cands.append((st[0] + sch.energy,
                                   st[1].advance(sch), s, si))
-            front = _pareto_sweep(cands, frontier_eps, beam_width, stats)
+            front = _pareto_sweep(cands, frontier_eps, merge_beam, stats)
             if not front:
                 front = [(INF, TimelineCursor(t_free), t - 1, 0)]
             mdp.append(front)

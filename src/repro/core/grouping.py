@@ -125,9 +125,39 @@ def _run_dp(M: int, cursor: TimelineCursor, solve, level_prefetch=None,
     return chain
 
 
+class AdaptiveBeam:
+    """Self-sizing beam for the Pareto-frontier DP (``beam_width="auto"``).
+
+    A static beam pays for its width at EVERY level, but most levels'
+    frontiers never fork — the occupancy trade-off concentrates where
+    deadlines cluster.  This policy starts at width 1 (the prefix-DP
+    view) and doubles only at levels whose dominance survivors overflow
+    the current beam (the frontier actually forked there), saturating at
+    ``cap``; once widened it stays widened, so a late fork never thrashes.
+    The energy invariant does NOT come from the width policy — ANY width
+    schedule is sound because :func:`_run_dp_pareto` force-retains the
+    prefix-DP anchor state at every level (see there), so the adaptive
+    result can never exceed the prefix DP's energy."""
+
+    def __init__(self, start: int = 1, growth: int = 2, cap: int = 12):
+        assert start >= 1 and growth >= 2 and cap >= start
+        self.width = start
+        self.growth = growth
+        self.cap = cap
+        #: levels whose fork actually widened the beam (observability)
+        self.widenings = 0
+
+    def fit(self, survivors: int) -> int:
+        """The beam width to cap a level with ``survivors`` dominance
+        survivors at — widening state updates as a side effect."""
+        while survivors > self.width and self.width < self.cap:
+            self.width = min(self.width * self.growth, self.cap)
+            self.widenings += 1
+        return self.width
+
+
 def _pareto_sweep(cands: list, frontier_eps: float = 0.0,
-                  beam_width: int | None = None,
-                  stats=None) -> list:
+                  beam_width=None, stats=None) -> list:
     """Deterministic Pareto reduction of DP candidate states.
 
     ``cands`` entries are ``(energy, cursor, split, state_idx)``.  Sorted
@@ -140,8 +170,10 @@ def _pareto_sweep(cands: list, frontier_eps: float = 0.0,
     a relative epsilon (bounded frontiers at bounded suboptimality);
     ``beam_width`` hard-caps the frontier at the N cheapest survivors
     (``beam_width=1`` collapses to the single min-energy state — the
-    prefix DP's view).  ``stats``, when given, accumulates
-    ``frontier_states`` / ``frontier_max`` / ``dominance_pruned`` onto a
+    prefix DP's view); an :class:`AdaptiveBeam` instance self-sizes the
+    cap from the survivor count, widening only at levels that actually
+    fork.  ``stats``, when given, accumulates ``frontier_states`` /
+    ``frontier_max`` / ``dominance_pruned`` / ``frontier_levels`` onto a
     :class:`~repro.core.jdob.PlannerStats`."""
     cands = [c for c in cands if np.isfinite(c[0])]
     n_in = len(cands)
@@ -153,19 +185,30 @@ def _pareto_sweep(cands: list, frontier_eps: float = 0.0,
         if tf < best_tf * (1.0 - frontier_eps):
             front.append(c)
             best_tf = tf
-    if beam_width is not None and len(front) > beam_width:
-        front = front[:beam_width]
+    if isinstance(beam_width, AdaptiveBeam):
+        w0 = beam_width.widenings
+        bw = beam_width.fit(len(front))
+        if stats is not None:
+            stats.beam_widenings += beam_width.widenings - w0
+    else:
+        bw = beam_width
+    if bw is not None and len(front) > bw:
+        front = front[:bw]
     if stats is not None:
         stats.frontier_states += len(front)
         stats.frontier_max = max(stats.frontier_max, len(front))
         stats.dominance_pruned += n_in - len(front)
+        if len(stats.frontier_levels) < 4096:
+            stats.frontier_levels.append(len(front))
     return front
 
 
 def _run_dp_pareto(M: int, cursor: TimelineCursor, solve,
                    level_prefetch=None, dp: list | None = None,
-                   frontier_eps: float = 0.0, beam_width: int | None = None,
-                   stats=None) -> list[tuple[int, int]]:
+                   frontier_eps: float = 0.0, beam_width=None,
+                   stats=None, anchor: list | None = None,
+                   beam_hist: list | None = None
+                   ) -> list[tuple[int, int]]:
     """The Pareto-frontier prefix DP: ``dp[j]`` is a LIST of frontier
     states ``(energy, cursor, split i, state index into dp[i])``, sorted
     ascending by energy, one list per prefix [0, j).  Where
@@ -180,9 +223,34 @@ def _run_dp_pareto(M: int, cursor: TimelineCursor, solve,
     churn point and re-folds the suffix).  With every segment's
     (energy, end) monotone in its start the frontier contains the exact
     optimum; ``frontier_eps``/``beam_width`` trade that for bounded
-    state counts.  Returns the chain of the min-energy final state."""
+    state counts.  Returns the chain of the min-energy final state.
+
+    With an :class:`AdaptiveBeam`, ``anchor[j]`` tracks the index into
+    ``dp[j]`` of the PREFIX-DP ANCHOR: the state :func:`_run_dp` would
+    have kept at level j, re-folded here over anchor states only with
+    the identical ``e_i + s.energy`` / strict-``<`` / ascending-``i``
+    fold.  The anchor is force-retained — re-inserted if the beam cap or
+    dominance dropped it — so every level's frontier contains the entire
+    prefix-DP chain and the adaptive min-energy result is ≤ the prefix
+    DP's, whatever width schedule the beam picks.  Its solves are a
+    subset of the frontier's own (the anchor state lives in ``dp[i]``),
+    so the guarantee costs no extra solver dispatches.  On resume, pass
+    back the same ``anchor`` list truncated in lockstep with ``dp``;
+    ``beam_hist`` likewise records the beam's (width, widenings) per
+    level so a truncated resume rewinds the widening state to exactly
+    what a from-scratch fold would have at the churn point — without it
+    a wider leftover beam would keep extra suffix states and break
+    incremental-vs-scratch parity."""
+    adaptive = isinstance(beam_width, AdaptiveBeam)
     if dp is None:
         dp = [[(0.0, cursor, -1, 0)]]
+    if adaptive and anchor is None:
+        anchor = [0]
+    if adaptive and beam_hist is not None:
+        if beam_hist:
+            beam_width.width, beam_width.widenings = beam_hist[-1]
+        else:
+            beam_hist.append((beam_width.width, beam_width.widenings))
     start = len(dp)
     for j in range(start, M + 1):
         if level_prefetch is not None:
@@ -195,10 +263,41 @@ def _run_dp_pareto(M: int, cursor: TimelineCursor, solve,
                     continue
                 s = solve(i, j, cur_i.t_free)
                 cands.append((e_i + s.energy, cur_i.advance(s), i, si))
+        a_best = None
+        if adaptive:
+            # re-fold _run_dp over the anchor chain (solves already memoized)
+            for i in range(j):
+                e_i, cur_i = dp[i][anchor[i]][0], dp[i][anchor[i]][1]
+                if not np.isfinite(e_i):
+                    continue
+                s = solve(i, j, cur_i.t_free)
+                cand = e_i + s.energy
+                if a_best is None or cand < a_best[0]:
+                    a_best = (cand, cur_i.advance(s), i, anchor[i])
         front = _pareto_sweep(cands, frontier_eps, beam_width, stats)
         if not front:
             front = [(np.inf, cursor, 0, 0)]
+            if adaptive:
+                anchor.append(0)
+        elif adaptive:
+            if a_best is None:
+                anchor.append(0)
+            else:
+                ai = next((k for k, c in enumerate(front)
+                           if c[2] == a_best[2] and c[3] == a_best[3]), None)
+                if ai is None:
+                    front.append(a_best)
+                    front.sort(key=lambda c: (c[0], c[1].t_free, c[2], c[3]))
+                    ai = next(k for k, c in enumerate(front)
+                              if c[2] == a_best[2] and c[3] == a_best[3])
+                    if stats is not None:
+                        stats.frontier_states += 1
+                        stats.frontier_max = max(stats.frontier_max,
+                                                 len(front))
+                anchor.append(ai)
         dp.append(front)
+        if adaptive and beam_hist is not None:
+            beam_hist.append((beam_width.width, beam_width.widenings))
     chain: list[tuple[int, int]] = []
     j, si = M, 0
     while j > 0:
@@ -207,6 +306,14 @@ def _run_dp_pareto(M: int, cursor: TimelineCursor, solve,
         j, si = st[2], st[3]
     chain.reverse()
     return chain
+
+
+def _resolve_beam(beam_width):
+    """Normalize a ``beam_width`` knob: the string ``"auto"`` becomes a
+    fresh per-run :class:`AdaptiveBeam` (widening state must never leak
+    across independent DP runs); ints, ``None`` and prebuilt beam objects
+    pass through."""
+    return AdaptiveBeam() if beam_width == "auto" else beam_width
 
 
 def _entry_states(entry):
@@ -246,7 +353,7 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
                      service: PlannerService | None = None,
                      timeline: GpuTimeline | None = None,
                      dp: str = "prefix", frontier_eps: float = 0.0,
-                     beam_width: int | None = None
+                     beam_width: int | str | None = None
                      ) -> GroupedSchedule:
     """OG over the deadline-sorted fleet.  ``inner`` picks the per-group
     solver; the J-DOB family routes through the planner service (pass a
@@ -261,7 +368,9 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     ``dp="pareto"`` switches the recurrence to the Pareto-frontier DP
     (:func:`_run_dp_pareto` — sound under occupancy coupling, never above
     the prefix DP), with ``frontier_eps``/``beam_width`` bounding the
-    per-prefix frontier."""
+    per-prefix frontier; ``beam_width="auto"`` self-sizes the beam
+    (:class:`AdaptiveBeam`) with the anchor guarantee that the result
+    never exceeds the prefix DP's energy."""
     assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
     if timeline is not None:
         t_free = max(t_free, timeline.t_free(0.0))
@@ -357,7 +466,8 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     if dp == "pareto":
         chain = _run_dp_pareto(M, TimelineCursor(t_free), solve,
                                level_prefetch, frontier_eps=frontier_eps,
-                               beam_width=beam_width, stats=planner.stats)
+                               beam_width=_resolve_beam(beam_width),
+                               stats=planner.stats)
     else:
         chain = _run_dp(M, TimelineCursor(t_free), solve, level_prefetch)
     return _collect_chain(chain, order, solve, TimelineCursor(t_free),
@@ -403,7 +513,7 @@ class IncrementalOgState:
                  rho: float = 0.03e9,
                  service: PlannerService | None = None,
                  dp: str = "prefix", frontier_eps: float = 0.0,
-                 beam_width: int | None = None):
+                 beam_width: int | str | None = None):
         assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
         if service is None:
             service = PlannerService(profile, edge, rho=rho)
@@ -422,7 +532,14 @@ class IncrementalOgState:
         #: protocol is identical, only the per-level state differs
         self.dp_mode = dp
         self.frontier_eps = frontier_eps
-        self.beam_width = beam_width
+        # an adaptive beam is stateful: one long-lived instance per state,
+        # with its per-level widening history recorded so churn truncation
+        # can rewind it (see _run_dp_pareto's beam_hist contract)
+        self.beam_width = _resolve_beam(beam_width)
+        self._anchor: list = [0]
+        self._beam_hist: list = []
+        #: memoized plan() result — valid while no churn truncated the DP
+        self._last_plan: GroupedSchedule | None = None
         self.fleet = fleet                       # current fleet, append order
         #: deadline-sorted positions -> current-fleet indices (stable order)
         self._order = list(np.argsort(fleet.deadline, kind="stable"))
@@ -506,7 +623,7 @@ class IncrementalOgState:
         self._cache = {(i + (i >= k), j + (j > k), tf): s
                        for (i, j, tf), s in self._cache.items()
                        if j <= k or i >= k}
-        del self._dp[k + 1:]
+        self._truncate(k)
         return self.plan()
 
     def depart(self, m: int) -> GroupedSchedule:
@@ -525,32 +642,49 @@ class IncrementalOgState:
         self._cache = {(i - (i > k), j - (j > k), tf): s
                        for (i, j, tf), s in self._cache.items()
                        if j <= k or i >= k + 1}
-        del self._dp[k + 1:]
+        self._truncate(k)
         return self.plan()
+
+    def _truncate(self, k: int) -> None:
+        """Drop every DP level past the churn point, keeping the anchor
+        and beam-widening history in lockstep so the suffix re-fold is
+        exactly the from-scratch recurrence (an adaptive beam rewinds its
+        widening state to what a scratch fold would hold at level k)."""
+        del self._dp[k + 1:]
+        del self._anchor[k + 1:]
+        del self._beam_hist[k + 1:]
+        self._last_plan = None
 
     # -- solve ------------------------------------------------------------
     def plan(self) -> GroupedSchedule:
         """The OG plan for the current fleet, re-folding only the DP
         levels invalidated since the last call (all of them on first
-        use)."""
+        use).  A churn-free repeat call is O(1): the previous plan is
+        returned from the memo without touching the DP or the solver."""
         M = self.M
+        if self._last_plan is not None and len(self._dp) == M + 1:
+            self.last_refold_levels = 0
+            return self._last_plan
         for b, g in self.service.level_shapes(M):
             self.planner.prefetch(b, g)
         solve, level_prefetch = self._solver()
         self.last_refold_levels = M + 1 - len(self._dp)
-        del self._dp[M + 1:]
+        self._truncate(M)
         if self.dp_mode == "pareto":
             chain = _run_dp_pareto(M, TimelineCursor(self.t_free), solve,
                                    level_prefetch, dp=self._dp,
                                    frontier_eps=self.frontier_eps,
                                    beam_width=self.beam_width,
-                                   stats=self.planner.stats)
+                                   stats=self.planner.stats,
+                                   anchor=self._anchor,
+                                   beam_hist=self._beam_hist)
         else:
             chain = _run_dp(M, TimelineCursor(self.t_free), solve,
                             level_prefetch, dp=self._dp)
         order = np.array(self._order, dtype=int)
-        return _collect_chain(chain, order, solve,
-                              TimelineCursor(self.t_free))
+        self._last_plan = _collect_chain(chain, order, solve,
+                                         TimelineCursor(self.t_free))
+        return self._last_plan
 
 
 def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
@@ -560,7 +694,7 @@ def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
                                timeline: GpuTimeline | None = None,
                                dp: str = "prefix",
                                frontier_eps: float = 0.0,
-                               beam_width: int | None = None
+                               beam_width: int | str | None = None
                                ) -> GroupedSchedule:
     """The seed's sequential DP: one ``inner`` dispatch per (segment,
     t_free) with per-prefix t_free threading.  O(M²) dispatches — kept as
@@ -587,7 +721,7 @@ def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
     if dp == "pareto":
         chain = _run_dp_pareto(M, TimelineCursor(t_free), solve,
                                frontier_eps=frontier_eps,
-                               beam_width=beam_width)
+                               beam_width=_resolve_beam(beam_width))
     else:
         chain = _run_dp(M, TimelineCursor(t_free), solve)
     return _collect_chain(chain, order, solve, TimelineCursor(t_free),

@@ -319,7 +319,14 @@ class PlannerStats:
     online flush / OG level dispatch) and ``plan_ns`` holds their wall-time
     samples (ns, dispatch through host materialization — the latency a
     serving loop actually experiences), so planner cost is observable
-    without an external profiler.  The sample list is deterministically
+    without an external profiler.  Samples whose dispatch triggered an XLA
+    compile land in the separate ``compile_ns`` bucket
+    (``compile_calls``/``compile_ns_max``) instead: a cold compile is
+    3-5 orders of magnitude above a steady-state solve, so one warm-up
+    sample would otherwise own ``max_ms`` and poison ``p99_ms`` for the
+    whole run.  ``plan_ns`` percentiles are therefore STEADY-STATE
+    latencies; the compile bucket is reported alongside them by
+    :meth:`plan_latency`.  Both sample lists are deterministically
     decimated (every other sample dropped) past ``LATENCY_CAP`` entries —
     percentile estimates stay representative while a 100k-flush run stays
     bounded; ``plan_calls`` and min/max remain exact.
@@ -327,7 +334,10 @@ class PlannerStats:
     ``frontier_states``/``frontier_max``/``dominance_pruned`` instrument the
     Pareto grouping DP (total surviving states across levels, largest single
     frontier, candidates discarded by the dominance sweep); all zero under
-    the prefix DP.  ``plan_ahead_hits``/``plan_ahead_misses`` count how
+    the prefix DP.  ``frontier_levels`` samples the per-level survivor
+    count (the frontier-size histogram exported through telemetry) and
+    ``beam_widenings`` counts levels where an adaptive beam actually
+    widened.  ``plan_ahead_hits``/``plan_ahead_misses`` count how
     often a pipelined event loop consumed a speculative plan vs fell back
     to a synchronous solve.
 
@@ -349,9 +359,17 @@ class PlannerStats:
     plan_ns_max: int = dataclasses.field(default=0, metadata={"merge": "max"})
     plan_ns: list = dataclasses.field(
         default_factory=list, metadata={"export": False})
+    compile_calls: int = 0
+    compile_ns_max: int = dataclasses.field(default=0,
+                                            metadata={"merge": "max"})
+    compile_ns: list = dataclasses.field(
+        default_factory=list, metadata={"export": False})
     frontier_states: int = 0
     frontier_max: int = dataclasses.field(default=0, metadata={"merge": "max"})
     dominance_pruned: int = 0
+    frontier_levels: list = dataclasses.field(
+        default_factory=list, metadata={"export": False})
+    beam_widenings: int = 0
     plan_ahead_hits: int = 0
     plan_ahead_misses: int = 0
 
@@ -361,9 +379,17 @@ class PlannerStats:
     def compiles(self) -> int:
         return self.misses
 
-    def record_latency(self, ns: int) -> None:
+    def record_latency(self, ns: int, compiled: bool = False) -> None:
         self.plan_calls += 1
-        self.plan_ns_min = (ns if self.plan_calls == 1
+        if compiled:
+            self.compile_calls += 1
+            self.compile_ns_max = max(self.compile_ns_max, ns)
+            self.compile_ns.append(ns)
+            if len(self.compile_ns) > self.LATENCY_CAP:
+                del self.compile_ns[::2]
+            return
+        steady = self.plan_calls - self.compile_calls
+        self.plan_ns_min = (ns if steady == 1
                             else min(self.plan_ns_min, ns))
         self.plan_ns_max = max(self.plan_ns_max, ns)
         self.plan_ns.append(ns)
@@ -371,15 +397,23 @@ class PlannerStats:
             del self.plan_ns[::2]
 
     def plan_latency(self) -> dict:
-        """min/p50/p99/max plan wall time in ms (zeros when never timed)."""
+        """min/p50/p99/max STEADY-STATE plan wall time in ms (zeros when
+        never timed), plus the cold-compile bucket under ``compile``
+        (count / p50 / max of samples whose dispatch compiled)."""
+        if self.compile_ns:
+            c50 = float(np.percentile(np.asarray(self.compile_ns), 50)) / 1e6
+        else:
+            c50 = 0.0
+        compile_bucket = dict(count=self.compile_calls, p50_ms=c50,
+                              max_ms=self.compile_ns_max / 1e6)
         if not self.plan_ns:
             return dict(count=self.plan_calls, min_ms=0.0, p50_ms=0.0,
-                        p99_ms=0.0, max_ms=0.0)
+                        p99_ms=0.0, max_ms=0.0, compile=compile_bucket)
         p50, p99 = np.percentile(np.asarray(self.plan_ns), [50, 99])
         return dict(count=self.plan_calls,
                     min_ms=self.plan_ns_min / 1e6,
                     p50_ms=float(p50) / 1e6, p99_ms=float(p99) / 1e6,
-                    max_ms=self.plan_ns_max / 1e6)
+                    max_ms=self.plan_ns_max / 1e6, compile=compile_bucket)
 
     def as_dict(self) -> dict:
         out = {f.name: getattr(self, f.name)
@@ -401,11 +435,14 @@ class PlannerStats:
             elif how == "max":
                 v = max(a, b)
             elif how == "min_counted":
-                # meaningful only for a side that ever recorded a latency
-                if self.plan_calls and other.plan_calls:
+                # meaningful only for a side that ever recorded a
+                # STEADY-STATE latency (compile-only sides hold the default)
+                sn = self.plan_calls - self.compile_calls
+                on = other.plan_calls - other.compile_calls
+                if sn and on:
                     v = min(a, b)
                 else:
-                    v = a if self.plan_calls else b
+                    v = a if sn else b
             else:                                  # pragma: no cover
                 raise ValueError(f"unknown merge mode {how!r} for {f.name}")
             setattr(out, f.name, v)
@@ -726,8 +763,12 @@ class BatchedPlanner:
             return PendingPlans(self, [], [], [], t0)
         if t_frees is None:
             t_frees = [0.0] * G
+        # compiles happen inside _dispatch (executable-cache misses): the
+        # miss delta classifies this sample as cold-compile vs steady-state
+        m0 = self.stats.misses
         chunks = self._dispatch(fleets, t_frees, pad_users, m_pad, g_pad)
-        return PendingPlans(self, list(fleets), list(t_frees), chunks, t0)
+        return PendingPlans(self, list(fleets), list(t_frees), chunks, t0,
+                            compiled=self.stats.misses > m0)
 
     # ---- host-side winner reconstruction ------------------------------
     def _reconstruct(self, fleet: DeviceFleet, t_free: float, outs,
@@ -780,15 +821,18 @@ class PendingPlans:
     performs the single host transfer + winner reconstruction (memoized —
     repeated ``get`` returns the same list).  The planner's plan-latency
     sample covers dispatch through first materialization, so async callers
-    report the latency they actually experienced."""
+    report the latency they actually experienced; ``compiled`` marks
+    samples whose dispatch triggered an XLA compile, routing them to the
+    stats' cold-compile bucket instead of the steady-state histogram."""
 
     def __init__(self, planner: BatchedPlanner, fleets, t_frees, chunks,
-                 t0_ns: int):
+                 t0_ns: int, compiled: bool = False):
         self._planner = planner
         self._fleets = fleets
         self._t_frees = t_frees
         self._chunks = chunks
         self._t0_ns = t0_ns
+        self._compiled = compiled
         self._result: list[Schedule] | None = None
 
     @property
@@ -800,7 +844,8 @@ class PendingPlans:
             self._result = self._planner._materialize(
                 self._fleets, self._t_frees, self._chunks)
             self._planner.stats.record_latency(
-                time.perf_counter_ns() - self._t0_ns)
+                time.perf_counter_ns() - self._t0_ns,
+                compiled=self._compiled)
             self._chunks = None          # free the device buffers
         return self._result
 

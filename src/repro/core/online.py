@@ -172,6 +172,20 @@ class UploadEvent:
     planned: float
 
 
+@dataclasses.dataclass(eq=False)
+class _SpecEntry:
+    """One link of the plan-ahead speculation chain: the exact run key it
+    predicts (``(scheduler id, arrival identities, fire time)``), the
+    channel digest its rate snapshot priced, and — for the chain head
+    only — the live occupancy cursor it planned behind (deeper links
+    derive theirs from the predecessor's future, so it is ``None`` until
+    consumption checks it against reality)."""
+
+    key: tuple
+    dig: tuple | None
+    t_free: float | None
+
+
 class OnlineScheduler:
     """Event-driven online J-DOB scheduler (see module docstring).
 
@@ -202,10 +216,12 @@ class OnlineScheduler:
                  dvfs_quiescent: bool = True,
                  batch_window: float = 0.0,
                  plan_workers: int = 0,
+                 plan_depth: int = 1,
                  telemetry: Telemetry | None = None):
         assert policy in POLICIES, f"unknown policy {policy!r}"
         assert batch_window >= 0.0
         assert plan_workers >= 0
+        assert plan_depth >= 1
         assert occupancy in OCCUPANCY_MODES, \
             f"unknown occupancy mode {occupancy!r}"
         assert 0.0 <= dvfs_slack_frac <= 1.0
@@ -267,10 +283,18 @@ class OnlineScheduler:
         #: consumes the result only on an exact prediction match, so
         #: results are bit-identical at every worker count (parity-gated)
         self.plan_workers = plan_workers
+        #: speculation depth: how many successive drained runs the
+        #: plan-ahead pool may look past the booked flush.  Depth d > 1
+        #: chains the PREDICTED occupancy cursor — entry d's solve waits
+        #: on entry d−1's speculative end — and the whole chain dies on
+        #: any divergence (mid-run submit, preemption commit, channel
+        #: digest drift, cursor mismatch), so results stay bit-identical
+        #: at every depth.  1 (default) is PR 7's one-flush lookahead.
+        self.plan_depth = plan_depth
         self._plan_ahead = None                   # PlanAheadPool while piped
         self._mirror = None                       # sorted arrival-pop replay
         self._mirror_pos = 0
-        self._spec_key = None                     # outstanding speculation
+        self._spec_chain: list = []               # outstanding speculations
         self._seq = itertools.count()
         self._arrivals: list = []                 # heap of pending arrivals
         self._timers: list = []                   # heap of gpu-free events
@@ -360,9 +384,7 @@ class OnlineScheduler:
             # are unchanged — every flush falls back to the synchronous
             # solve) rather than track live heap edits
             self._mirror = None
-            if self._plan_ahead is not None and self._spec_key is not None:
-                self._plan_ahead.discard(self._spec_key)
-                self._spec_key = None
+            self._invalidate_speculation()
 
     def _unstretch_tail(self, t: float) -> None:
         """ROADMAP timeline follow-up (a): a quiescent-tail DVFS stretch
@@ -1175,17 +1197,20 @@ class OnlineScheduler:
         trades a bounded flush deferral for larger batches under load.
 
         With ``plan_workers > 0`` the loop pipelines: after each flush
-        books its reservation, a pool worker speculatively solves the
-        PREDICTED next flush (queue membership + fire time replayed from
-        the arrival heap's pop order, occupancy read from the timeline)
-        while the main thread drains the next arrival run; the flush
-        consumes the speculative plan only when its exact (members,
-        fire-time, t_free) key matches reality — any divergence (gap
-        fill, preemption what-if, admission removal, channel actualization,
-        mid-run ``submit()``) falls back to the synchronous solve.  The
-        planner is deterministic for identical inputs, so consumed plans
-        are bitwise the ones the synchronous path would have computed —
-        pipelining changes wall-clock only, never results."""
+        books its reservation, pool workers speculatively solve the
+        PREDICTED next ``plan_depth`` flushes (queue membership + fire
+        times replayed from the arrival heap's pop order, occupancy read
+        from the timeline for the head and chained speculatively for
+        deeper links, channel rates priced at the digest-pinned snapshot)
+        while the main thread drains the next arrival run; a flush
+        consumes the chain head only when its exact (members, fire-time,
+        channel-digest, t_free) inputs match reality — any divergence
+        (gap fill, preemption what-if, admission removal, channel
+        actualization, mid-run ``submit()``) falls back to the
+        synchronous solve and kills the chain.  The planner is
+        deterministic for identical inputs, so consumed plans are bitwise
+        the ones the synchronous path would have computed — pipelining
+        changes wall-clock only, never results."""
         if self.plan_workers <= 0 or self._planner is None:
             while self.step_batch() is not None:
                 pass
@@ -1205,39 +1230,35 @@ class OnlineScheduler:
         """Arm plan-ahead speculation: snapshot the arrival heap's pop
         order (heap entries are ``(t, seq, a)`` with unique ``seq``, so
         ascending sort IS the exact pop order) and launch the first
-        speculative solve."""
+        speculative solves."""
         self._plan_ahead = pool
         self._mirror = sorted(self._arrivals)
         self._mirror_pos = 0
-        self._spec_key = None
+        self._spec_chain = []
         self._speculate()
 
     def _pipeline_end(self) -> None:
-        if self._plan_ahead is not None and self._spec_key is not None:
-            self._plan_ahead.discard(self._spec_key)
+        self._invalidate_speculation()
         self._plan_ahead = None
         self._mirror = None
         self._mirror_pos = 0
-        self._spec_key = None
 
-    def _peek_next_run(self):
-        """Pure replay of :meth:`_drain_arrivals` over the pop-order
-        mirror: the queue and fire time the next flush WILL have, or
+    def _peek_run_from(self, arr, pos: int, q: list):
+        """One drained run replayed from mirror position ``pos`` with
+        seed queue ``q``: ``(queue, fire time, next position)``, or
         ``None`` when nothing is left.  No state is touched — timers,
         gates and admission run only in the real drain (their absence
         here just turns a wrong prediction into a key miss)."""
-        arr, pos = self._mirror, self._mirror_pos
-        q = list(self._queue)
         pol, eps = self.policy, self.batch_window
         t_policy = self._policy_time_of(q) if q else None
         while True:
             if pos >= len(arr):
                 if not q:
                     return None
-                return q, max(t_policy, q[-1].arrival)
+                return q, max(t_policy, q[-1].arrival), pos
             t = arr[pos][0]
             if q and t > t_policy + eps:
-                return q, max(t_policy, q[-1].arrival)
+                return q, max(t_policy, q[-1].arrival), pos
             a = arr[pos][2]
             pos += 1
             q.append(a)
@@ -1252,81 +1273,188 @@ class OnlineScheduler:
                 t_policy = min(t_policy, a.abs_deadline
                                - float(self._l_min[a.user]) - 1e-6)
 
-    def _speculate(self) -> None:
-        """Predict the next flush and submit its solve to the plan-ahead
-        pool.  Never speculates under a live contended/fading channel in
-        channel-aware mode: the effective-rate snapshot depends on uploads
-        in flight at the flush instant, which the key cannot pin."""
+    def _peek_runs(self, k: int) -> list:
+        """Pure replay of :meth:`_drain_arrivals` over the pop-order
+        mirror for the next (up to) ``k`` successive runs: the queue and
+        fire time each of those flushes WILL have, as a list of
+        ``(queue, fire time)``.  Each flush drains its whole queue, so
+        run d + 1 reseeds from empty at run d's stopping position."""
+        runs = []
+        pos = self._mirror_pos
+        q = list(self._queue)
+        while len(runs) < k:
+            nxt = self._peek_run_from(self._mirror, pos, q)
+            if nxt is None:
+                break
+            q, t_fire, pos = nxt
+            runs.append((q, t_fire))
+            q = []
+        return runs
+
+    def _chan_digest(self):
+        """The channel fingerprint a speculative plan's rate pricing is
+        valid against: ``None`` on the bit-identical static path (no
+        contended snapshot is taken there), the channel's
+        ``state_digest()`` otherwise.  Equal digests + equal fire time
+        guarantee a bitwise-equal ``effective_rates`` snapshot, which is
+        what lets plan-ahead run under dynamic channels at all."""
+        ch = self.channel
+        if ch is None or ch.static or not self.channel_aware:
+            return None
+        return ch.state_digest()
+
+    def _discard_chain(self, keep: int = 0) -> None:
+        """Drop every speculation chained past position ``keep`` (pool
+        entry + telemetry per evicted link)."""
+        dead = self._spec_chain[keep:]
+        if not dead:
+            return
+        del self._spec_chain[keep:]
         pool = self._plan_ahead
-        if pool is None or self._mirror is None or self._planner is None:
-            return
-        if (self.channel is not None and not self.channel.static
-                and self.channel_aware):
-            return
-        nxt = self._peek_next_run()
-        if nxt is None:
-            if self._spec_key is not None:
-                pool.discard(self._spec_key)
-                self._spec_key = None
-                if self._tr.enabled:
-                    self._tr.instant("spec.evict", self.now, TID_PLANNER,
-                                     {"tenant": self.tenant_id})
-                    self.telemetry.metrics.inc("spec.evictions")
-            return
-        q, t_fire = nxt
-        tf = self.timeline.t_free(t_fire)
-        # exact floats, never rounded: the plan is consumed only when the
-        # flush's inputs are bitwise the predicted ones
-        key = (id(self), tuple(id(a) for a in q), t_fire, tf)
-        if key == self._spec_key:
-            return
-        if self._spec_key is not None:
-            pool.discard(self._spec_key)
+        for e in dead:
+            if pool is not None:
+                pool.discard(e.key)
             if self._tr.enabled:
                 self._tr.instant("spec.evict", self.now, TID_PLANNER,
                                  {"tenant": self.tenant_id})
                 self.telemetry.metrics.inc("spec.evictions")
-        self._spec_key = key
-        idx = np.array([a.user for a in q])
-        rel = np.array([a.abs_deadline - t_fire for a in q])
-        sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
-        planner = self._planner
-        pool.submit(key, lambda: planner.plan([sub], [tf])[0])
-        if self._tr.enabled:
-            self._tr.instant("spec.start", self.now, TID_PLANNER,
-                             {"tenant": self.tenant_id, "batch": len(q),
-                              "t_fire": t_fire, "t_free": tf})
-            self.telemetry.metrics.inc("spec.starts")
+
+    def _invalidate_speculation(self) -> None:
+        """Kill the whole plan-ahead chain.  Called on every event that
+        breaks the chained prediction wholesale: a mid-run ``submit()``
+        (heap replay stale), a preemption commit (the shared occupancy
+        cursor every link planned behind just moved), and pipeline
+        teardown."""
+        self._discard_chain(0)
+
+    @staticmethod
+    def _spec_solve(planner, sub, t_fire, h_in=None, tf=None, after=None):
+        """The pool callable for one speculative run: solve ``sub`` at
+        fire time ``t_fire`` behind either a cursor known at submit time
+        (``h_in``/``tf`` — the live timeline, chain head) or the
+        PREDICTED cursor of the previous link (``after``, a pool future —
+        depth k > 1).  Returns ``(t_free used, predicted absolute horizon
+        after this run, schedule)``; both derived values replicate
+        :meth:`GpuTimeline.t_free` / :meth:`GpuTimeline.book` float ops
+        exactly, so an undisturbed serialized tail chains bit-identical
+        cursors and every link can hit."""
+        def solve():
+            if after is not None:
+                _, h, _ = after.result()      # predecessor's predicted end
+                t = max(h - t_fire, 0.0)      # == GpuTimeline.t_free
+            else:
+                h, t = h_in, tf
+            s = planner.plan([sub], [t])[0]
+            h2 = max(h, t_fire + s.t_free_end) if s.offload.any() else h
+            return (t, h2, s)
+        return solve
+
+    def _speculate(self) -> None:
+        """Predict the next ``plan_depth`` drained runs and keep the
+        plan-ahead chain for them live.  Link 0 plans behind the live
+        timeline cursor; link d > 0 plans behind link d−1's speculative
+        end (its worker waits on the predecessor's future).  Under a
+        dynamic channel in channel-aware mode, each link prices the
+        effective-rate snapshot at its predicted fire time and records
+        the channel digest it priced against — the link is consumed only
+        while that digest still matches reality, so results stay
+        bit-identical to the synchronous loop.  Chain maintenance is
+        prefix-keep: the longest prefix whose predicted runs, digests and
+        (for the head) live cursor are unchanged survives; everything
+        past the first divergence is discarded and resubmitted."""
+        pool = self._plan_ahead
+        if pool is None or self._mirror is None or self._planner is None:
+            return
+        # deeper chains than the pool backlog would evict their own heads
+        depth = min(self.plan_depth, 2 * pool.workers)
+        runs = self._peek_runs(depth)
+        dig = self._chan_digest()
+        keys = [(id(self), tuple(id(a) for a in q), t_fire)
+                for q, t_fire in runs]
+        keep = 0
+        for e, key in zip(self._spec_chain, keys):
+            if e.key != key or e.dig != dig:
+                break
+            if e.t_free is not None and \
+                    e.t_free != self.timeline.t_free(e.key[2]):
+                break                 # head cursor stale (e.g. preemption)
+            keep += 1
+        self._discard_chain(keep)
+        planner, ch = self._planner, self.channel
+        for i in range(keep, len(runs)):
+            q, t_fire = runs[i]
+            if i > 0 and pool.peek(keys[i - 1]) is None:
+                break                 # predecessor gone (backlog evicted)
+            idx = np.array([a.user for a in q])
+            rel = np.array([a.abs_deadline - t_fire for a in q])
+            sub = dataclasses.replace(self.fleet.subset(idx), deadline=rel)
+            if dig is not None:
+                # exactly the contended snapshot _flush will take at this
+                # fire time — bitwise, as long as the digest holds
+                eff = ch.effective_rates(
+                    sub.rate, t_fire,
+                    keys=[(self.tenant_id, int(u)) for u in idx])
+                sub = dataclasses.replace(sub, rate=eff)
+            if i == 0:
+                h = self.timeline.horizon
+                tf = self.timeline.t_free(t_fire)
+                fn = self._spec_solve(planner, sub, t_fire, h_in=h, tf=tf)
+            else:
+                tf = None             # known only once link i−1 resolves
+                fn = self._spec_solve(planner, sub, t_fire,
+                                      after=pool.peek(keys[i - 1]))
+            pool.submit(keys[i], fn)
+            self._spec_chain.append(_SpecEntry(keys[i], dig, tf))
+            if self._tr.enabled:
+                self._tr.instant("spec.start", self.now, TID_PLANNER,
+                                 {"tenant": self.tenant_id, "batch": len(q),
+                                  "t_fire": t_fire, "depth": i})
+                self.telemetry.metrics.inc("spec.starts")
+                if i > 0:
+                    self.telemetry.metrics.inc("spec.chain_extends")
+        if self._tr.enabled and self._spec_chain:
+            self.telemetry.metrics.observe("spec.chain_depth",
+                                           len(self._spec_chain))
 
     def _take_plan_ahead(self, now: float, arrivals: list,
                          tf: float) -> Schedule | None:
         """The speculative plan for THIS flush, or ``None`` (synchronous
-        fallback).  Consumed only on an exact key match; the tenancy
-        layer's preemption what-if plants ``_trial_plan`` for
-        :meth:`_plan` to consume, which this must never bypass."""
+        fallback).  The chain head is consumed only when its run key
+        (membership + fire time), its channel digest and the occupancy
+        cursor its worker actually planned behind all match reality
+        bitwise; any mismatch kills the ENTIRE chain — deeper links
+        planned behind the dead prediction's cursor.  The tenancy layer's
+        preemption what-if plants ``_trial_plan`` for :meth:`_plan` to
+        consume, which this must never bypass."""
         pool = self._plan_ahead
-        if pool is None or self._spec_key is None:
+        if pool is None or not self._spec_chain:
             return None
         if getattr(self, "_trial_plan", None) is not None:
             return None
         stats = self._planner.stats if self._planner is not None else None
-        key = (id(self), tuple(id(a) for a in arrivals), now, tf)
-        if key != self._spec_key:
+        head = self._spec_chain[0]
+        key = (id(self), tuple(id(a) for a in arrivals), now)
+        why, s = None, None
+        if key != head.key:
+            why = "key"
+        elif head.dig != self._chan_digest():
+            why = "digest"
+        else:
+            del self._spec_chain[:1]
+            res = pool.take(key)
+            if res is None:
+                why = "taken"
+            else:
+                tf_used, _, s = res
+                if tf_used != tf:
+                    why, s = "t_free", None
+        if why is not None:
+            self._invalidate_speculation()
             if stats is not None:
                 stats.plan_ahead_misses += 1
             if self._tr.enabled:
                 self._tr.instant("spec.miss", now, TID_PLANNER,
-                                 {"tenant": self.tenant_id, "why": "key"})
-                self.telemetry.metrics.inc("spec.misses")
-            return None
-        s = pool.take(key)
-        self._spec_key = None
-        if s is None:
-            if stats is not None:
-                stats.plan_ahead_misses += 1
-            if self._tr.enabled:
-                self._tr.instant("spec.miss", now, TID_PLANNER,
-                                 {"tenant": self.tenant_id, "why": "taken"})
+                                 {"tenant": self.tenant_id, "why": why})
                 self.telemetry.metrics.inc("spec.misses")
             return None
         if stats is not None:

@@ -86,6 +86,16 @@ class PlanAheadPool:
         self.submits += 1
         self._pending[key] = self._ensure_pool().submit(fn)
 
+    def peek(self, key):
+        """The in-flight ``Future`` for ``key`` (``None`` when absent) —
+        never blocks and never removes the entry.  Depth-k speculation
+        chains submit the predicted flush k+1 with a callable that waits
+        on flush k's future for the occupancy cursor its own solve plans
+        behind; a cancelled/evicted predecessor surfaces in that callable
+        as an exception, which :meth:`take` already maps to the ``None``
+        synchronous fallback."""
+        return self._pending.get(key)
+
     def take(self, key):
         """The completed (blocking if still in flight) result for ``key``,
         or ``None`` when it was never submitted, was evicted, or its
@@ -268,7 +278,7 @@ class PlannerService:
                    t_free: float = 0.0, cohort_size: int | None = None,
                    merge_window: int = 4, timeline=None,
                    planner: str | None = None, frontier_eps: float = 0.0,
-                   beam_width: int | None = None, tracer=None):
+                   beam_width: int | str | None = None, tracer=None):
         """Fleet-size-aware OG entry point: exact
         :func:`~repro.core.grouping.optimal_grouping` when the fleet fits a
         single cohort (or no cohort size is configured), hierarchical
@@ -278,7 +288,10 @@ class PlannerService:
         ``planner`` selects the grouping DP — ``"prefix"`` (seed) or
         ``"pareto"`` (frontier of (energy, cursor) states; see grouping.py)
         — defaulting to this service's ``default_planner``;
-        ``frontier_eps``/``beam_width`` bound the frontier.  ``tracer``
+        ``frontier_eps``/``beam_width`` bound the frontier
+        (``beam_width="auto"`` self-sizes it, never above the prefix DP's
+        energy — see :class:`~repro.core.grouping.AdaptiveBeam`).
+        ``tracer``
         (a :class:`~repro.core.telemetry.Tracer`) receives cohort
         shard/merge instants from the hierarchical path.  This is THE
         planning call the serving layer makes — it inherits the service's

@@ -358,6 +358,13 @@ class Telemetry:
             doc["runtime_events"] = ev
         if planner_stats is not None:
             doc["planner"] = planner_stats.as_dict()
+            if planner_stats.frontier_levels:
+                # per-level frontier sizes fold into a digest here so the
+                # raw sample list never lands in exported JSON
+                h = Histogram()
+                for n in planner_stats.frontier_levels:
+                    h.observe(n)
+                doc["planner"]["frontier_hist"] = h.digest()
             doc["wall_time"] = {
                 "planner_plan_latency": planner_stats.plan_latency(),
                 "note": "perf_counter_ns wall-clock; everything else in "

@@ -137,6 +137,7 @@ class _TenantScheduler(OnlineScheduler):
                          dvfs_quiescent=arbiter.dvfs_quiescent,
                          batch_window=arbiter.batch_window,
                          plan_workers=arbiter.plan_workers,
+                         plan_depth=arbiter.plan_depth,
                          telemetry=arbiter.telemetry)
         self.arbiter = arbiter
         self.tid = self.tenant_id = tid
@@ -229,6 +230,11 @@ class _TenantScheduler(OnlineScheduler):
         self._pending_preempt = victims
         self._victim_trials = trials
         tl.remove(victims)
+        # the commit moved the SHARED occupancy cursor out from under
+        # every tenant's plan-ahead chain (including this one's): kill
+        # them all — each link planned behind the pre-preemption horizon
+        for sch in self.arbiter.schedulers:
+            sch._invalidate_speculation()
         if self._tr.enabled:
             self._tr.instant(
                 "preempt.commit", now, self._ttid(),
@@ -382,10 +388,12 @@ class MultiTenantScheduler:
                  channel_aware: bool = True, channel_stagger: bool = False,
                  dvfs_slack_frac: float = 0.0, dvfs_quiescent: bool = True,
                  batch_window: float = 0.0, plan_workers: int = 0,
+                 plan_depth: int = 1,
                  on_flush=None, on_replan=None, on_gpu_free=None,
                  on_degrade=None, telemetry: Telemetry | None = None):
         assert len(tenants) >= 1
         assert plan_workers >= 0
+        assert plan_depth >= 1
         assert admission in ADMISSION_POLICIES, \
             f"unknown admission policy {admission!r}"
         assert occupancy in OCCUPANCY_MODES, \
@@ -415,6 +423,10 @@ class MultiTenantScheduler:
         #: tenant scheduler (0 = synchronous; must be set before the
         #: tenant schedulers read it below)
         self.plan_workers = plan_workers
+        #: speculation chain depth per tenant (see
+        #: :attr:`OnlineScheduler.plan_depth`; must also precede the
+        #: tenant schedulers below)
+        self.plan_depth = plan_depth
         self.timeline = GpuTimeline(mode=occupancy)
         self.ledger = self.timeline          # PR-3 name, same object
         #: telemetry bundle, threaded into every tenant scheduler (and the

@@ -72,11 +72,19 @@ def _plan_latency_line(service) -> None:
     if lat["count"]:
         print(f"plan latency: {lat['count']} dispatch(es), "
               f"min {lat['min_ms']:.2f} ms / p50 {lat['p50_ms']:.2f} ms / "
-              f"p99 {lat['p99_ms']:.2f} ms / max {lat['max_ms']:.2f} ms")
+              f"p99 {lat['p99_ms']:.2f} ms / max {lat['max_ms']:.2f} ms "
+              f"(steady-state)")
+        comp = lat["compile"]
+        if comp["count"]:
+            print(f"  cold compiles: {comp['count']} sample(s), "
+                  f"p50 {comp['p50_ms']:.1f} ms / max {comp['max_ms']:.1f} ms "
+                  f"(separate bucket)")
     if stats.frontier_states:
+        beam = (f", beam widened {stats.beam_widenings}x"
+                if stats.beam_widenings else "")
         print(f"pareto DP: {stats.frontier_states} frontier state(s) "
               f"(max {stats.frontier_max}/level), "
-              f"{stats.dominance_pruned} dominance-pruned")
+              f"{stats.dominance_pruned} dominance-pruned{beam}")
     if stats.plan_ahead_hits or stats.plan_ahead_misses:
         total = stats.plan_ahead_hits + stats.plan_ahead_misses
         print(f"plan-ahead: {stats.plan_ahead_hits}/{total} speculative "
@@ -112,7 +120,8 @@ def _serve_offline(server, fleet, profile, edge, reqs, args,
     _begin_run(telemetry)
     t0 = time.perf_counter()
     report = server.serve(reqs, cohort_size=args.cohort_size,
-                          planner=args.planner, telemetry=telemetry)
+                          planner=args.planner, beam_width=args.beam_width,
+                          telemetry=telemetry)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
@@ -146,6 +155,7 @@ def _serve_online(server, fleet, profile, edge, reqs, args,
                                  batch_window=args.batch_window,
                                  batch_events=args.batch_events,
                                  plan_workers=args.plan_workers,
+                                 plan_depth=args.plan_depth,
                                  telemetry=telemetry)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
@@ -230,6 +240,7 @@ def _serve_tenants(args, telemetry=None) -> dict:
                                channel_stagger=args.channel_stagger,
                                batch_window=args.batch_window,
                                plan_workers=args.plan_workers,
+                               plan_depth=args.plan_depth,
                                telemetry=telemetry)
     _begin_run(telemetry)
     t0 = time.perf_counter()
@@ -326,6 +337,17 @@ def main(argv=None) -> dict:
                          "the next flush's speculative solve with the "
                          "current batch (0 = synchronous; results are "
                          "bit-identical at any count)")
+    ap.add_argument("--plan-depth", type=int, default=1,
+                    help="speculation chain depth for --plan-workers: "
+                         "plan this many drained flushes ahead by chaining "
+                         "the predicted occupancy cursor (bit-identical at "
+                         "any depth)")
+    ap.add_argument("--beam-width", default=None,
+                    type=lambda v: v if v == "auto" else int(v),
+                    help="pareto-DP frontier cap (offline serving): an int "
+                         "hard-caps each level, 'auto' self-sizes from 1 — "
+                         "widening only at levels that fork — while never "
+                         "exceeding the prefix DP's energy")
     ap.add_argument("--batch-events", action="store_true",
                     help="drain the event queue through the fleet-scale "
                          "batched loop (bit-identical at "

@@ -160,6 +160,7 @@ class CoInferenceServer:
     def serve(self, requests: list[Request], t_free: float = 0.0, *,
               cohort_size: int | None = None, merge_window: int = 4,
               planner: str | None = None,
+              beam_width: int | str | None = None,
               telemetry: Telemetry | None = None) -> ServeReport:
         """One-shot wave: OG-group, plan and execute every request.
 
@@ -170,13 +171,16 @@ class CoInferenceServer:
         previous releases.  ``None`` defers to the planner service's
         ``default_cohort_size``.  ``planner`` picks the grouping DP —
         ``"prefix"`` or ``"pareto"`` (occupancy-coupling-sound frontier
-        DP) — defaulting to the service's ``default_planner``."""
+        DP) — defaulting to the service's ``default_planner``;
+        ``beam_width`` bounds the pareto frontier (``"auto"`` self-sizes
+        it, never above the prefix DP's energy)."""
         fleet = dataclasses.replace(
             self.fleet,
             deadline=np.asarray([r.deadline for r in requests]))
         grouped = self.service.plan_fleet(
             fleet, self.inner, t_free=t_free, cohort_size=cohort_size,
             merge_window=merge_window, planner=planner,
+            beam_width=beam_width,
             tracer=None if telemetry is None else telemetry.tracer)
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
@@ -198,6 +202,7 @@ class CoInferenceServer:
                   channel_aware: bool = True,
                   channel_stagger: bool = False,
                   batch_window: float = 0.0, plan_workers: int = 0,
+                  plan_depth: int = 1,
                   on_flush=None, on_gpu_free=None,
                   telemetry: Telemetry | None = None) -> OnlineScheduler:
         """An event-driven scheduler wired to this server's fleet and
@@ -219,6 +224,7 @@ class CoInferenceServer:
                                channel_stagger=channel_stagger,
                                batch_window=batch_window,
                                plan_workers=plan_workers,
+                               plan_depth=plan_depth,
                                on_flush=on_flush, on_gpu_free=on_gpu_free,
                                telemetry=telemetry)
 
@@ -231,7 +237,7 @@ class CoInferenceServer:
                      channel_stagger: bool = False,
                      batch_window: float = 0.0,
                      batch_events: bool = False,
-                     plan_workers: int = 0,
+                     plan_workers: int = 0, plan_depth: int = 1,
                      telemetry: Telemetry | None = None) -> OnlineServeReport:
         """Serve requests arriving over time (``Request.arrival``).
 
@@ -247,7 +253,10 @@ class CoInferenceServer:
         in one pass; at ``batch_window=0`` the outcome is bit-identical to
         the event-at-a-time loop.  ``plan_workers > 0`` (batched loop
         only) pipelines each flush's solve against the previous flush's
-        execution — results stay bit-identical at any worker count."""
+        execution — results stay bit-identical at any worker count;
+        ``plan_depth`` speculates that many flushes ahead by chaining the
+        predicted occupancy cursor (still bit-identical — see
+        :meth:`~repro.core.OnlineScheduler.run_batched`)."""
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
                           np.float32)
@@ -264,7 +273,7 @@ class CoInferenceServer:
                                channel_stagger=channel_stagger,
                                batch_window=batch_window,
                                plan_workers=plan_workers if batch_events
-                               else 0,
+                               else 0, plan_depth=plan_depth,
                                on_flush=execute, telemetry=telemetry)
         for row, r in enumerate(requests):
             sched.submit(OnlineArrival(r.user, r.arrival, r.deadline,
@@ -354,6 +363,7 @@ class MultiTenantServer:
                  channel_aware: bool = True,
                  channel_stagger: bool = False,
                  batch_window: float = 0.0, plan_workers: int = 0,
+                 plan_depth: int = 1,
                  telemetry: Telemetry | None = None):
         assert len(models) >= 1
         self.models = list(models)
@@ -372,6 +382,7 @@ class MultiTenantServer:
         self.channel_stagger = channel_stagger
         self.batch_window = batch_window
         self.plan_workers = plan_workers
+        self.plan_depth = plan_depth
         self.telemetry = telemetry
         self.service = (service if service is not None
                         else PlannerService(self.models[0].profile,
@@ -417,6 +428,7 @@ class MultiTenantServer:
             channel_stagger=self.channel_stagger,
             batch_window=self.batch_window,
             plan_workers=self.plan_workers if batch_events else 0,
+            plan_depth=self.plan_depth,
             on_flush=execute, on_replan=execute, on_degrade=degrade,
             telemetry=self.telemetry)
         for tid, reqs in enumerate(requests):

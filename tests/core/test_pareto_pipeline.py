@@ -9,8 +9,8 @@ from _hypothesis_compat import given, settings, st
 from repro.core import (IncrementalOgState, MultiTenantScheduler,
                         OnlineArrival, OnlineScheduler, PlanAheadPool,
                         PlannerService, Tenant, bruteforce_grouping,
-                        cohort_grouping, make_edge_profile, make_fleet,
-                        mobilenet_v2_profile, optimal_grouping,
+                        cohort_grouping, make_channel, make_edge_profile,
+                        make_fleet, mobilenet_v2_profile, optimal_grouping,
                         optimal_grouping_reference, poisson_arrivals)
 
 PROF = mobilenet_v2_profile()
@@ -82,12 +82,18 @@ def test_property_pareto_never_above_prefix(M, beta_lo, spread, seed,
 def test_pareto_strictly_below_prefix_on_blind_spot():
     """The M=96 occupancy-coupled case PR 6 exposed: a cheaper-but-later
     prefix poisons the prefix DP's suffix, and the frontier DP must land
-    strictly below it."""
+    strictly below it.  The adaptive beam, solving the same case with a
+    capped self-sized frontier, must recover ≥90% of the full frontier's
+    win over the prefix DP while honoring the anchor invariant."""
     fleet = make_fleet(96, PROF, EDGE, beta=(4.0, 30.0), seed=7)
     ex = optimal_grouping(PROF, fleet, EDGE, service=SVC)
     pa = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto")
     assert pa.energy < ex.energy
     assert sorted(u for g in pa.groups for u in g) == list(range(96))
+    auto = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                            beam_width="auto")
+    assert auto.energy <= ex.energy              # anchor invariant
+    assert (ex.energy - auto.energy) >= 0.9 * (ex.energy - pa.energy)
 
 
 def test_pareto_reference_path_matches_batched():
@@ -97,6 +103,23 @@ def test_pareto_reference_path_matches_batched():
     _assert_same_plan(
         optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto"),
         optimal_grouping_reference(PROF, fleet, EDGE, dp="pareto"))
+
+
+@settings(max_examples=10, deadline=None)
+@given(M=st.integers(3, 10), beta_lo=st.floats(3.0, 10.0),
+       spread=st.floats(1.0, 40.0), seed=st.integers(0, 99),
+       t_free=st.floats(0.0, 0.08))
+def test_property_adaptive_beam_never_above_prefix(M, beta_lo, spread, seed,
+                                                   t_free):
+    """The anchor invariant: whatever widths the adaptive beam picks, the
+    prefix-DP chain is force-retained in every level's frontier, so the
+    adaptive result can never exceed the prefix DP's energy."""
+    fleet = make_fleet(M, PROF, EDGE, beta=(beta_lo, beta_lo + spread),
+                       seed=seed)
+    ex = optimal_grouping(PROF, fleet, EDGE, service=SVC, t_free=t_free)
+    auto = optimal_grouping(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                            beam_width="auto", t_free=t_free)
+    assert auto.energy <= ex.energy
 
 
 def test_beam_width_one_recovers_min_energy_greedy():
@@ -160,6 +183,45 @@ def test_property_incremental_pareto_matches_scratch(M, beta_lo, spread,
     _assert_same_plan(state.depart(gone),
                       optimal_grouping(PROF, state.fleet, EDGE, service=SVC,
                                        dp="pareto"))
+
+
+@settings(max_examples=6, deadline=None)
+@given(M=st.integers(3, 8), beta_lo=st.floats(4.0, 10.0),
+       spread=st.floats(1.0, 30.0), seed=st.integers(0, 99),
+       new_beta=st.floats(2.0, 50.0))
+def test_property_incremental_adaptive_beam_matches_scratch(
+        M, beta_lo, spread, seed, new_beta):
+    """Churn under beam_width="auto": the truncated resume rewinds the
+    beam's widening state and the anchor chain to exactly the scratch
+    fold's level-k state, so incremental results stay bit-identical even
+    though the beam is stateful."""
+    fleet = make_fleet(M, PROF, EDGE, beta=(beta_lo, beta_lo + spread),
+                       seed=seed)
+    state = IncrementalOgState(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                               beam_width="auto")
+    _assert_same_plan(state.plan(),
+                      optimal_grouping(PROF, fleet, EDGE, service=SVC,
+                                       dp="pareto", beam_width="auto"))
+    row = make_fleet(1, PROF, EDGE, beta=new_beta, seed=seed + 1)
+    _assert_same_plan(state.arrive(row),
+                      optimal_grouping(PROF, state.fleet, EDGE, service=SVC,
+                                       dp="pareto", beam_width="auto"))
+    _assert_same_plan(state.depart(seed % state.M),
+                      optimal_grouping(PROF, state.fleet, EDGE, service=SVC,
+                                       dp="pareto", beam_width="auto"))
+
+
+def test_incremental_churn_free_repeat_is_memoized():
+    """plan() without intervening churn must re-fold nothing and return
+    the identical object (the churn fast path)."""
+    fleet = make_fleet(6, PROF, EDGE, beta=(4.0, 25.0), seed=3)
+    state = IncrementalOgState(PROF, fleet, EDGE, service=SVC, dp="pareto",
+                               beam_width="auto")
+    first = state.plan()
+    again = state.plan()
+    assert again is first and state.last_refold_levels == 0
+    row = make_fleet(1, PROF, EDGE, beta=10.0, seed=4)
+    assert state.arrive(row) is not first        # churn invalidates
 
 
 # ---------------------------------------------------------------------------
@@ -349,3 +411,142 @@ def test_service_plan_pool_shared_and_closed():
     assert sibling.plan_pool(2) is pool             # family-shared
     svc.close()                                     # shuts the pool
     assert pool._pool is None
+
+
+# ---------------------------------------------------------------------------
+# depth-k + channel-keyed speculation: bit-identical under any interleaving
+# ---------------------------------------------------------------------------
+
+def _spec_run(M, rate, seed, *, workers, depth, policy="slack",
+              channel_kind=None, occupancy="serialized", late=()):
+    """One batched run with the given speculation knobs.  ``late`` users
+    are injected MID-RUN from the first flush's callback (exercising the
+    submit() chain invalidation, not just the pre-queued path)."""
+    fleet = make_fleet(M, PROF, EDGE, beta=20.0, seed=seed)
+    arrivals = sorted(poisson_arrivals(M, rate, fleet, seed=seed),
+                      key=lambda a: a.arrival)
+    channel = None if channel_kind is None else make_channel(channel_kind)
+    pending = [OnlineArrival(u, arrivals[-1].arrival + 0.002 * (i + 1),
+                             float(fleet.deadline[u]) + 0.05)
+               for i, u in enumerate(late)]
+
+    def on_flush(ev):
+        while pending:
+            s.submit(pending.pop())
+
+    s = OnlineScheduler(PROF, fleet, EDGE, policy=policy, window=0.02,
+                        service=SVC, plan_workers=workers, plan_depth=depth,
+                        channel=channel, channel_aware=True,
+                        occupancy=occupancy, on_flush=on_flush)
+    s.submit_many(list(arrivals))
+    return s.run_batched()
+
+
+@settings(max_examples=10, deadline=None)
+@given(M=st.integers(4, 10), rate=st.floats(50.0, 900.0),
+       seed=st.integers(0, 49), depth=st.integers(1, 3),
+       policy=st.sampled_from(POLICIES),
+       channel_kind=st.sampled_from([None, "shared", "trace"]),
+       late=st.lists(st.integers(0, 3), max_size=2, unique=True))
+def test_property_depth_k_any_interleaving_matches_sync(
+        M, rate, seed, depth, policy, channel_kind, late):
+    """Any interleaving of mid-run submits, channel-digest drift and
+    chain depth 1-3 yields results bit-identical to plan_workers=0: a
+    speculative plan is only ever consumed on an exact (key, digest,
+    t_free) match, so the chain can change WHEN plans are computed but
+    never WHAT is computed."""
+    sync = _spec_run(M, rate, seed, workers=0, depth=1, policy=policy,
+                     channel_kind=channel_kind, late=late)
+    piped = _spec_run(M, rate, seed, workers=2, depth=depth, policy=policy,
+                      channel_kind=channel_kind, late=late)
+    _assert_same_result(sync, piped)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("channel_kind", ["shared", "trace"])
+def test_depth3_parity_dynamic_channels_all_policies(policy, channel_kind):
+    """PR 7 disabled speculation outright under a dynamic channel-aware
+    snapshot; the channel-keyed digest re-enables it — results must stay
+    bitwise across all four flush policies on both channel families."""
+    sync = _spec_run(12, 300.0, 3, workers=0, depth=1, policy=policy,
+                     channel_kind=channel_kind)
+    piped = _spec_run(12, 300.0, 3, workers=2, depth=3, policy=policy,
+                      channel_kind=channel_kind)
+    _assert_same_result(sync, piped)
+
+
+@pytest.mark.parametrize("channel_kind", [None, "shared", "trace"])
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_midrun_submit_parity_at_depth(channel_kind, depth):
+    """Mid-run submit() from a flush callback invalidates the whole
+    speculation chain; the drained tail must still match the synchronous
+    loop bit-for-bit at every depth and channel family (deterministic
+    twin of the hypothesis interleaving property)."""
+    sync = _spec_run(8, 250.0, 11, workers=0, depth=1,
+                     channel_kind=channel_kind, late=(0, 2))
+    piped = _spec_run(8, 250.0, 11, workers=2, depth=depth,
+                      channel_kind=channel_kind, late=(0, 2))
+    _assert_same_result(sync, piped)
+
+
+@pytest.mark.parametrize("occupancy", ["serialized", "interleaved"])
+def test_depth3_parity_both_occupancy_modes(occupancy):
+    sync = _spec_run(10, 400.0, 5, workers=0, depth=1, occupancy=occupancy)
+    piped = _spec_run(10, 400.0, 5, workers=3, depth=3, occupancy=occupancy)
+    _assert_same_result(sync, piped)
+
+
+def test_trace_channel_speculation_hits_at_depth():
+    """A TraceChannel's digest is constant (frozen tables, t_fire keys
+    the segment), so deep chains must actually LAND: nonzero hits and at
+    least one chained (depth>0) speculation."""
+    from repro.core.telemetry import Telemetry
+    svc = PlannerService(PROF, EDGE)
+    fleet = make_fleet(14, PROF, EDGE, beta=20.0, seed=8)
+    tel = Telemetry()
+    s = OnlineScheduler(PROF, fleet, EDGE, policy="slack", window=0.02,
+                        service=svc, plan_workers=2, plan_depth=3,
+                        channel=make_channel("trace"), channel_aware=True,
+                        telemetry=tel)
+    s.submit_many(sorted(poisson_arrivals(14, 150.0, fleet, seed=8),
+                         key=lambda a: a.arrival))
+    s.run_batched()
+    st_ = svc.stats()
+    assert st_.plan_ahead_hits > 0
+    assert tel.metrics.counters.get("spec.chain_extends", 0) > 0
+    assert tel.metrics.histograms["spec.chain_depth"].vmax >= 2
+
+
+def test_preemption_commit_kills_whole_chain_at_depth():
+    """The forced-preemption scenario at plan_depth=3: the commit moves
+    the shared occupancy cursor, so every tenant's chain must die and
+    downstream numbers must still match the synchronous loop."""
+    fleetA = make_fleet(8, PROF, EDGE, beta=30.0, seed=0)
+    fleetB = make_fleet(2, PROF, EDGE, beta=3.0, seed=1)
+    trA = ([OnlineArrival(m, 0.0, float(fleetA.deadline[m]))
+            for m in range(4)]
+           + [OnlineArrival(m, 1e-4, float(fleetA.deadline[m]))
+              for m in range(4, 8)])
+    trB = [OnlineArrival(0, 2e-4, 0.06)]
+    out = []
+    for w, d in ((0, 1), (2, 3)):
+        A = Tenant(PROF, fleetA, EDGE, name="A", policy="immediate")
+        B = Tenant(PROF, fleetB, EDGE, name="B", policy="immediate")
+        mts = MultiTenantScheduler([A, B], preemption=True,
+                                   plan_workers=w, plan_depth=d)
+        mts.submit_traces([list(trA), list(trB)])
+        out.append(mts.run_batched())
+    a, b = out
+    assert a.preemptions == b.preemptions >= 1
+    assert a.energy == b.energy
+    for ta, tb in zip(a.tenants, b.tenants):
+        _assert_same_result(ta.result, tb.result)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_multi_tenant_depth_parity(depth):
+    a, b = _mts_pair(("immediate", "slack"), 300.0, 0, workers=2,
+                     plan_depth=depth)
+    assert a.energy == b.energy
+    for ta, tb in zip(a.tenants, b.tenants):
+        _assert_same_result(ta.result, tb.result)
