@@ -7,7 +7,13 @@ and nothing would fail.  This script compares a fresh run's per-case
 speedups against the committed snapshot with a tolerance band and exits
 non-zero when any case regresses by more than ``--tolerance`` (default
 30%, generous enough to ride out shared-CI noise; the bench itself
-already takes min-of-repeats).
+already takes min-of-repeats).  The fresh planner rows additionally gate
+the fused grouping-DP backend: a fused/dispatch energy mismatch fails
+outright at every size; scan-active rows from ``--fused-min-m`` (default
+20) upward must hold ``fused_speedup_steady >= 1`` (the cold column
+mixes XLA compile time and is reported, never gated); and rows the
+``FUSED_SCAN_MAX_LEVELS`` crossover routed to the dispatch fold gate at
+a 0.9x noise band, both sides being the same code path.
 
 The ENERGY savings of the scheduling benchmarks are gated the same way
 when their baseline/fresh pairs are given: energies are deterministic
@@ -97,14 +103,63 @@ def _savings(doc: dict, spec: dict) -> dict[tuple, float]:
     return out
 
 
-def _gate_speedups(baseline: str, fresh_path: str, tolerance: float) -> int:
+def _gate_planner_fused(fresh_doc: dict, min_m: int) -> int:
+    """Fused-DP gates on the fresh planner rows: an energy mismatch
+    between the fused backend and the dispatch fold is a correctness
+    break (fail outright — the scan replays the exact same solves, so
+    any divergence means a masking/backtrack bug, not noise).  Rows
+    where the scan actually ran (``fused_scan_active``) gate the
+    steady-state speedup at >= 1x over dispatch from ``min_m`` upward
+    (the cold column mixes XLA compiles and is reported, never gated);
+    rows the size crossover routed to the dispatch fold execute the
+    SAME code path on both sides, so they gate at a pure noise band
+    (>= 0.9x) at every size.  Rows without fused fields (pre-fused
+    snapshots) are skipped."""
+    rows = [r for r in fresh_doc.get("results", [])
+            if r.get("fused_speedup_steady") is not None]
+    if not rows:
+        print("no fused planner rows in fresh run; nothing to gate")
+        return 0
+    failures = 0
+    print(f"\n{'fused case':<28} {'steady x':>9} {'disp/plan':>10}  verdict")
+    for r in rows:
+        name = f"M={r.get('M')} {r.get('scenario')}"
+        if not r.get("fused_energy_match", True):
+            print(f"{name:<28} fused energy DIVERGED from dispatch "
+                  f"({r.get('fused_energy')!r} vs {r.get('energy_ref')!r})",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        sp = float(r["fused_speedup_steady"])
+        dpp = r.get("fused_dispatches_per_plan")
+        dpp_s = "—" if dpp is None else f"{dpp:.1f}"
+        scan_active = r.get("fused_scan_active", True)
+        if not scan_active:
+            ok = sp >= 0.9
+            verdict = ("ok (routed to dispatch)" if ok
+                       else "ROUTED ROW OFF PARITY (> 10% apart)")
+        else:
+            gated = (r.get("M") or 0) >= min_m
+            ok = sp >= 1.0 or not gated
+            verdict = ("ok" if sp >= 1.0
+                       else ("FUSED SLOWER THAN DISPATCH" if gated
+                             else f"< 1x (M < {min_m}: reported, "
+                                  f"not gated)"))
+        print(f"{name:<28} {sp:>8.1f}x {dpp_s:>10}  {verdict}")
+        failures += not ok
+    return failures
+
+
+def _gate_speedups(baseline: str, fresh_path: str, tolerance: float,
+                   fused_min_m: int) -> int:
     with open(baseline) as f:
         base = _cases(json.load(f))
     with open(fresh_path) as f:
-        fresh = _cases(json.load(f))
+        fresh_doc = json.load(f)
+    fresh = _cases(fresh_doc)
     if not base:
         print(f"no speedup cases in {baseline}; nothing to gate")
-        return 0
+        return _gate_planner_fused(fresh_doc, fused_min_m)
     failures = 0
     print(f"{'case':<28} {'baseline':>9} {'fresh':>9} {'delta':>8}  verdict")
     for key in sorted(base, key=str):
@@ -122,6 +177,7 @@ def _gate_speedups(baseline: str, fresh_path: str, tolerance: float) -> int:
     for key in sorted(set(fresh) - set(base), key=str):
         print(f"M={key[0]} {key[1]}: new case ({fresh[key]:.1f}x), "
               f"not in baseline")
+    failures += _gate_planner_fused(fresh_doc, fused_min_m)
     return failures
 
 
@@ -374,6 +430,13 @@ def main(argv=None) -> int:
                     help="freshly-emitted planner JSON to gate")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="max allowed fractional speedup regression")
+    ap.add_argument("--fused-min-m", type=int, default=20,
+                    help="fleet size from which SCAN-ACTIVE fused rows "
+                         "gate steady-state speedup at >= 1x over "
+                         "dispatch (below it XLA compile noise "
+                         "dominates; size-crossover-ROUTED rows gate at "
+                         "a 0.9x parity band and fused/dispatch energy "
+                         "parity is gated at EVERY size regardless)")
     ap.add_argument("--tenancy-baseline", default=None,
                     help="committed tenancy snapshot JSON")
     ap.add_argument("--tenancy-fresh", default=None,
@@ -416,7 +479,8 @@ def main(argv=None) -> int:
 
     failures = 0
     if args.fresh is not None:
-        failures += _gate_speedups(args.baseline, args.fresh, args.tolerance)
+        failures += _gate_speedups(args.baseline, args.fresh, args.tolerance,
+                                   args.fused_min_m)
     if args.tenancy_fresh is not None:
         failures += _gate_savings(
             "tenancy", args.tenancy_baseline or "BENCH_tenancy.json",

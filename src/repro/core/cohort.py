@@ -44,9 +44,11 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .cost_models import DeviceFleet
-from .grouping import (GroupedSchedule, _collect_chain, _pareto_sweep,
-                       _resolve_beam, optimal_grouping)
-from .jdob import Schedule, jdob_schedule
+from .grouping import (DP_BACKENDS, GroupedSchedule, _collect_chain,
+                       _fused_chain, _pareto_sweep, _resolve_beam,
+                       optimal_grouping)
+from .jdob import (Schedule, _bucket, fused_scan_viable, jdob_schedule,
+                   og_plan_fused)
 from .planner_service import PlannerService
 from .telemetry import NULL_TRACER, TID_PLANNER
 from .timeline import GpuTimeline, TimelineCursor
@@ -67,8 +69,8 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
                     service: PlannerService | None = None,
                     timeline: GpuTimeline | None = None,
                     dp: str = "prefix", frontier_eps: float = 0.0,
-                    beam_width: int | str | None = None, tracer=None
-                    ) -> GroupedSchedule:
+                    beam_width: int | str | None = None, tracer=None,
+                    dp_backend: str = "dispatch") -> GroupedSchedule:
     """Hierarchical OG over deadline-sorted cohorts of ≤ ``cohort_size``.
 
     Same contract as :func:`~repro.core.grouping.optimal_grouping` (group
@@ -81,10 +83,15 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
     ``tracer`` (a :class:`~repro.core.telemetry.Tracer`) gets one
     ``cohort.shard`` instant per cohort and a ``cohort.merge`` instant
     after the merge DP, timestamped in simulation time on the planner
-    track.
+    track.  ``dp_backend="fused"`` routes the shard DPs AND the merge DP
+    through the device-resident scan (the merge DP is the same recurrence
+    over atom boundaries, with the fuse window and the ≤ ``cohort_size``
+    cap as level masks) — bit-identical results, O(#cohorts) dispatches
+    instead of O(M).
     """
     assert merge_window >= 1
     assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
+    assert dp_backend in DP_BACKENDS, f"unknown dp backend {dp_backend!r}"
     if service is None:
         service = PlannerService(profile, edge, rho=rho)
     else:
@@ -97,10 +104,12 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
         return optimal_grouping(profile, fleet, edge, inner, t_free=t_free,
                                 rho=rho, service=service, timeline=timeline,
                                 dp=dp, frontier_eps=frontier_eps,
-                                beam_width=beam_width)
+                                beam_width=beam_width,
+                                dp_backend=dp_backend)
 
     spec = service.spec_for(inner)
     planner = None if spec is None else service.planner(**spec)
+    d0 = 0 if planner is None else planner.stats.dispatches
     order = np.argsort(fleet.deadline, kind="stable")
     sorted_fleet = fleet.subset(order)
     buckets = service.level_buckets(cohort_size)
@@ -154,7 +163,8 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
                               edge, inner, t_free=cursor.t_free, rho=rho,
                               service=service, dp=dp,
                               frontier_eps=frontier_eps,
-                              beam_width=beam_width)
+                              beam_width=beam_width, dp_backend=dp_backend,
+                              _count_plan=False)
         for g, s in zip(og.groups, og.schedules):
             i_abs, j_abs = lo + int(g[0]), lo + int(g[-1]) + 1
             cache[(i_abs, j_abs, round(cursor.t_free, 9))] = s
@@ -167,6 +177,43 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
     # ---- merge: top-level DP over atoms, fusing ≤ merge_window of them --
     K = len(atoms)
     INF = np.inf
+
+    def account() -> None:
+        if planner is not None:
+            planner.stats.og_plans += 1
+            planner.stats.og_dispatches += planner.stats.dispatches - d0
+
+    if (dp_backend == "fused" and planner is not None and K > 0
+            and not fused_scan_viable(K)):
+        planner.stats.fused_routed += 1
+    elif dp_backend == "fused" and planner is not None and K > 0:
+        # same recurrence as the host merge DPs below, folded on device:
+        # levels are atom boundaries, the fuse window and the cohort-size
+        # cap become level masks, and the previous level is the default
+        # split (``prev_split`` — the identity partition is the sentinel)
+        bounds_np = np.full(_bucket(K, 8) + 1, M, np.int32)
+        bounds_np[:K + 1] = [a[0] for a in atoms] + [M]
+        res = og_plan_fused(planner, sorted_fleet, t_free=t_free, mode=dp,
+                            frontier_eps=frontier_eps,
+                            beam_width=_resolve_beam(beam_width),
+                            bounds=bounds_np, n_active=K,
+                            window=merge_window, size_cap=cohort_size,
+                            prev_split=True, anchor_mode=False,
+                            stats=planner.stats)
+        if res.overflow:
+            planner.stats.fused_fallbacks += 1
+        else:
+            lvl = _fused_chain([[(0.0, t_free, -1, 0)]] + res.rows, K)
+            chain = [(int(bounds_np[s]), int(bounds_np[t]))
+                     for (s, t) in lvl]
+            if tr.enabled:
+                tr.instant("cohort.merge", t_free, TID_PLANNER,
+                           {"atoms": K, "groups": len(chain),
+                            "fused": K - len(chain)})
+            out = _collect_chain(chain, order, solve,
+                                 TimelineCursor(t_free), timeline)
+            account()
+            return out
 
     if dp == "pareto":
         # frontier merge: each level keeps every non-dominated
@@ -219,8 +266,10 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
             tr.instant("cohort.merge", t_free, TID_PLANNER,
                        {"atoms": K, "groups": len(chain),
                         "fused": K - len(chain)})
-        return _collect_chain(chain, order, solve, TimelineCursor(t_free),
-                              timeline)
+        out = _collect_chain(chain, order, solve, TimelineCursor(t_free),
+                             timeline)
+        account()
+        return out
 
     sdp: list[tuple[float, TimelineCursor, int]] = \
         [(0.0, TimelineCursor(t_free), -1)]
@@ -262,5 +311,7 @@ def cohort_grouping(profile, fleet: DeviceFleet, edge,
         tr.instant("cohort.merge", t_free, TID_PLANNER,
                    {"atoms": K, "groups": len(chain),
                     "fused": K - len(chain)})
-    return _collect_chain(chain, order, solve, TimelineCursor(t_free),
-                          timeline)
+    out = _collect_chain(chain, order, solve, TimelineCursor(t_free),
+                         timeline)
+    account()
+    return out

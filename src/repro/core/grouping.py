@@ -56,9 +56,17 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .cost_models import DeviceFleet
-from .jdob import BatchedPlanner, Schedule, jdob_schedule
+from .jdob import (BatchedPlanner, Schedule, fused_scan_viable,
+                   jdob_schedule, og_plan_fused)
 from .planner_service import PlannerService
 from .timeline import GpuTimeline, TimelineCursor
+
+#: grouping-DP execution backends: "dispatch" folds the DP host-side with
+#: one batched device launch per level (dynamic per-level prefetch hooks,
+#: arbitrary beam widths); "fused" folds the whole level loop in one
+#: jitted device scan (:func:`repro.core.jdob.og_plan_fused`) and
+#: materializes once — bit-identical decisions, O(1) dispatches per plan
+DP_BACKENDS = ("dispatch", "fused")
 
 
 @dataclasses.dataclass
@@ -308,6 +316,20 @@ def _run_dp_pareto(M: int, cursor: TimelineCursor, solve,
     return chain
 
 
+def _fused_chain(rows: list, M: int) -> list[tuple[int, int]]:
+    """Backtrack the winning split chain from numeric DP rows (level
+    0..M, each a list of ``(energy, t_free, split, state_idx)`` — the
+    fused scan's host view), exactly as the host DPs backtrack theirs."""
+    chain: list[tuple[int, int]] = []
+    j, si = M, 0
+    while j > 0:
+        st = rows[j][si]
+        chain.append((st[2], j))
+        j, si = st[2], st[3]
+    chain.reverse()
+    return chain
+
+
 def _resolve_beam(beam_width):
     """Normalize a ``beam_width`` knob: the string ``"auto"`` becomes a
     fresh per-run :class:`AdaptiveBeam` (widening state must never leak
@@ -353,8 +375,9 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
                      service: PlannerService | None = None,
                      timeline: GpuTimeline | None = None,
                      dp: str = "prefix", frontier_eps: float = 0.0,
-                     beam_width: int | str | None = None
-                     ) -> GroupedSchedule:
+                     beam_width: int | str | None = None,
+                     dp_backend: str = "dispatch",
+                     _count_plan: bool = True) -> GroupedSchedule:
     """OG over the deadline-sorted fleet.  ``inner`` picks the per-group
     solver; the J-DOB family routes through the planner service (pass a
     prebuilt ``service`` to reuse its planners/compiled shapes across
@@ -370,8 +393,20 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     the prefix DP), with ``frontier_eps``/``beam_width`` bounding the
     per-prefix frontier; ``beam_width="auto"`` self-sizes the beam
     (:class:`AdaptiveBeam`) with the anchor guarantee that the result
-    never exceeds the prefix DP's energy."""
+    never exceeds the prefix DP's energy.
+
+    ``dp_backend="fused"`` folds the DP on device in one jitted scan
+    (:func:`repro.core.jdob.og_plan_fused`) instead of one batched
+    dispatch per level — bit-identical energies/groups/per-user energies,
+    O(1) dispatches per plan.  An unbounded pareto frontier that outgrows
+    the device beam buffer falls back to the dispatch fold (counted in
+    ``PlannerStats.fused_fallbacks``), fleets past the
+    :data:`~repro.core.jdob.FUSED_SCAN_MAX_LEVELS` crossover route
+    straight to it (``PlannerStats.fused_routed`` — the scan's fixed-shape
+    work loses to per-length bucketing there), and arbitrary ``inner``
+    callables always fold host-side via the reference path."""
     assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
+    assert dp_backend in DP_BACKENDS, f"unknown dp backend {dp_backend!r}"
     if timeline is not None:
         t_free = max(t_free, timeline.t_free(0.0))
     if service is None:
@@ -407,19 +442,22 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
     order = np.argsort(fleet.deadline, kind="stable")
     sorted_fleet = fleet.subset(order)
 
-    # enumerate ALL contiguous segments of the sorted fleet up front
-    sub = {(i, j): sorted_fleet.subset(np.arange(i, j))
-           for i in range(M) for j in range(i + 1, M + 1)}
+    # lazy segment construction: the dispatch DP touches all O(M²)
+    # contiguous segments of the sorted fleet, the fused path only the
+    # winning chain's
+    sub: dict[tuple[int, int], DeviceFleet] = {}
+
+    def seg(i: int, j: int) -> DeviceFleet:
+        if (i, j) not in sub:
+            sub[(i, j)] = sorted_fleet.subset(np.arange(i, j))
+        return sub[(i, j)]
+
     # per-length shape buckets: each segment solves at the smallest of 2-3
     # power-of-two user widths covering it, so a level's dispatches stop
     # paying for masked users of short segments (the seed padded everything
     # to the fleet-wide bucket, which sank the large-M speedup).  Padding
     # is bit-invariant, so bucketing can never change results.
     buckets = service.level_buckets(M)
-    # overlap XLA compiles with the DP's early levels: background-compile
-    # every shape this fleet can need, in first-need order
-    for b, g in service.level_shapes(M):
-        planner.prefetch(b, g)
     # cache keyed exactly like the sequential DP's memo: (i, j, round(tf, 9))
     cache: dict[tuple[int, int, float], Schedule] = {}
 
@@ -433,7 +471,7 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
         pending = []
         for b, part in sorted(by_bucket.items()):
             pending.append((part, planner.plan_async(
-                [sub[(i, j)] for (i, j, _) in part],
+                [seg(i, j) for (i, j, _) in part],
                 [tf for (_, _, tf) in part], m_pad=b,
                 g_pad=service.level_group_pad(buckets, len(part)))))
         for part, plans in pending:
@@ -445,6 +483,38 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
         if key not in cache:
             solve_many([(i, j, tf)])
         return cache[key]
+
+    def finish(chain) -> GroupedSchedule:
+        out = _collect_chain(chain, order, solve, TimelineCursor(t_free),
+                             timeline)
+        if _count_plan:
+            planner.stats.og_plans += 1
+            planner.stats.og_dispatches += planner.stats.dispatches - d0
+        return out
+
+    d0 = planner.stats.dispatches
+    if dp_backend == "fused":
+        if not fused_scan_viable(M):
+            # size crossover: past it the scan's fixed-shape work loses
+            # more compute than one-dispatch folding saves — route to the
+            # dispatch fold (a policy decision, counted, not a failure)
+            planner.stats.fused_routed += 1
+        else:
+            res = og_plan_fused(planner, sorted_fleet, t_free=t_free,
+                                mode=dp, frontier_eps=frontier_eps,
+                                beam_width=_resolve_beam(beam_width),
+                                stats=planner.stats)
+            if res.overflow:
+                planner.stats.fused_fallbacks += 1
+            else:
+                return finish(_fused_chain(
+                    [[(0.0, t_free, -1, 0)]] + res.rows, M))
+
+    # dispatch backend (and the fused overflow fallback): overlap XLA
+    # compiles with the DP's early levels by background-compiling every
+    # shape this fleet can need, in first-need order
+    for b, g in service.level_shapes(M):
+        planner.prefetch(b, g)
 
     def level_prefetch(j: int, states) -> None:
         # level-synchronous batching: when level j folds, dp[0..j-1] are
@@ -470,8 +540,7 @@ def optimal_grouping(profile, fleet: DeviceFleet, edge,
                                stats=planner.stats)
     else:
         chain = _run_dp(M, TimelineCursor(t_free), solve, level_prefetch)
-    return _collect_chain(chain, order, solve, TimelineCursor(t_free),
-                          timeline)
+    return finish(chain)
 
 
 class IncrementalOgState:
@@ -513,8 +582,11 @@ class IncrementalOgState:
                  rho: float = 0.03e9,
                  service: PlannerService | None = None,
                  dp: str = "prefix", frontier_eps: float = 0.0,
-                 beam_width: int | str | None = None):
+                 beam_width: int | str | None = None,
+                 dp_backend: str = "dispatch"):
         assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
+        assert dp_backend in DP_BACKENDS, \
+            f"unknown dp backend {dp_backend!r}"
         if service is None:
             service = PlannerService(profile, edge, rho=rho)
         else:
@@ -531,6 +603,11 @@ class IncrementalOgState:
         #: Pareto-frontier DP — the truncate-past-the-churn-point resume
         #: protocol is identical, only the per-level state differs
         self.dp_mode = dp
+        #: "dispatch" re-folds the suffix host-side (one batched dispatch
+        #: per re-folded level); "fused" re-folds it as one device scan
+        #: starting at the churn level — bit-identical to a scratch fused
+        #: fold, because a level's fold reads only earlier levels
+        self.dp_backend = dp_backend
         self.frontier_eps = frontier_eps
         # an adaptive beam is stateful: one long-lived instance per state,
         # with its per-level widening history recorded so churn truncation
@@ -665,26 +742,84 @@ class IncrementalOgState:
         if self._last_plan is not None and len(self._dp) == M + 1:
             self.last_refold_levels = 0
             return self._last_plan
-        for b, g in self.service.level_shapes(M):
-            self.planner.prefetch(b, g)
         solve, level_prefetch = self._solver()
         self.last_refold_levels = M + 1 - len(self._dp)
         self._truncate(M)
-        if self.dp_mode == "pareto":
-            chain = _run_dp_pareto(M, TimelineCursor(self.t_free), solve,
-                                   level_prefetch, dp=self._dp,
-                                   frontier_eps=self.frontier_eps,
-                                   beam_width=self.beam_width,
-                                   stats=self.planner.stats,
-                                   anchor=self._anchor,
-                                   beam_hist=self._beam_hist)
-        else:
-            chain = _run_dp(M, TimelineCursor(self.t_free), solve,
-                            level_prefetch, dp=self._dp)
+        d0 = self.planner.stats.dispatches
+        chain = None
+        if self.dp_backend == "fused":
+            if not fused_scan_viable(M):
+                self.planner.stats.fused_routed += 1
+            else:
+                chain = self._fold_fused(M)
+                if chain is None:
+                    self.planner.stats.fused_fallbacks += 1
+        if chain is None:
+            for b, g in self.service.level_shapes(M):
+                self.planner.prefetch(b, g)
+            if self.dp_mode == "pareto":
+                chain = _run_dp_pareto(M, TimelineCursor(self.t_free),
+                                       solve, level_prefetch, dp=self._dp,
+                                       frontier_eps=self.frontier_eps,
+                                       beam_width=self.beam_width,
+                                       stats=self.planner.stats,
+                                       anchor=self._anchor,
+                                       beam_hist=self._beam_hist)
+            else:
+                chain = _run_dp(M, TimelineCursor(self.t_free), solve,
+                                level_prefetch, dp=self._dp)
         order = np.array(self._order, dtype=int)
         self._last_plan = _collect_chain(chain, order, solve,
                                          TimelineCursor(self.t_free))
+        self.planner.stats.og_plans += 1
+        self.planner.stats.og_dispatches += \
+            self.planner.stats.dispatches - d0
         return self._last_plan
+
+    def _fold_fused(self, M: int):
+        """Suffix re-fold on the fused backend: feed the trusted host DP
+        prefix into the device scan as its initial tables, fold levels
+        ``len(dp)..M`` on device, and extend the host state from the
+        scan's rows — bit-identical to the host re-fold (same recurrence,
+        same float64 accumulation, same sweep).  Returns the winning
+        chain, or ``None`` when the scan overflowed (caller falls back to
+        the host fold over the same, untouched state)."""
+        pareto = self.dp_mode == "pareto"
+        rows0 = [[(st[0], st[1].t_free, st[2], st[3] if len(st) > 3 else 0)
+                  for st in _entry_states(lvl)] for lvl in self._dp]
+        adaptive = pareto and isinstance(self.beam_width, AdaptiveBeam)
+        w0, n0 = 1, 0
+        if adaptive:
+            # mirror _run_dp_pareto's resume protocol: restore the beam
+            # from the recorded per-level history, or record the initial
+            # state on first use
+            if self._beam_hist:
+                w0, n0 = self._beam_hist[-1]
+            else:
+                w0, n0 = self.beam_width.width, self.beam_width.widenings
+                self._beam_hist.append((w0, n0))
+        res = og_plan_fused(self.planner, self._sorted_fleet,
+                            t_free=self.t_free, mode=self.dp_mode,
+                            frontier_eps=self.frontier_eps,
+                            beam_width=self.beam_width,
+                            init_rows=rows0, init_anchor=self._anchor,
+                            width0=w0, widen0=n0,
+                            stats=self.planner.stats)
+        if res.overflow:
+            return None
+        for states in res.rows:
+            if pareto:
+                self._dp.append([(e, TimelineCursor(tf), sp, si)
+                                 for (e, tf, sp, si) in states])
+            else:
+                e, tf, sp, _ = states[0]
+                self._dp.append((e, TimelineCursor(tf), sp))
+        if adaptive:
+            self._anchor.extend(res.anchor)
+            self._beam_hist.extend(res.beam_hist)
+            self.beam_width.width = res.width
+            self.beam_width.widenings = res.widenings
+        return _fused_chain(rows0 + res.rows, M)
 
 
 def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
@@ -694,14 +829,19 @@ def optimal_grouping_reference(profile, fleet: DeviceFleet, edge,
                                timeline: GpuTimeline | None = None,
                                dp: str = "prefix",
                                frontier_eps: float = 0.0,
-                               beam_width: int | str | None = None
+                               beam_width: int | str | None = None,
+                               dp_backend: str = "dispatch"
                                ) -> GroupedSchedule:
     """The seed's sequential DP: one ``inner`` dispatch per (segment,
     t_free) with per-prefix t_free threading.  O(M²) dispatches — kept as
     the benchmark baseline / oracle and the arbitrary-``inner`` fallback.
     ``dp="pareto"`` runs the Pareto-frontier recurrence sequentially (the
-    arbitrary-``inner`` route to frontier-sound plans)."""
+    arbitrary-``inner`` route to frontier-sound plans).  ``dp_backend``
+    is accepted for signature parity with :func:`optimal_grouping` and
+    validated, but the reference always folds host-side — it IS the
+    oracle both backends are tested against."""
     assert dp in ("prefix", "pareto"), f"unknown dp mode {dp!r}"
+    assert dp_backend in DP_BACKENDS, f"unknown dp backend {dp_backend!r}"
     M = fleet.M
     order = np.argsort(fleet.deadline, kind="stable")
     sorted_fleet = fleet.subset(order)

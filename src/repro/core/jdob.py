@@ -372,12 +372,70 @@ class PlannerStats:
     beam_widenings: int = 0
     plan_ahead_hits: int = 0
     plan_ahead_misses: int = 0
+    #: grouping-DP plan accounting: ``og_plans`` counts top-level OG plans
+    #: (offline/incremental/cohort), ``og_dispatches`` the device launches
+    #: issued inside them — their ratio (``dispatches_per_plan``) is THE
+    #: observable for the dispatch-path O(M) vs fused-path O(1) claim
+    og_plans: int = 0
+    og_dispatches: int = 0
+    #: fused-scan accounting: one ``fused_scans`` tick per device-resident
+    #: DP scan executed (``og_plan_fused``), wall-clock samples in
+    #: ``fused_scan_ns`` (dispatch through ys materialization); scans whose
+    #: lookup compiled land in ``fused_compiles`` instead of the
+    #: steady-state samples (same cold/warm split as ``record_latency``).
+    #: ``fused_fallbacks`` counts plans that overflowed the device beam
+    #: buffer and re-ran on the dispatch path; ``fused_routed`` counts
+    #: plans the size crossover routed straight to the dispatch fold
+    #: (``fused_scan_viable`` — a policy decision, not a failure)
+    fused_scans: int = 0
+    fused_compiles: int = 0
+    fused_fallbacks: int = 0
+    fused_routed: int = 0
+    fused_scan_ns_max: int = dataclasses.field(default=0,
+                                               metadata={"merge": "max"})
+    fused_scan_ns: list = dataclasses.field(
+        default_factory=list, metadata={"export": False})
 
     LATENCY_CAP = 8192
 
     @property
     def compiles(self) -> int:
         return self.misses
+
+    @property
+    def dispatches_per_plan(self) -> float:
+        """Device launches per top-level grouping plan — ≈M for the
+        dispatch DP backend, O(1) for the fused scan backend (one scan
+        dispatch + the winning chain's materialization).  0.0 until a
+        grouping plan has run."""
+        if not self.og_plans:
+            return 0.0
+        return self.og_dispatches / self.og_plans
+
+    def record_fused_scan(self, ns: int, compiled: bool = False) -> None:
+        self.fused_scans += 1
+        if compiled:
+            self.fused_compiles += 1
+            return
+        self.fused_scan_ns_max = max(self.fused_scan_ns_max, ns)
+        self.fused_scan_ns.append(ns)
+        if len(self.fused_scan_ns) > self.LATENCY_CAP:
+            del self.fused_scan_ns[::2]
+
+    def fused_scan_latency(self) -> dict:
+        """count / p50 / max STEADY-STATE fused-scan wall time in ms
+        (dispatch through ys materialization), plus how many scans paid a
+        compile and how many plans fell back to the dispatch DP."""
+        if self.fused_scan_ns:
+            p50 = float(np.percentile(np.asarray(self.fused_scan_ns),
+                                      50)) / 1e6
+        else:
+            p50 = 0.0
+        return dict(count=self.fused_scans, p50_ms=p50,
+                    max_ms=self.fused_scan_ns_max / 1e6,
+                    compiles=self.fused_compiles,
+                    fallbacks=self.fused_fallbacks,
+                    routed=self.fused_routed)
 
     def record_latency(self, ns: int, compiled: bool = False) -> None:
         self.plan_calls += 1
@@ -420,6 +478,7 @@ class PlannerStats:
                for f in dataclasses.fields(self)
                if f.metadata.get("export", True)}
         out["plan_latency"] = self.plan_latency()
+        out["dispatches_per_plan"] = self.dispatches_per_plan
         return out
 
     def merge(self, other: "PlannerStats") -> "PlannerStats":
@@ -539,6 +598,27 @@ class ExecutableCache:
                     self._pending.pop(key, None)
         return self._install(key, self._compile(args, n_partitions,
                                                 sort_key), stats)
+
+    def lookup_general(self, args, statics, compile_fn,
+                       stats: PlannerStats | None = None):
+        """Like :meth:`lookup` for executables other than
+        ``jdob_plan_batched`` (the fused grouping scan): ``statics`` is any
+        hashable tuple folded into the key alongside the args' avals, and
+        ``compile_fn(args)`` produces the executable on a miss.  Returns
+        ``(exe, compiled)`` so the caller can classify its latency sample.
+        General entries share the LRU bound with the batched-core entries
+        but never go through the background prefetch pool."""
+        key = self._key(args, -1, statics)
+        with self._lock:
+            exe = self._entries.get(key)
+            if exe is not None:
+                self._entries.move_to_end(key)
+                if stats is not None:
+                    stats.hits += 1
+                return exe, False
+        if stats is not None:
+            stats.misses += 1
+        return self._install(key, compile_fn(args), stats), True
 
     def prefetch(self, args, n_partitions: int, sort_key: str) -> None:
         """Schedule a background compile for a shape that will be needed
@@ -848,6 +928,435 @@ class PendingPlans:
                 compiled=self._compiled)
             self._chunks = None          # free the device buffers
         return self._result
+
+
+# ---------------------------------------------------------------------------
+# Device-resident grouping DP (dp_backend="fused"): the whole level loop of
+# the OG recurrence — candidate segment solves, float64 accumulation, the
+# Pareto dominance sweep, beam truncation and the adaptive anchor re-fold —
+# as ONE jitted lax.scan.  The dispatch backend issues O(M) device launches
+# per plan (one per DP level); this backend issues exactly one for the scan
+# plus the winning chain's materialization.
+# ---------------------------------------------------------------------------
+
+#: frontier buffer width used when a pareto DP runs with an UNBOUNDED
+#: frontier on the fused backend; a level whose dominance survivors outgrow
+#: it flags the scan as overflowed and the caller falls back to the
+#: dispatch DP — exactness is never silently truncated away
+FUSED_FRONTIER_WIDTH = 16
+
+#: level-count crossover for the fused scan.  The scan's work is fixed-
+#: shape — every level solves all L candidate segments at full fleet
+#: width, O(L² · M · W) regardless of how short most segments are (a
+#: built-in ~2x triangular waste: level j has only j real candidates) —
+#: while the dispatch fold's per-length buckets solve short segments at
+#: small padded widths.  Below the crossover the scan's one-dispatch
+#: fold wins on launch overhead (measured 1.9-2.4x steady-state at
+#: M ≤ 20 on CPU); past it the wasted full-width compute eats the win
+#: (~0.95x at M = 40, 0.4-0.6x at M = 80), so ``dp_backend="fused"``
+#: routes to the dispatch fold (counted in
+#: ``PlannerStats.fused_routed``).  Fleet-scale callers rarely hit
+#: this: ``plan_fleet`` sends big fleets through cohort planning, whose
+#: ≤ cohort_size shards and atom-level merge DP are scan-sized.
+FUSED_SCAN_MAX_LEVELS = 32
+
+
+def fused_scan_viable(levels: int) -> bool:
+    """Whether a fused DP scan over ``levels`` levels is expected to beat
+    the dispatch fold (see :data:`FUSED_SCAN_MAX_LEVELS`)."""
+    return levels <= FUSED_SCAN_MAX_LEVELS
+
+_OG_SCAN_STATICS = ("n_partitions", "sort_keys", "mode", "width", "eps",
+                    "beam", "growth", "cap", "anchor_mode", "prev_split")
+
+
+@functools.partial(jax.jit, static_argnames=_OG_SCAN_STATICS)
+def _og_scan(c_user, blocks, f_sweep, part_mask, bounds, e_all, t_free0,
+             start, n_active, window, size_cap, e_tab, tf_tab, sp_tab,
+             si_tab, va_tab, anc0, width0, widen0, *, n_partitions,
+             sort_keys, mode, width, eps, beam, growth, cap,
+             anchor_mode, prev_split):
+    """The grouping DP's level loop as one ``lax.scan`` over levels.
+
+    MUST be traced and executed under ``jax.experimental.enable_x64()``
+    (see :func:`og_plan_fused`): the DP state tables and the dominance
+    sweep run in float64 to match the host DP's accumulation bit for bit,
+    while every segment solve stays in the float32 :func:`_solve_group`
+    math (python scalars are weak types, so enabling x64 does not promote
+    the inlined kernel).
+
+    State layout — the frontier lives on device as fixed-width masked
+    rows: ``e_tab``/``tf_tab`` (L+1, W) float64 energies / threaded
+    cursors, ``sp_tab``/``si_tab`` (L+1, W) int32 backpointers (split
+    level, state slot), ``va_tab`` (L+1, W) occupancy mask (valid slots
+    are always a prefix; W == 1 is the prefix DP).  ``bounds`` (L+1,)
+    generalizes the level axis: ``arange(M+1)`` for the user-level OG DP,
+    the atom boundaries for the cohort merge DP (level j covers users
+    ``[bounds[i], bounds[j])``).  Levels ``j <= start`` (incremental
+    resume) and ``j > n_active`` (bucket padding) pass through unchanged.
+    ``e_all`` rows carry the precomputed float64 all-local fallback
+    energies (host ``_reconstruct`` semantics).  One ys row per level is
+    the ONLY materialization — the host backtracks the winning chain from
+    it and re-solves just that chain's segments."""
+    L = bounds.shape[0] - 1
+    W = width
+    Mp = c_user["T"].shape[0]
+    f64 = jnp.float64
+    INF64 = jnp.asarray(jnp.inf, f64)
+    i_vec = jnp.arange(L, dtype=jnp.int32)
+    slot = jnp.arange(W, dtype=jnp.int32)
+
+    def solve_seg(lo, ln, tf32):
+        # roll the sorted fleet so segment [lo, lo+ln) leads, mask the
+        # rest: bitwise identical to the dispatch path's bucketed solve
+        # (_pow2_sum is padding-invariant and masked lanes are neutral)
+        rolled = {k: jnp.roll(c_user[k], -lo) for k in _USER_KEYS}
+        act = jnp.arange(Mp, dtype=jnp.int32) < ln
+        cc = {**blocks, **rolled}
+        e_b = t_b = None
+        for key in sort_keys:       # portfolio combine: earlier key wins ties
+            out = _solve_group(cc, f_sweep, tf32, act, part_mask,
+                               n_partitions, key)
+            if e_b is None:
+                e_b, t_b = out["energy"], out["t_end"]
+            else:
+                better = out["energy"] < e_b
+                e_b = jnp.where(better, out["energy"], e_b)
+                t_b = jnp.where(better, out["t_end"], t_b)
+        return e_b, t_b
+
+    def step(carry, xs):
+        e_tab, tf_tab, sp_tab, si_tab, va_tab, anc, bw_w, bw_n = carry
+        j, eall_row = xs
+        lo = bounds[:L]
+        ln = bounds[j] - lo
+        seg_ok = (i_vec < j) & (i_vec >= j - window) & \
+            ~((j - i_vec > 1) & (ln > size_cap))
+        st_e, st_tf = e_tab[:L], tf_tab[:L]
+        cand_ok = seg_ok[:, None] & va_tab[:L] & jnp.isfinite(st_e)
+        # all (state slot, candidate split) segment solves of this level
+        e32, t32 = jax.vmap(solve_seg)(
+            jnp.broadcast_to(lo[:, None], (L, W)).reshape(-1),
+            jnp.broadcast_to(ln[:, None], (L, W)).reshape(-1),
+            st_tf.astype(jnp.float32).reshape(-1))
+        e32 = e32.reshape(L, W)
+        t32 = t32.reshape(L, W)
+        # host _reconstruct's float64 all-local fallback: always feasible,
+        # replaces the grid winner when cheaper-or-equal, passes the
+        # cursor through unchanged
+        e_seg = e32.astype(f64)
+        all_local = ~jnp.isfinite(e_seg) | (eall_row[:, None] <= e_seg)
+        seg_e = jnp.where(all_local, eall_row[:, None], e_seg)
+        seg_tf = jnp.where(all_local, st_tf, t32.astype(f64))
+        cand_e = jnp.where(cand_ok, st_e + seg_e, INF64)
+        dflt_sp = (j - 1) if prev_split else jnp.zeros((), jnp.int32)
+
+        if mode == "prefix":
+            ce = cand_e[:, 0]
+            bi = jnp.argmin(ce).astype(jnp.int32)   # first min == smallest i
+            feas = jnp.isfinite(ce[bi])
+            row_e = jnp.where(feas, ce[bi], INF64)[None]
+            row_tf = jnp.where(feas, seg_tf[bi, 0], t_free0)[None]
+            row_sp = jnp.where(feas, bi, dflt_sp)[None].astype(jnp.int32)
+            row_si = jnp.zeros((1,), jnp.int32)
+            row_va = jnp.ones((1,), bool)
+            anc_j = jnp.zeros((), jnp.int32)
+            n_in = jnp.sum(jnp.isfinite(ce)).astype(jnp.int32)
+            n_front = jnp.ones((), jnp.int32)
+            inserted = jnp.zeros((), bool)
+            overflow = jnp.zeros((), bool)
+        else:
+            fe = cand_e.reshape(-1)
+            ftf = jnp.where(cand_ok, seg_tf, INF64).reshape(-1)
+            fsp = jnp.broadcast_to(i_vec[:, None], (L, W)).reshape(-1)
+            fsi = jnp.broadcast_to(slot[None, :], (L, W)).reshape(-1)
+            fin = jnp.isfinite(fe)
+            # _pareto_sweep's sort key (energy, t_free, split, state):
+            # flat order is already (split, state) lexicographic, so two
+            # stable sorts finish the key
+            p = jnp.argsort(ftf, stable=True)
+            p = p[jnp.argsort(fe[p], stable=True)]
+            se, stf = fe[p], ftf[p]
+            ssp, ssi, sfin = fsp[p], fsi[p], fin[p]
+            if eps == 0.0:
+                # keep iff strictly earlier than every kept predecessor ==
+                # strictly below the exclusive prefix-min (dropped
+                # candidates never lower the running min)
+                cm = jax.lax.associative_scan(jnp.minimum, stf)
+                pmin = jnp.concatenate([INF64[None], cm[:-1]])
+                keep = sfin & (stf < pmin)
+            else:
+                def sweep(btf, x):
+                    tf_, ok = x
+                    k = ok & (tf_ < btf * (1.0 - eps))
+                    return jnp.where(k, tf_, btf), k
+                _, keep = jax.lax.scan(sweep, INF64, (stf, sfin))
+            n_in = jnp.sum(sfin).astype(jnp.int32)
+            n_sur = jnp.sum(keep).astype(jnp.int32)
+            if beam == "adaptive":
+                nbw_w, nbw_n = jax.lax.while_loop(
+                    lambda s: (n_sur > s[0]) & (s[0] < cap),
+                    lambda s: (jnp.minimum(s[0] * growth, cap), s[1] + 1),
+                    (bw_w, bw_n))
+                bw = nbw_w
+                overflow = jnp.zeros((), bool)
+            elif beam is None:
+                nbw_w, nbw_n = bw_w, bw_n
+                bw = jnp.asarray(W, jnp.int32)
+                overflow = n_sur > W
+            else:
+                nbw_w, nbw_n = bw_w, bw_n
+                bw = jnp.asarray(beam, jnp.int32)
+                overflow = jnp.zeros((), bool)
+            rank = keep.astype(jnp.int32).cumsum() - 1
+            keep = keep & (rank < bw)
+            n_front = jnp.sum(keep).astype(jnp.int32)
+            # compact kept states to the row head, preserving sort order
+            q = jnp.argsort(~keep, stable=True)[:W]
+            row_va = slot < n_front
+            row_e = jnp.where(row_va, se[q], INF64)
+            row_tf = jnp.where(row_va, stf[q], t_free0)
+            row_sp = jnp.where(row_va, ssp[q], 0).astype(jnp.int32)
+            row_si = jnp.where(row_va, ssi[q], 0).astype(jnp.int32)
+            # empty level -> the host's infeasible sentinel state
+            empty = n_front == 0
+            s0 = slot == 0
+            row_va = row_va | (empty & s0)
+            row_tf = jnp.where(empty & s0, t_free0, row_tf)
+            row_sp = jnp.where(empty & s0, dflt_sp, row_sp)
+            if anchor_mode:
+                # re-fold the prefix-DP anchor chain over the SAME segment
+                # results, then force-retain it in the frontier
+                a_sl = anc[:L]
+                ae = jnp.take_along_axis(st_e, a_sl[:, None], 1)[:, 0]
+                a_se = jnp.take_along_axis(seg_e, a_sl[:, None], 1)[:, 0]
+                a_stf = jnp.take_along_axis(seg_tf, a_sl[:, None], 1)[:, 0]
+                a_va = jnp.take_along_axis(va_tab[:L], a_sl[:, None],
+                                           1)[:, 0]
+                a_ce = jnp.where(seg_ok & a_va & jnp.isfinite(ae),
+                                 ae + a_se, INF64)
+                ab = jnp.argmin(a_ce).astype(jnp.int32)
+                a_found = jnp.isfinite(a_ce[ab])
+                a_si = a_sl[ab]
+                match = row_va & (row_sp == ab) & (row_si == a_si)
+                ins = (~empty) & a_found & (~jnp.any(match))
+                put = ins & (slot == n_front)       # n_front <= cap < W
+                row_e = jnp.where(put, a_ce[ab], row_e)
+                row_tf = jnp.where(put, a_stf[ab], row_tf)
+                row_sp = jnp.where(put, ab, row_sp)
+                row_si = jnp.where(put, a_si, row_si)
+                row_va = row_va | put
+                # re-sort by (e, tf, sp, si); identity when nothing was
+                # inserted ((sp, si) pairs are distinct, so the order is
+                # strict) — invalid slots carry +inf keys and stay last
+                ke = jnp.where(row_va, row_e, INF64)
+                ktf = jnp.where(row_va, row_tf, INF64)
+                r = jnp.argsort(row_si, stable=True)
+                r = r[jnp.argsort(row_sp[r], stable=True)]
+                r = r[jnp.argsort(ktf[r], stable=True)]
+                r = r[jnp.argsort(ke[r], stable=True)]
+                row_e, row_tf = row_e[r], row_tf[r]
+                row_sp, row_si, row_va = row_sp[r], row_si[r], row_va[r]
+                match = row_va & (row_sp == ab) & (row_si == a_si)
+                anc_j = jnp.where(empty | ~a_found, 0,
+                                  jnp.argmax(match).astype(jnp.int32))
+                inserted = ins
+            else:
+                anc_j = jnp.zeros((), jnp.int32)
+                inserted = jnp.zeros((), bool)
+
+        # resume/padding passthrough: only levels in (start, n_active]
+        # fold; the rest keep their (possibly host-provided) rows
+        active = (j > start) & (j <= n_active)
+        row_e = jnp.where(active, row_e, e_tab[j])
+        row_tf = jnp.where(active, row_tf, tf_tab[j])
+        row_sp = jnp.where(active, row_sp, sp_tab[j])
+        row_si = jnp.where(active, row_si, si_tab[j])
+        row_va = jnp.where(active, row_va, va_tab[j])
+        anc_j = jnp.where(active, anc_j, anc[j])
+        e_tab = e_tab.at[j].set(row_e)
+        tf_tab = tf_tab.at[j].set(row_tf)
+        sp_tab = sp_tab.at[j].set(row_sp)
+        si_tab = si_tab.at[j].set(row_si)
+        va_tab = va_tab.at[j].set(row_va)
+        anc = anc.at[j].set(anc_j)
+        if mode != "prefix" and beam == "adaptive":
+            bw_w = jnp.where(active, nbw_w, bw_w)
+            bw_n = jnp.where(active, nbw_n, bw_n)
+        ys = dict(e=row_e, tf=row_tf, sp=row_sp, si=row_si, va=row_va,
+                  anchor=anc_j, width=bw_w, widen=bw_n, n_in=n_in,
+                  n_front=n_front, inserted=inserted & active,
+                  overflow=overflow & active, active=active)
+        return (e_tab, tf_tab, sp_tab, si_tab, va_tab, anc, bw_w, bw_n), ys
+
+    j_vec = jnp.arange(1, L + 1, dtype=jnp.int32)
+    carry0 = (e_tab, tf_tab, sp_tab, si_tab, va_tab, anc0, width0, widen0)
+    _, ys = jax.lax.scan(step, carry0, (j_vec, e_all))
+    return ys
+
+
+@dataclasses.dataclass
+class FusedScanResult:
+    """Host-side view of one fused DP scan (:func:`og_plan_fused`).
+
+    ``rows[k]`` is the frontier of level ``start + 1 + k`` as numeric
+    ``(energy, t_free, split, state_idx)`` tuples in frontier order
+    (prefix DP: exactly one tuple per level); ``anchor``/``beam_hist``
+    align with ``rows`` (adaptive-beam runs).  ``overflow`` means some
+    level's unbounded frontier outgrew the device buffer — the rows are
+    NOT authoritative and the caller must fall back to the dispatch DP."""
+
+    rows: list
+    anchor: list
+    beam_hist: list
+    overflow: bool
+    width: int
+    widenings: int
+
+
+def og_plan_fused(planner: BatchedPlanner, sorted_fleet: DeviceFleet, *,
+                  t_free: float = 0.0, mode: str = "prefix",
+                  frontier_eps: float = 0.0, beam_width=None,
+                  bounds: np.ndarray | None = None, n_active: int | None = None,
+                  window: int | None = None, size_cap: int | None = None,
+                  prev_split: bool = False, anchor_mode: bool | None = None,
+                  init_rows: list | None = None,
+                  init_anchor: list | None = None,
+                  width0: int = 1, widen0: int = 0,
+                  stats: PlannerStats | None = None) -> FusedScanResult:
+    """Fold the grouping DP on device in ONE dispatch (see :func:`_og_scan`).
+
+    ``sorted_fleet`` is the deadline-sorted fleet; ``bounds`` (default
+    ``arange(M+1)``) maps DP levels to user positions, with levels past
+    ``n_active`` padded out (cohort merge bucketing).  ``beam_width``
+    follows the grouping knob: ``None`` (unbounded — overflow falls back),
+    an int, or an adaptive-beam object (duck-typed on
+    ``width``/``growth``/``cap``/``widenings``).  ``init_rows`` /
+    ``init_anchor`` / ``width0`` / ``widen0`` resume an incremental fold:
+    levels ``0..len(init_rows)-1`` are trusted verbatim and the scan
+    starts at the churn level — bit-identical to a scratch fused fold by
+    the same argument as the host resume (a level reads only earlier
+    levels).  The scan's decisions are bit-identical to the host DP's, so
+    the caller materializes the winning chain through the ordinary
+    dispatch ``solve`` closure and inherits energy/group parity
+    structurally.  Applies frontier/beam statistics to ``stats`` exactly
+    as the host sweep would (skipped on overflow — the dispatch fallback
+    will account for itself)."""
+    assert mode in ("prefix", "pareto"), f"unknown dp mode {mode!r}"
+    M = sorted_fleet.M
+    if bounds is None:
+        bounds = np.arange(M + 1, dtype=np.int32)
+    bounds = np.asarray(bounds, np.int32)
+    L = len(bounds) - 1
+    n_act = L if n_active is None else int(n_active)
+    adaptive = hasattr(beam_width, "fit")
+    if anchor_mode is None:
+        anchor_mode = adaptive and mode == "pareto"
+    if mode == "prefix":
+        W, beam, growth, cap = 1, None, 2, 1
+    elif adaptive:
+        growth, cap = int(beam_width.growth), int(beam_width.cap)
+        W, beam = cap + 1, "adaptive"
+    elif beam_width is None:
+        W, beam, growth, cap = FUSED_FRONTIER_WIDTH, None, 2, 1
+    else:
+        W, beam, growth, cap = int(beam_width), int(beam_width), 2, 1
+
+    rows0 = init_rows if init_rows is not None \
+        else [[(0.0, float(t_free), -1, 0)]]
+    start = len(rows0) - 1
+    if any(len(states) > W for states in rows0):
+        # a resumed host frontier wider than the device buffer cannot be
+        # represented — let the caller fall back without a dispatch
+        return FusedScanResult([], [], [], True, W, widen0)
+    e_t = np.full((L + 1, W), np.inf)
+    tf_t = np.full((L + 1, W), float(t_free))
+    sp_t = np.zeros((L + 1, W), np.int32)
+    si_t = np.zeros((L + 1, W), np.int32)
+    va_t = np.zeros((L + 1, W), bool)
+    for lvl, states in enumerate(rows0):
+        for s_i, (e, tf, sp, si) in enumerate(states):
+            e_t[lvl, s_i] = e
+            tf_t[lvl, s_i] = tf
+            sp_t[lvl, s_i] = sp
+            si_t[lvl, s_i] = si
+            va_t[lvl, s_i] = True
+    anc_np = np.zeros(L + 1, np.int32)
+    if init_anchor:
+        anc_np[:len(init_anchor)] = init_anchor
+
+    # float64 all-local energies per (level, split) — np slice sums match
+    # _reconstruct's ``e_loc64.sum()`` bitwise (same values, same order,
+    # same pairwise reduction)
+    f_loc = np.clip(sorted_fleet.zeta * planner._vN / sorted_fleet.deadline,
+                    sorted_fleet.f_min, sorted_fleet.f_max)
+    el = np.asarray(sorted_fleet.kappa * planner._uN * f_loc ** 2,
+                    np.float64)
+    e_all = np.zeros((L, L))
+    for j in range(start + 1, n_act + 1):
+        for i in range(j):
+            e_all[j - 1, i] = el[bounds[i]:bounds[j]].sum()
+
+    users, _ = _pad_fleets([sorted_fleet], M)
+    c_user = {k: users[k][0] for k in _USER_KEYS}
+    statics = dict(n_partitions=planner.profile.N + 1,
+                   sort_keys=planner.sort_keys, mode=mode, width=W,
+                   eps=float(frontier_eps), beam=beam, growth=growth,
+                   cap=cap, anchor_mode=bool(anchor_mode),
+                   prev_split=bool(prev_split))
+    key = ("og_scan",) + tuple(sorted(statics.items()))
+    t0 = time.perf_counter_ns()
+    # the x64 scope covers compile AND execution: the compiled signature
+    # carries float64 tables, and input conversion follows the ambient
+    # config, so calling outside the scope would downcast them
+    with jax.experimental.enable_x64():
+        args = (c_user, planner.blocks, planner.f_sweep, planner.part_mask,
+                jnp.asarray(bounds), jnp.asarray(e_all),
+                jnp.asarray(np.float64(t_free)),
+                jnp.asarray(np.int32(start)), jnp.asarray(np.int32(n_act)),
+                jnp.asarray(np.int32(L if window is None else window)),
+                jnp.asarray(np.int32(M if size_cap is None else size_cap)),
+                jnp.asarray(e_t), jnp.asarray(tf_t), jnp.asarray(sp_t),
+                jnp.asarray(si_t), jnp.asarray(va_t), jnp.asarray(anc_np),
+                jnp.asarray(np.int32(width0)),
+                jnp.asarray(np.int32(widen0)))
+        exe, compiled = planner.cache.lookup_general(
+            args, key, lambda a: _og_scan.lower(*a, **statics).compile(),
+            stats=planner.stats)
+        planner.stats.dispatches += 1
+        ys = {k: np.asarray(v) for k, v in exe(*args).items()}
+    planner.stats.record_fused_scan(time.perf_counter_ns() - t0,
+                                    compiled=compiled)
+
+    active = ys["active"]
+    overflow = bool(ys["overflow"].any())
+    rows, anchor, beam_hist = [], [], []
+    final_w, final_n = width0, widen0
+    for idx in range(L):
+        if not active[idx]:
+            continue
+        n = int(ys["va"][idx].sum())        # valid slots are a prefix
+        rows.append([(float(ys["e"][idx, s]), float(ys["tf"][idx, s]),
+                      int(ys["sp"][idx, s]), int(ys["si"][idx, s]))
+                     for s in range(n)])
+        anchor.append(int(ys["anchor"][idx]))
+        final_w, final_n = int(ys["width"][idx]), int(ys["widen"][idx])
+        beam_hist.append((final_w, final_n))
+    if stats is not None and mode == "pareto" and not overflow:
+        for idx in range(L):
+            if not active[idx]:
+                continue
+            n_f = int(ys["n_front"][idx]) + int(ys["inserted"][idx])
+            stats.frontier_states += n_f
+            stats.frontier_max = max(stats.frontier_max, n_f)
+            stats.dominance_pruned += \
+                int(ys["n_in"][idx]) - int(ys["n_front"][idx])
+            if len(stats.frontier_levels) < 4096:
+                stats.frontier_levels.append(int(ys["n_front"][idx]))
+        if adaptive:
+            stats.beam_widenings += final_n - widen0
+    return FusedScanResult(rows, anchor, beam_hist, overflow,
+                           final_w, final_n)
 
 
 def jdob_schedule(profile: TaskProfile,

@@ -179,10 +179,13 @@ class PlannerService:
                  max_cached_shapes: int | None = None,
                  cache: ExecutableCache | None = None,
                  default_cohort_size: int | None = None,
-                 default_planner: str = "prefix"):
+                 default_planner: str = "prefix",
+                 default_dp_backend: str = "dispatch"):
         assert max_level_buckets >= 1 and bucket_stride >= 2
         assert default_planner in ("prefix", "pareto"), \
             f"unknown planner mode {default_planner!r}"
+        assert default_dp_backend in ("dispatch", "fused"), \
+            f"unknown dp backend {default_dp_backend!r}"
         self.profile = profile
         self.edge = edge
         self.rho = rho
@@ -198,6 +201,11 @@ class PlannerService:
         #: grouping-DP mode :meth:`plan_fleet` uses when the call does not
         #: name one: "prefix" (seed recurrence) or "pareto" (frontier)
         self.default_planner = default_planner
+        #: grouping-DP execution backend :meth:`plan_fleet` uses when the
+        #: call does not name one: "dispatch" (host fold, one device launch
+        #: per level) or "fused" (one jitted scan per fold — see
+        #: :func:`repro.core.jdob.og_plan_fused`)
+        self.default_dp_backend = default_dp_backend
         self._owns_cache = cache is None and max_cached_shapes is not None
         if cache is not None:
             self.cache = cache
@@ -246,7 +254,8 @@ class PlannerService:
                 bucket_stride=self.bucket_stride,
                 single_bucket_max=self.single_bucket_max, cache=self.cache,
                 default_cohort_size=self.default_cohort_size,
-                default_planner=self.default_planner)
+                default_planner=self.default_planner,
+                default_dp_backend=self.default_dp_backend)
             svc._family = self._family
             svc._pool_box = self._pool_box
             self._family[key] = svc
@@ -278,7 +287,8 @@ class PlannerService:
                    t_free: float = 0.0, cohort_size: int | None = None,
                    merge_window: int = 4, timeline=None,
                    planner: str | None = None, frontier_eps: float = 0.0,
-                   beam_width: int | str | None = None, tracer=None):
+                   beam_width: int | str | None = None, tracer=None,
+                   dp_backend: str | None = None):
         """Fleet-size-aware OG entry point: exact
         :func:`~repro.core.grouping.optimal_grouping` when the fleet fits a
         single cohort (or no cohort size is configured), hierarchical
@@ -293,29 +303,37 @@ class PlannerService:
         energy — see :class:`~repro.core.grouping.AdaptiveBeam`).
         ``tracer``
         (a :class:`~repro.core.telemetry.Tracer`) receives cohort
-        shard/merge instants from the hierarchical path.  This is THE
+        shard/merge instants from the hierarchical path.  ``dp_backend``
+        picks how the grouping DP folds — ``"dispatch"`` (host loop) or
+        ``"fused"`` (one device scan per fold; bit-identical results) —
+        defaulting to this service's ``default_dp_backend``.  This is THE
         planning call the serving layer makes — it inherits the service's
         rho, shape policy and compile cache."""
         # local imports: grouping/cohort import this module at top level
         from .cohort import cohort_grouping
-        from .grouping import optimal_grouping
+        from .grouping import DP_BACKENDS, optimal_grouping
         from .jdob import jdob_schedule
         inner = jdob_schedule if inner is None else inner
         dp = self.default_planner if planner is None else planner
         assert dp in ("prefix", "pareto"), f"unknown planner mode {dp!r}"
+        backend = (self.default_dp_backend if dp_backend is None
+                   else dp_backend)
+        assert backend in DP_BACKENDS, f"unknown dp backend {backend!r}"
         C = self.default_cohort_size if cohort_size is None else cohort_size
         if C is None or fleet.M <= C:
             return optimal_grouping(self.profile, fleet, self.edge, inner,
                                     t_free=t_free, rho=self.rho,
                                     service=self, timeline=timeline, dp=dp,
                                     frontier_eps=frontier_eps,
-                                    beam_width=beam_width)
+                                    beam_width=beam_width,
+                                    dp_backend=backend)
         return cohort_grouping(self.profile, fleet, self.edge, inner,
                                t_free=t_free, rho=self.rho, cohort_size=C,
                                merge_window=merge_window, service=self,
                                timeline=timeline, dp=dp,
                                frontier_eps=frontier_eps,
-                               beam_width=beam_width, tracer=tracer)
+                               beam_width=beam_width, tracer=tracer,
+                               dp_backend=backend)
 
     # ---- shape-bucket policy -------------------------------------------
     @staticmethod

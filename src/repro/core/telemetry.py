@@ -367,6 +367,7 @@ class Telemetry:
                 doc["planner"]["frontier_hist"] = h.digest()
             doc["wall_time"] = {
                 "planner_plan_latency": planner_stats.plan_latency(),
+                "planner_fused_scan": planner_stats.fused_scan_latency(),
                 "note": "perf_counter_ns wall-clock; everything else in "
                         "this document is simulation time",
             }

@@ -4,7 +4,7 @@ Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), a jit'd wrapper in
 ``ops.py`` and a pure-jnp oracle in ``ref.py``; validated on CPU with
 interpret=True across shape/dtype sweeps (tests/kernels/)."""
 from .ops import (decode_attention_op, default_interpret, flash_attention_op,
-                  gla_scan_op, jdob_sweep_op)
+                  gla_scan_op, jdob_sweep_op, jdob_sweep_schedule)
 
 __all__ = ["flash_attention_op", "decode_attention_op", "gla_scan_op",
-           "jdob_sweep_op", "default_interpret"]
+           "jdob_sweep_op", "jdob_sweep_schedule", "default_interpret"]

@@ -152,3 +152,30 @@ def jdob_sweep_op(profile, fleet, edge, t_free=0.0, rho=0.03e9,
     grid = np.array(grid)
     grid[N] = np.inf
     return grid
+
+
+def jdob_sweep_schedule(profile, fleet, edge, t_free=0.0, rho=0.03e9,
+                        interpret=None):
+    """Inner group solver backed by the Pallas sweep kernel: the (ñ × f_e)
+    grid runs on-device (:func:`jdob_sweep_op`), the host argmin picks the
+    winning partition, and that single-ñ problem is re-evaluated through
+    the jitted core so the returned :class:`~repro.core.jdob.Schedule`
+    carries the core's exact float64 energies/offload sets/DVFS
+    frequencies.  Signature-compatible with
+    :func:`~repro.core.jdob.jdob_schedule`, so it routes through
+    :func:`~repro.core.grouping.optimal_grouping` as an ``inner`` — the
+    planner-service spec lookup returns None for it, which is correct:
+    each grid IS the group's whole partition sweep, so the sequential
+    reference fold is the matching outer loop.  The grid math is float32
+    with a plain row sum (vs the core's ``_pow2_sum`` fold), so on a
+    near-exact tie between partitions the two backends may pick different
+    ñ; the winner's energy always comes from the core re-solve."""
+    from repro.core.jdob import jdob_schedule
+    grid = jdob_sweep_op(profile, fleet, edge, t_free=t_free, rho=rho,
+                         interpret=interpret)
+    per_nt = grid.min(axis=1)
+    nt = int(per_nt.argmin())
+    if not np.isfinite(per_nt[nt]):
+        nt = profile.N          # all-local: the core's closed-form branch
+    return jdob_schedule(profile, fleet, edge, t_free=t_free, rho=rho,
+                         partitions=[nt])

@@ -43,8 +43,9 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import (Telemetry, local_computing, make_channel,
-                        make_edge_profile, make_fleet, profile_from_arch)
+from repro.core import (PlannerService, Telemetry, local_computing,
+                        make_channel, make_edge_profile, make_fleet,
+                        profile_from_arch)
 from repro.core.telemetry import TID_RUN
 from repro.models import init_params
 from repro.serving import (CoInferenceServer, MultiTenantServer, Request,
@@ -89,6 +90,16 @@ def _plan_latency_line(service) -> None:
         total = stats.plan_ahead_hits + stats.plan_ahead_misses
         print(f"plan-ahead: {stats.plan_ahead_hits}/{total} speculative "
               f"plan(s) consumed")
+    if stats.og_plans:
+        print(f"grouping DP: {stats.og_plans} plan(s), "
+              f"{stats.dispatches_per_plan:.1f} dispatch(es)/plan")
+    fused = stats.fused_scan_latency()
+    if fused["count"] or fused["fallbacks"] or fused["routed"]:
+        print(f"fused DP scans: {fused['count']} scan(s), "
+              f"p50 {fused['p50_ms']:.2f} ms / max {fused['max_ms']:.2f} ms "
+              f"wall, {fused['compiles']} compile(s), "
+              f"{fused['fallbacks']} fallback(s), "
+              f"{fused['routed']} size-routed to dispatch")
 
 
 def _begin_run(telemetry) -> None:
@@ -121,11 +132,11 @@ def _serve_offline(server, fleet, profile, edge, reqs, args,
     t0 = time.perf_counter()
     report = server.serve(reqs, cohort_size=args.cohort_size,
                           planner=args.planner, beam_width=args.beam_width,
-                          telemetry=telemetry)
+                          dp_backend=args.dp_backend, telemetry=telemetry)
     serve_s = time.perf_counter() - t0
     lc = local_computing(profile, fleet, edge)
     print(f"arch={server.cfg.name}  M={args.users}  N={profile.N} blocks  "
-          f"planner={args.planner}  "
+          f"planner={args.planner}  dp_backend={args.dp_backend}  "
           f"(planned+served in {serve_s:.2f}s via planner service)")
     for g, s in zip(report.groups, report.schedules):
         print(f"  group {list(g)}: partition ñ={s.partition}, "
@@ -232,7 +243,10 @@ def _serve_tenants(args, telemetry=None) -> dict:
                                 arrival=float(arr[m]))
                         for m in range(args.users)])
 
-    server = MultiTenantServer(models, preemption=not args.no_preemption,
+    service = PlannerService(models[0].profile, models[0].edge,
+                             default_dp_backend=args.dp_backend)
+    server = MultiTenantServer(models, service=service,
+                               preemption=not args.no_preemption,
                                admission=args.admission,
                                occupancy=args.occupancy,
                                channel=_build_channel(args),
@@ -342,6 +356,14 @@ def main(argv=None) -> dict:
                          "plan this many drained flushes ahead by chaining "
                          "the predicted occupancy cursor (bit-identical at "
                          "any depth)")
+    ap.add_argument("--dp-backend", default="dispatch",
+                    choices=["dispatch", "fused"],
+                    help="grouping-DP fold: dispatch = host level loop "
+                         "(one device launch per level); fused = the "
+                         "whole DP as one jitted device scan — "
+                         "bit-identical plans, O(1) dispatches per plan "
+                         "(becomes the planner service default, so "
+                         "online/tenant flush plans fold fused too)")
     ap.add_argument("--beam-width", default=None,
                     type=lambda v: v if v == "auto" else int(v),
                     help="pareto-DP frontier cap (offline serving): an int "
@@ -413,7 +435,10 @@ def main(argv=None) -> dict:
     edge = make_edge_profile(profile)
     fleet = make_fleet(args.users, profile, edge, beta=tuple(args.beta),
                        seed=args.seed)
-    server = CoInferenceServer(cfg, params, profile, fleet, edge)
+    server = CoInferenceServer(
+        cfg, params, profile, fleet, edge,
+        service=PlannerService(profile, edge,
+                               default_dp_backend=args.dp_backend))
 
     rng = np.random.default_rng(args.seed)
     # a distinct --arrival-seed re-rolls the load trace only; the default

@@ -161,6 +161,7 @@ class CoInferenceServer:
               cohort_size: int | None = None, merge_window: int = 4,
               planner: str | None = None,
               beam_width: int | str | None = None,
+              dp_backend: str | None = None,
               telemetry: Telemetry | None = None) -> ServeReport:
         """One-shot wave: OG-group, plan and execute every request.
 
@@ -173,14 +174,17 @@ class CoInferenceServer:
         ``"prefix"`` or ``"pareto"`` (occupancy-coupling-sound frontier
         DP) — defaulting to the service's ``default_planner``;
         ``beam_width`` bounds the pareto frontier (``"auto"`` self-sizes
-        it, never above the prefix DP's energy)."""
+        it, never above the prefix DP's energy).  ``dp_backend`` picks the
+        grouping-DP fold — ``"dispatch"`` or ``"fused"`` (one device scan
+        per fold, bit-identical plans) — defaulting to the service's
+        ``default_dp_backend``."""
         fleet = dataclasses.replace(
             self.fleet,
             deadline=np.asarray([r.deadline for r in requests]))
         grouped = self.service.plan_fleet(
             fleet, self.inner, t_free=t_free, cohort_size=cohort_size,
             merge_window=merge_window, planner=planner,
-            beam_width=beam_width,
+            beam_width=beam_width, dp_backend=dp_backend,
             tracer=None if telemetry is None else telemetry.tracer)
         S = len(requests[0].tokens)
         logits = np.zeros((len(requests), S, self.cfg.vocab_size),
